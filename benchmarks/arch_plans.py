@@ -1,0 +1,31 @@
+"""MINISA plans for the 10 assigned architectures (framework integration):
+per (arch x shape) instruction traffic, speedup, utilization on 16x256."""
+
+from repro.configs.base import SHAPES
+from repro.configs.feather import feather_config
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.core.model_gemms import gemm_workloads
+from repro.core.planner import plan_model
+
+SHAPE_SET = ("train_4k", "decode_32k")
+
+
+def run(verbose: bool = True) -> dict:
+    cfg16 = feather_config(16, 256)
+    rows = {}
+    if verbose:
+        print("\n[arch plans] MINISA on FEATHER+ 16x256")
+        print(f"{'arch':>22} {'shape':>11} {'speedup':>8} {'util':>7} "
+              f"{'instr-red':>10} {'i:d MINISA':>11}")
+    for arch in ARCH_IDS:
+        mcfg = get_config(arch)
+        for shape_name in SHAPE_SET:
+            ops = gemm_workloads(mcfg, SHAPES[shape_name])
+            plan = plan_model(arch, shape_name, ops, cfg16)
+            s = plan.summary()
+            rows[(arch, shape_name)] = s
+            if verbose:
+                print(f"{arch:>22} {shape_name:>11} {s['speedup']:8.2f} "
+                      f"{s['utilization']:7.1%} {s['instr_reduction']:10.1e} "
+                      f"{s['instr_to_data_minisa']:11.2e}")
+    return rows

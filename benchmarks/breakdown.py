@@ -1,0 +1,43 @@
+"""Fig. 13: cycle breakdown (compute / load / out->stream / store) and
+compute utilization for representative workloads on FEATHER+ 4x64, 16x64,
+16x256.  Paper: >60% utilization on irregular FHE/ZKP shapes."""
+
+from repro.configs.feather import feather_config
+from repro.core import mapper
+
+REP = [
+    mapper.Gemm(m=65536, k=40, n=88, name="fhe-bconv-40x88"),
+    mapper.Gemm(m=65536, k=30, n=112, name="fhe-bconv-30x112"),
+    mapper.Gemm(m=64, k=1024, n=1024, name="fhe-ntt-1k"),
+    mapper.Gemm(m=256, k=4096, n=4096, name="fhe-ntt-4k"),
+    mapper.Gemm(m=512, k=16384, n=16384, name="zkp-ntt-16k"),
+    mapper.Gemm(m=2048, k=2880, n=4096, name="gpt-oss-2880x4096"),
+    mapper.Gemm(m=2048, k=64, n=2048, name="gpt-oss-64x2048"),
+]
+
+ARRAYS = [(4, 64), (16, 64), (16, 256)]
+
+
+def run(verbose: bool = True) -> dict:
+    rows = {}
+    for ah, aw in ARRAYS:
+        cfg = feather_config(ah, aw)
+        for g in REP:
+            plan = mapper.search(g, cfg)
+            res = plan.perf_minisa
+            b = res.breakdown()
+            rows[(f"{ah}x{aw}", g.name)] = {
+                "utilization": res.utilization,
+                "cycles": res.cycles,
+                **{k: v / max(res.cycles, 1e-9)
+                   for k, v in b.items() if k != "total"},
+            }
+    if verbose:
+        print("\n[Fig. 13] latency breakdown + utilization (MINISA)")
+        print(f"{'array':>7} {'workload':>20} {'util':>7} {'compute':>8} "
+              f"{'load':>7} {'o2s':>6} {'store':>6}")
+        for (arr, name), r in rows.items():
+            print(f"{arr:>7} {name:>20} {r['utilization']:7.1%} "
+                  f"{r.get('compute', 0):8.1%} {r.get('load', 0):7.1%} "
+                  f"{r.get('out2stream', 0):6.1%} {r.get('store', 0):6.1%}")
+    return rows

@@ -1,0 +1,41 @@
+"""Shared benchmark infrastructure: one mapper sweep over the 58-GEMM
+Tab. IV suite x 9 array configs, memoised and reused by every
+table/figure module."""
+
+from __future__ import annotations
+
+import functools
+import math
+import time
+
+from repro.configs.feather import SWEEP, feather_config
+from repro.core import mapper, workloads
+
+
+@functools.lru_cache(maxsize=None)
+def sweep_plans(configs: tuple = SWEEP) -> dict:
+    """{(ah, aw): {workload_name: Plan}}"""
+    out = {}
+    suite = workloads.suite()
+    for ah, aw in configs:
+        cfg = feather_config(ah, aw)
+        plans = {}
+        for g in suite:
+            plans[g.name] = mapper.search(g, cfg)
+        out[(ah, aw)] = plans
+    return out
+
+
+def geomean(xs):
+    xs = [max(x, 1e-12) for x in xs]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def timed(fn):
+    t0 = time.time()
+    result = fn()
+    return result, (time.time() - t0) * 1e6
+
+
+def csv_row(name: str, us: float, derived: str):
+    print(f"{name},{us:.0f},{derived}")

@@ -1,0 +1,80 @@
+"""Export the paper-appendix CSV artifacts (benchmark summary, instruction
+comparison, utilization/reduction summaries, roofline) to ``csv/``.
+
+    PYTHONPATH=src python -m benchmarks.export_csv
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+
+from benchmarks.common import sweep_plans
+from benchmarks import roofline as rl
+from repro.configs.feather import SWEEP
+
+
+def main(outdir: str = "csv") -> None:
+    os.makedirs(outdir, exist_ok=True)
+    plans = sweep_plans()
+
+    # 1) benchmark summary: every workload x array config
+    with open(f"{outdir}/benchmark_summary.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["workload", "array", "df", "vn", "cycles_minisa",
+                    "cycles_micro", "speedup", "utilization",
+                    "stall_micro", "stall_minisa"])
+        for key in SWEEP:
+            for name, p in plans[key].items():
+                s = p.summary()
+                w.writerow([name, s["array"], s["df"], s["vn"],
+                            f"{s['cycles_minisa']:.6g}",
+                            f"{s['cycles_micro']:.6g}",
+                            f"{s['speedup']:.4f}",
+                            f"{s['util_minisa']:.4f}",
+                            f"{s['stall_micro']:.4f}",
+                            f"{s['stall_minisa']:.6f}"])
+
+    # 2) instruction comparison
+    with open(f"{outdir}/instruction_comparison.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["workload", "array", "instr_bytes_minisa",
+                    "instr_bytes_micro", "reduction", "data_bytes",
+                    "instr_to_data_minisa", "instr_to_data_micro"])
+        for key in SWEEP:
+            for name, p in plans[key].items():
+                s = p.summary()
+                w.writerow([name, s["array"],
+                            f"{s['instr_bytes_minisa']:.6g}",
+                            f"{s['instr_bytes_micro']:.6g}",
+                            f"{s['instr_reduction']:.6g}",
+                            s["data_bytes"],
+                            f"{s['instr_bytes_minisa']/s['data_bytes']:.3e}",
+                            f"{s['instr_bytes_micro']/s['data_bytes']:.3e}"])
+
+    # 3) roofline per dry-run cell
+    rows = rl.run(verbose=False)
+    with open(f"{outdir}/roofline.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["arch", "shape", "mesh", "status", "t_compute",
+                    "t_memory", "t_collective", "bottleneck",
+                    "model_flops", "model_over_hlo"])
+        for r in rows:
+            if r.get("status") != "OK":
+                w.writerow([r["arch"], r["shape"], r.get("mesh", "-"),
+                            r["status"], "", "", "", "", "", ""])
+            else:
+                w.writerow([r["arch"], r["shape"], r["mesh"], "OK",
+                            f"{r['t_compute']:.6g}",
+                            f"{r['t_memory']:.6g}",
+                            f"{r['t_collective']:.6g}",
+                            r["bottleneck"],
+                            f"{r['model_flops']:.6g}",
+                            f"{r['model_over_hlo']:.4f}"])
+
+    print(f"wrote {outdir}/benchmark_summary.csv, "
+          f"{outdir}/instruction_comparison.csv, {outdir}/roofline.csv")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Fig. 12: instruction-byte reduction (MINISA vs micro-instruction) and
+instruction-to-data ratios.  Paper: geomean reduction 2e4x at 16x256
+(35x .. 4.4e5x across sizes), micro instr:data up to ~100x, MINISA
+negligible."""
+
+from benchmarks.common import geomean, sweep_plans
+from repro.configs.feather import SWEEP
+
+
+def run(verbose: bool = True) -> dict:
+    plans = sweep_plans()
+    rows = {}
+    for key in SWEEP:
+        red, i2d_u, i2d_m = [], [], []
+        for p in plans[key].values():
+            s = p.schedule
+            mb = s.minisa_storage_bytes()
+            ub = s.micro_storage_bytes()
+            red.append(ub / max(mb, 1e-9))
+            i2d_u.append(ub / p.gemm.data_bytes)
+            i2d_m.append(mb / p.gemm.data_bytes)
+        rows[key] = {
+            "geomean_reduction": geomean(red),
+            "max_reduction": max(red),
+            "min_reduction": min(red),
+            "max_instr_to_data_micro": max(i2d_u),
+            "geomean_instr_to_data_minisa": geomean(i2d_m),
+        }
+    if verbose:
+        print("\n[Fig. 12] instruction-traffic reduction")
+        print(f"{'array':>8} {'geomean':>10} {'min':>9} {'max':>10} "
+              f"{'i:d micro(max)':>15} {'i:d MINISA':>12}")
+        for key, r in rows.items():
+            print(f"{key[0]}x{key[1]:<5} {r['geomean_reduction']:10.2e} "
+                  f"{r['min_reduction']:9.1f} {r['max_reduction']:10.2e} "
+                  f"{r['max_instr_to_data_micro']:15.1f} "
+                  f"{r['geomean_instr_to_data_minisa']:12.2e}")
+    return rows

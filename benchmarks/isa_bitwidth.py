@@ -1,0 +1,32 @@
+"""Tab. V: MINISA instruction bitwidths per array config (computed from the
+Fig. 3/5 formulas; the paper's E.Streaming column is reproduced exactly,
+Set*/E.Mapping within +-2 bits -- see DESIGN.md §5)."""
+
+from repro.configs.feather import SWEEP, feather_config
+
+PAPER = {  # (ah, aw): (set_layout, e_mapping, e_streaming)
+    (4, 4): (42, 81, 57), (4, 16): (40, 83, 51), (4, 64): (38, 85, 45),
+    (8, 8): (43, 86, 58), (8, 32): (41, 88, 52), (8, 128): (39, 90, 46),
+    (16, 16): (44, 91, 59), (16, 64): (42, 93, 53), (16, 256): (40, 95, 47),
+}
+
+
+def run(verbose: bool = True) -> dict:
+    rows = {}
+    for ah, aw in SWEEP:
+        cfg = feather_config(ah, aw)
+        rows[(ah, aw)] = {
+            "set_layout": cfg.bits_set_layout(),
+            "e_mapping": cfg.bits_execute_mapping(),
+            "e_streaming": cfg.bits_execute_streaming(),
+            "paper": PAPER[(ah, aw)],
+        }
+    if verbose:
+        print("\n[Tab. V] ISA bitwidths (model vs paper)")
+        print(f"{'array':>8} {'Set*':>10} {'E.Map':>12} {'E.Stream':>12}")
+        for (ah, aw), r in rows.items():
+            p = r["paper"]
+            print(f"{ah}x{aw:<5} {r['set_layout']:>4} vs {p[0]:<3} "
+                  f"{r['e_mapping']:>5} vs {p[1]:<4} "
+                  f"{r['e_streaming']:>5} vs {p[2]:<4}")
+    return rows

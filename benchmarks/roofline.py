@@ -1,0 +1,84 @@
+"""Roofline analysis (assignment §g): per (arch x shape x mesh) compute /
+memory / collective terms from the compiled dry-run artifacts.
+
+Reads the JSONL produced by ``python -m repro.launch.dryrun --all --json``
+(dryrun_single.jsonl / dryrun_multi.jsonl at the repo root).  MODEL_FLOPS
+uses the 6*N*D (train) / 2*N*D (inference) convention with N = active
+parameters, so the MODEL/HLO ratio exposes remat recompute, attention
+FLOPs and dispatch overheads.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config
+from repro.models.api import build_model
+
+FILES = ("dryrun_single.jsonl", "dryrun_single_fix.jsonl",
+         "dryrun_multi.jsonl")
+
+
+def _load() -> list[dict]:
+    recs: dict[tuple, dict] = {}
+    for fname in FILES:
+        if not os.path.exists(fname):
+            continue
+        with open(fname) as f:
+            for line in f:
+                r = json.loads(line)
+                key = (r["arch"], r["shape"], r.get("mesh", "?"))
+                recs[key] = r          # later files override earlier
+    return list(recs.values())
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = build_model(cfg).active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    tokens = shape.global_batch if shape.kind == "decode" else shape.tokens
+    return 2.0 * n * tokens
+
+
+def run(verbose: bool = True) -> list[dict]:
+    rows = []
+    for r in _load():
+        if r.get("status") != "OK":
+            if r.get("status", "").startswith("SKIP"):
+                rows.append({"arch": r["arch"], "shape": r["shape"],
+                             "mesh": r.get("mesh", "-"),
+                             "status": r["status"]})
+            continue
+        mf = model_flops(r["arch"], r["shape"])
+        hlo = r["hlo_flops_global"]
+        terms = {k: r[k] for k in ("t_compute", "t_memory", "t_collective")}
+        dom = max(terms, key=terms.get)
+        total = sum(terms.values())
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "OK",
+            **{k: terms[k] for k in terms},
+            "bottleneck": dom,
+            "roofline_fraction": terms[dom] / max(total, 1e-30),
+            "model_flops": mf,
+            "model_over_hlo": mf / max(hlo, 1e-30),
+        })
+    if verbose and rows:
+        print("\n[roofline] terms in seconds/step (per-chip basis)")
+        print(f"{'arch':>22} {'shape':>11} {'mesh':>9} {'compute':>10} "
+              f"{'memory':>10} {'collective':>11} {'bottleneck':>12} "
+              f"{'MODEL/HLO':>10}")
+        for r in rows:
+            if r["status"] != "OK":
+                print(f"{r['arch']:>22} {r['shape']:>11} {r['mesh']:>9} "
+                      f"{r['status']}")
+                continue
+            print(f"{r['arch']:>22} {r['shape']:>11} {r['mesh']:>9} "
+                  f"{r['t_compute']:10.2e} {r['t_memory']:10.2e} "
+                  f"{r['t_collective']:11.2e} "
+                  f"{r['bottleneck'][2:]:>12} {r['model_over_hlo']:10.3f}")
+    return rows

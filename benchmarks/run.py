@@ -1,0 +1,75 @@
+"""Benchmark driver: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints human-readable tables for each artifact, then the machine-readable
+``name,us_per_call,derived`` CSV summary.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _fmt(x):
+    if isinstance(x, float):
+        return f"{x:.4g}"
+    return str(x)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the full 58x9 sweep-based figures")
+    args = ap.parse_args()
+
+    from benchmarks import (arch_plans, breakdown, instr_traffic,
+                            isa_bitwidth, roofline, scaling, speedup,
+                            stall_table, tpu_gpu_compare)
+
+    rows = []
+
+    def bench(name, fn, derive):
+        t0 = time.time()
+        result = fn()
+        us = (time.time() - t0) * 1e6
+        rows.append((name, us, derive(result)))
+        return result
+
+    bench("tabV_isa_bitwidths", isa_bitwidth.run,
+          lambda r: "estream_exact=" + str(all(
+              v["e_streaming"] == v["paper"][2] for v in r.values())))
+    bench("tabI_stall_table", stall_table.run,
+          lambda r: "stall_16x256=" + _fmt(r[(16, 256)][0]))
+    if not args.quick:
+        bench("fig10_speedup", speedup.run,
+              lambda r: "geomean_16x256="
+              + _fmt(r[(16, 256)]["geomean_speedup"]))
+        bench("fig12_instr_traffic", instr_traffic.run,
+              lambda r: "geomean_reduction_16x256="
+              + _fmt(r[(16, 256)]["geomean_reduction"]))
+        bench("fig11_tpu_gpu_modelled", tpu_gpu_compare.run,
+              lambda r: "feather_vs_tpu_irregular=" + _fmt(
+                  r["feather_util_irregular"]
+                  / max(r["tpu_util_irregular"], 1e-9)))
+    bench("fig13_breakdown", breakdown.run,
+          lambda r: "min_util=" + _fmt(min(v["utilization"]
+                                           for v in r.values())))
+    bench("sec6d_scaling", scaling.run,
+          lambda r: "aw64to256_speedup=" + _fmt(
+              r[("AW", 64)]["geomean_cycles"]
+              / r[("AW", 256)]["geomean_cycles"]))
+    bench("arch_plans_16x256", arch_plans.run,
+          lambda r: "n_cells=" + str(len(r)))
+    bench("roofline_from_dryrun", roofline.run,
+          lambda r: "cells=" + str(sum(1 for x in r
+                                       if x.get("status") == "OK")))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""§VI-D scalability ablations: AW scaling (near-linear speedup, stable
+utilization) and AH scaling (2.6-4x with granularity sensitivity)."""
+
+from benchmarks.common import geomean
+from repro.configs.feather import feather_config
+from repro.core import mapper, workloads
+
+SUITE = [g for g in workloads.suite()][::6]   # every 6th workload
+
+
+def run(verbose: bool = True) -> dict:
+    rows = {}
+    # AW scaling at AH=16: 64 -> 256
+    for aw in (64, 128, 256):
+        cfg = feather_config(16, aw)
+        cyc = [mapper.search(g, cfg).perf_minisa for g in SUITE]
+        rows[("AW", aw)] = {
+            "geomean_cycles": geomean([c.cycles for c in cyc]),
+            "mean_util": sum(c.utilization for c in cyc) / len(cyc),
+        }
+    # AH scaling at AW=64: 4 -> 16
+    for ah in (4, 8, 16):
+        cfg = feather_config(ah, 64)
+        cyc = [mapper.search(g, cfg).perf_minisa for g in SUITE]
+        rows[("AH", ah)] = {
+            "geomean_cycles": geomean([c.cycles for c in cyc]),
+            "mean_util": sum(c.utilization for c in cyc) / len(cyc),
+        }
+    if verbose:
+        base_aw = rows[("AW", 64)]["geomean_cycles"]
+        base_ah = rows[("AH", 4)]["geomean_cycles"]
+        print("\n[§VI-D] scaling ablations")
+        for (kind, v), r in rows.items():
+            base = base_aw if kind == "AW" else base_ah
+            print(f"  {kind}={v:<4} speedup-vs-base {base / r['geomean_cycles']:5.2f}x "
+                  f"util {r['mean_util']:6.1%}")
+    return rows

@@ -1,0 +1,34 @@
+"""Fig. 10: end-to-end MINISA speedup over the micro-instruction baseline,
+geomean across the Tab. IV suite, per array config.  Paper anchors:
+~1x (<=64 PEs), 1.9x @16x16, 7.5x @16x64, 31.6x @16x256."""
+
+from benchmarks.common import geomean, sweep_plans
+from repro.configs.feather import SWEEP
+
+PAPER = {(16, 16): 1.9, (16, 64): 7.5, (16, 256): 31.6}
+
+
+def run(verbose: bool = True) -> dict:
+    plans = sweep_plans()
+    rows = {}
+    for key in SWEEP:
+        sp = [p.speedup for p in plans[key].values()]
+        st_mi = [p.perf_minisa.stall_ifetch_frac for p in plans[key].values()]
+        st_u = [p.perf_micro.stall_ifetch_frac for p in plans[key].values()]
+        rows[key] = {
+            "geomean_speedup": geomean(sp),
+            "max_speedup": max(sp),
+            "mean_stall_micro": sum(st_u) / len(st_u),
+            "mean_stall_minisa": sum(st_mi) / len(st_mi),
+            "paper": PAPER.get(key),
+        }
+    if verbose:
+        print("\n[Fig. 10] speedup vs array scale (geomean over 58 GEMMs)")
+        print(f"{'array':>8} {'speedup':>9} {'max':>8} {'stall-u':>9} "
+              f"{'stall-m':>9} {'paper':>7}")
+        for key, r in rows.items():
+            paper = f"{r['paper']:.1f}" if r["paper"] else "-"
+            print(f"{key[0]}x{key[1]:<5} {r['geomean_speedup']:9.2f} "
+                  f"{r['max_speedup']:8.1f} {r['mean_stall_micro']:9.1%} "
+                  f"{r['mean_stall_minisa']:9.2%} {paper:>7}")
+    return rows

@@ -1,0 +1,23 @@
+"""Table I: instruction-fetch stall share of the micro-instruction baseline
+for I[65536,40] x W[40,88], across the six published array sizes."""
+
+from repro.configs.feather import feather_config
+from repro.core import mapper
+
+PAPER = {(4, 4): 0.0, (8, 8): 0.0, (4, 64): 0.753, (16, 16): 0.652,
+         (8, 128): 0.904, (16, 256): 0.969}
+
+TAB1 = mapper.Gemm(m=65536, k=40, n=88, name="tab1")
+
+
+def run(verbose: bool = True) -> dict:
+    rows = {}
+    for (ah, aw), paper in PAPER.items():
+        plan = mapper.search(TAB1, feather_config(ah, aw))
+        rows[(ah, aw)] = (plan.perf_micro.stall_ifetch_frac, paper)
+    if verbose:
+        print("\n[Table I] micro-instruction fetch stalls")
+        print(f"{'array':>8} {'model':>8} {'paper':>8}")
+        for (ah, aw), (m, p) in rows.items():
+            print(f"{ah}x{aw:>5} {m:8.1%} {p:8.1%}")
+    return rows

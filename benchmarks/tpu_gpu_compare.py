@@ -1,0 +1,44 @@
+"""Fig. 11 (modelled, not measured -- DESIGN.md §5): utilization of
+FEATHER+ 16x256 vs fixed-granularity TPU-v6e-like (8x256x256 INT8 tiles)
+and GPU-like (16x32x8) execution, across the Tab. IV suite.
+
+The paper measures real devices; here both baselines are analytical
+granularity models, so only the *shape-robustness* comparison is
+reproduced: FEATHER+ sustains high utilization on irregular shapes where
+padding starves the rigid pipelines."""
+
+import math
+
+from benchmarks.common import geomean, sweep_plans
+from repro.core import workloads
+
+
+def _padded_util(g, gm, gk, gn):
+    pad = (math.ceil(g.m / gm) * gm * math.ceil(g.k / gk) * gk
+           * math.ceil(g.n / gn) * gn)
+    return g.macs / pad
+
+
+def run(verbose: bool = True) -> dict:
+    plans = sweep_plans()[(16, 256)]
+    rows = {}
+    for g in workloads.suite():
+        rows[g.name] = {
+            "feather_util": plans[g.name].perf_minisa.utilization,
+            "tpu_util": _padded_util(g, 8, 256, 256),
+            "gpu_util": _padded_util(g, 16, 32, 8),
+        }
+    agg = {k: geomean([r[k] for r in rows.values()])
+           for k in ("feather_util", "tpu_util", "gpu_util")}
+    irregular = [r for n, r in rows.items() if "bconv" in n]
+    agg["feather_util_irregular"] = geomean(
+        [r["feather_util"] for r in irregular])
+    agg["tpu_util_irregular"] = geomean([r["tpu_util"] for r in irregular])
+    if verbose:
+        print("\n[Fig. 11 modelled] utilization geomeans")
+        print(f"  FEATHER+ 16x256 : {agg['feather_util']:.1%} "
+              f"(irregular BConv: {agg['feather_util_irregular']:.1%})")
+        print(f"  TPU-v6e-like    : {agg['tpu_util']:.1%} "
+              f"(irregular BConv: {agg['tpu_util_irregular']:.1%})")
+        print(f"  GPU-like        : {agg['gpu_util']:.1%}")
+    return agg

@@ -1,0 +1,21 @@
+"""Plan FEATHER+ offload for every assigned architecture (decode_32k)
+and print the instruction-traffic table -- the framework-level integration
+of the paper (core/planner + core/model_gemms).
+
+    PYTHONPATH=src python examples/minisa_plan.py
+"""
+
+from repro.configs.base import SHAPES
+from repro.configs.feather import feather_config
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.core.model_gemms import gemm_workloads
+from repro.core.planner import plan_model
+
+cfg = feather_config(16, 256)
+print(f"{'arch':>22} {'speedup':>8} {'util':>7} {'instr-red':>10}")
+for arch in ARCH_IDS:
+    ops = gemm_workloads(get_config(arch), SHAPES["decode_32k"])
+    plan = plan_model(arch, "decode_32k", ops, cfg)
+    s = plan.summary()
+    print(f"{arch:>22} {s['speedup']:8.2f} {s['utilization']:7.1%} "
+          f"{s['instr_reduction']:10.2e}")

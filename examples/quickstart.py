@@ -1,0 +1,43 @@
+"""Quickstart: the MINISA pipeline end-to-end on one GEMM.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. mapper searches (mapping, layout) for a GEMM on FEATHER+ 8x8;
+2. the plan lowers to a MINISA trace (8-instruction ISA);
+3. the functional FEATHER+ machine executes the trace in JAX;
+4. the result is checked against the einsum oracle;
+5. the analytical model reports cycles/stalls vs the micro-instruction
+   baseline.
+"""
+
+import numpy as np
+
+from repro.configs.feather import feather_config
+from repro.core import machine, mapper, trace
+from repro.core.isa import trace_summary
+
+cfg = feather_config(8, 8)
+gemm = mapper.Gemm(m=96, k=40, n=88, name="quickstart")
+
+plan = mapper.search(gemm, cfg)
+print(f"chosen mapping: df={plan.choice.df.name} vn={plan.choice.vn} "
+      f"tile=({plan.choice.m_t},{plan.choice.k_t},{plan.choice.n_t}) "
+      f"groups=({plan.choice.n_kg},{plan.choice.n_nb}) dup={plan.choice.dup}")
+
+ops = trace.build_trace(plan)
+print("\ntrace:", trace_summary([o.inst for o in ops], cfg))
+
+rng = np.random.default_rng(0)
+i = rng.standard_normal((gemm.m, gemm.k)).astype(np.float32)
+w = rng.standard_normal((gemm.k, gemm.n)).astype(np.float32)
+out = machine.run_trace(cfg, ops, {"I": i, "W": w})["O"]
+err = np.abs(out - i @ w).max()
+print(f"\nfunctional check vs oracle: max |err| = {err:.2e}")
+assert err < 1e-3
+
+s = plan.summary()
+print(f"\nanalytical model: {s['cycles_minisa']:.0f} cycles (MINISA) vs "
+      f"{s['cycles_micro']:.0f} (micro) -> {s['speedup']:.2f}x speedup")
+print(f"utilization {s['util_minisa']:.1%}, instruction bytes "
+      f"{s['instr_bytes_minisa']:.0f} vs {s['instr_bytes_micro']:.2e} "
+      f"({s['instr_reduction']:.0f}x reduction)")

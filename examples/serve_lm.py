@@ -1,0 +1,10 @@
+"""Batched serving example: prefill + greedy decode on a reduced model.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "minitron-4b", "--reduced", "--batch", "4",
+                "--prompt-len", "32", "--steps", "24"])

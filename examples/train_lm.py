@@ -1,0 +1,23 @@
+"""End-to-end training driver: a ~100M-parameter gemma-family model for a
+few hundred steps on CPU, with checkpointing + resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt_quick")
+    args = ap.parse_args()
+    train_main([
+        "--arch", "gemma-7b", "--reduced",
+        "--reduced-layers", "8", "--reduced-dmodel", "512",
+        "--steps", str(args.steps), "--batch", "8", "--seq", "256",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+        "--resume", "auto", "--log-every", "20",
+    ])

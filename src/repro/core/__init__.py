@@ -1,0 +1,20 @@
+"""MINISA core: the paper's contribution as a composable library.
+
+Public surface:
+
+  configs.feather.FeatherConfig / feather_config / SWEEP
+  core.isa          -- the 8 MINISA instructions + bitwidths
+  core.layout       -- Set*VNLayout semantics and address generation
+  core.vn           -- Virtual Neuron views of operands
+  core.machine      -- functional FEATHER+ (executes traces in JAX)
+  core.microinst    -- micro-instruction baseline traffic model
+  core.perf         -- 5-engine analytical performance model
+  core.mapper       -- mapping/layout co-search (paper \u00a7V)
+  core.trace        -- Plan -> MINISA trace lowering
+  core.workloads    -- Tab. IV GEMM suite
+  core.planner      -- LM model graph -> per-layer MINISA plans
+"""
+
+from repro.core.mapper import Gemm, MappingChoice, Plan, search  # noqa: F401
+from repro.core.trace import build_trace  # noqa: F401
+from repro.core.machine import FeatherMachine, TraceOp, run_trace  # noqa: F401

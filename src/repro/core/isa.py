@@ -1,0 +1,280 @@
+"""MINISA instruction set (paper §IV, Tab. II, Fig. 3, Fig. 5).
+
+Eight instructions:
+
+  SetIVNLayout / SetWVNLayout / SetOVNLayout  -- on-chip VN layouts
+  ExecuteMapping                              -- stationary-VN placement
+  ExecuteStreaming                            -- streaming schedule + dataflow
+  Load / Write                                -- off-chip <-> buffer movement
+  Activation                                  -- on-buffer activation function
+
+Every instruction knows its encoded bitwidth for a given FeatherConfig
+(the instruction-traffic numbers of Fig. 12 are sums of these) and can be
+packed to / unpacked from an integer for round-trip tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Iterable
+
+from repro.configs.feather import FeatherConfig, _clog2
+
+
+class Opcode(enum.IntEnum):
+    SET_WVN_LAYOUT = 0b000
+    SET_IVN_LAYOUT = 0b001
+    SET_OVN_LAYOUT = 0b010
+    EXECUTE_STREAMING = 0b011
+    WRITE = 0b100
+    LOAD = 0b101
+    ACTIVATION = 0b110
+    EXECUTE_MAPPING = 0b111
+
+
+class Dataflow(enum.IntEnum):
+    IOS = 0  # Input-Output stationary: inputs pinned in PEs, weights stream
+    WOS = 1  # Weight-Output stationary: weights pinned, inputs stream
+
+
+class BufferTarget(enum.IntEnum):
+    STATIONARY = 0
+    STREAMING = 1
+
+
+# ---------------------------------------------------------------------------
+# Field packing helpers
+# ---------------------------------------------------------------------------
+
+def _pack(fields: Iterable[tuple[int, int]]) -> int:
+    """Pack (value, width) pairs MSB-first into one integer."""
+    word = 0
+    for value, width in fields:
+        if value < 0 or (width < 64 and value >= (1 << width)):
+            raise ValueError(f"field value {value} does not fit in {width} bits")
+        word = (word << width) | value
+    return word
+
+
+@dataclasses.dataclass(frozen=True)
+class Instruction:
+    """Base class: subclasses implement fields(cfg) -> [(value, width), ...]."""
+
+    opcode: Opcode = dataclasses.field(init=False, default=None, repr=False)
+
+    def fields(self, cfg: FeatherConfig) -> list[tuple[int, int]]:
+        raise NotImplementedError
+
+    def bitwidth(self, cfg: FeatherConfig) -> int:
+        return sum(w for _, w in self.fields(cfg))
+
+    def encode(self, cfg: FeatherConfig) -> int:
+        return _pack(self.fields(cfg))
+
+    @property
+    def is_execute(self) -> bool:
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Layout instructions (Fig. 5).  A layout is (order permutation of the three
+# free post-VN ranks) + (level-0 / level-1 partition factors).  The innermost
+# reduction-rank factor is pinned at VN size and therefore not encoded.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SetLayoutBase(Instruction):
+    order: int = 0        # permutation id in [0, 5] (Tab. III)
+    nr_l0: int = 1        # level-0 factor of the non-reduction rank (<= AW)
+    nr_l1: int = 1        # level-1 factor of the non-reduction rank
+    red_l1: int = 1       # level-1 factor of the reduction rank (K_L1 etc.)
+
+    def fields(self, cfg: FeatherConfig) -> list[tuple[int, int]]:
+        slots = cfg.vn_slots_per_col
+        return [
+            (int(self.opcode), 3),
+            (self.order, 3),
+            (max(self.nr_l0 - 1, 0), _clog2(cfg.aw)),
+            (max(self.nr_l1 - 1, 0), _clog2(slots)),
+            (max(self.red_l1 - 1, 0), _clog2(slots)),
+        ]
+
+    @property
+    def num_vns(self) -> int:
+        return self.nr_l0 * self.nr_l1 * self.red_l1
+
+
+@dataclasses.dataclass(frozen=True)
+class SetWVNLayout(SetLayoutBase):
+    """Weight VNs: ranks {K_L1, N_L0, N_L1}, K_L0 == VN size."""
+    opcode = Opcode.SET_WVN_LAYOUT
+
+
+@dataclasses.dataclass(frozen=True)
+class SetIVNLayout(SetLayoutBase):
+    """Input VNs: ranks {J_L1, M_L0, M_L1}, J_L0 == VN size."""
+    opcode = Opcode.SET_IVN_LAYOUT
+
+
+@dataclasses.dataclass(frozen=True)
+class SetOVNLayout(SetLayoutBase):
+    """Output VNs: ranks {Q_L1, P_L0, P_L1}; also zero-initialises the OB
+    tile and, at tile end, commits OB -> streaming/stationary buffer."""
+    opcode = Opcode.SET_OVN_LAYOUT
+
+
+# ---------------------------------------------------------------------------
+# Execute instructions (Fig. 3)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExecuteMapping(Instruction):
+    """Place stationary VN(r, c) onto PE(a_h, a_w):
+
+        r = r0 + floor(a_w / G_r)
+        c = c0 + s_r * a_h + s_c * (a_w mod G_c)
+
+    (paper Eq. 1).  Out-of-bounds (r, c) are implicitly zero-padded.
+    """
+    opcode = Opcode.EXECUTE_MAPPING
+    r0: int = 0
+    c0: int = 0
+    g_r: int = 1
+    g_c: int = 1
+    s_r: int = 0
+    s_c: int = 0
+
+    def fields(self, cfg: FeatherConfig) -> list[tuple[int, int]]:
+        slots_col = cfg.vn_slots_per_col
+        slots_tot = cfg.vn_slots_total
+        return [
+            (int(self.opcode), 3),
+            (max(self.g_r - 1, 0), _clog2(cfg.aw)),
+            (max(self.g_c - 1, 0), _clog2(cfg.aw)),
+            (self.r0, _clog2(slots_tot)),
+            (self.c0, _clog2(slots_tot)),
+            (self.s_r, _clog2(slots_col)),
+            (self.s_c, _clog2(slots_col)),
+        ]
+
+    @property
+    def is_execute(self) -> bool:
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecuteStreaming(Instruction):
+    """Stream T VNs into each PE column; VN(m, j) entering column a_w at
+    step t in [0, T):
+
+        j = r0 + floor(a_w / G_r)
+        m = m0 + s_m * t + floor((a_w mod G_r) / G_c)
+
+    reusing the paired ExecuteMapping's (r0, G_r, G_c).  ``df`` swaps the
+    dataflow between IO-S and WO-S; VN_size <= AH.
+    """
+    opcode = Opcode.EXECUTE_STREAMING
+    m0: int = 0
+    s_m: int = 1
+    t: int = 1            # number of streamed VNs per column
+    vn_size: int = 1
+    df: Dataflow = Dataflow.WOS
+
+    def fields(self, cfg: FeatherConfig) -> list[tuple[int, int]]:
+        slots = cfg.vn_slots_per_col
+        w = _clog2(slots)
+        return [
+            (int(self.opcode), 3),
+            (int(self.df), 1),
+            (self.m0, w),
+            (max(self.s_m - 1, 0), w),
+            (max(self.t - 1, 0), w),
+            (max(self.vn_size - 1, 0), _clog2(cfg.ah)),
+        ]
+
+    @property
+    def is_execute(self) -> bool:
+        return True
+
+
+# ---------------------------------------------------------------------------
+# Memory movement + activation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Load(Instruction):
+    opcode = Opcode.LOAD
+    hbm_addr: int = 0
+    length: int = 0          # elements
+    target: BufferTarget = BufferTarget.STREAMING
+
+    def fields(self, cfg: FeatherConfig) -> list[tuple[int, int]]:
+        return [
+            (int(self.opcode), 3),
+            (self.hbm_addr, 33),
+            (self.length, _clog2(cfg.d_elems * cfg.aw) + 1),
+            (int(self.target), 1),
+        ]
+
+
+@dataclasses.dataclass(frozen=True)
+class Write(Instruction):
+    opcode = Opcode.WRITE
+    hbm_addr: int = 0
+    length: int = 0
+    target: BufferTarget = BufferTarget.STREAMING
+
+    def fields(self, cfg: FeatherConfig) -> list[tuple[int, int]]:
+        return [
+            (int(self.opcode), 3),
+            (self.hbm_addr, 33),
+            (self.length, _clog2(cfg.d_elems * cfg.aw) + 1),
+            (int(self.target), 1),
+        ]
+
+
+@dataclasses.dataclass(frozen=True)
+class Activation(Instruction):
+    """On-buffer activation (relu/gelu/silu/softmax-lut/none)."""
+    opcode = Opcode.ACTIVATION
+    function: int = 0
+    length: int = 0
+    target: BufferTarget = BufferTarget.STREAMING
+
+    def fields(self, cfg: FeatherConfig) -> list[tuple[int, int]]:
+        return [
+            (int(self.opcode), 3),
+            (self.function, 4),
+            (int(self.target), 1),
+            (self.length, _clog2(cfg.d_elems * cfg.aw) + 1),
+        ]
+
+
+ACTIVATION_FUNCS = {"none": 0, "relu": 1, "gelu": 2, "silu": 3,
+                    "softmax": 4, "rmsnorm": 5, "layernorm": 6, "geglu": 7,
+                    "swiglu": 8}
+
+
+# ---------------------------------------------------------------------------
+# Trace-level accounting
+# ---------------------------------------------------------------------------
+
+def trace_bits(trace: Iterable[Instruction], cfg: FeatherConfig) -> int:
+    return sum(inst.bitwidth(cfg) for inst in trace)
+
+
+def trace_bytes(trace: Iterable[Instruction], cfg: FeatherConfig) -> float:
+    return trace_bits(trace, cfg) / 8.0
+
+
+def trace_summary(trace: Iterable[Instruction], cfg: FeatherConfig) -> dict:
+    counts: dict[str, int] = {}
+    bits = 0
+    for inst in trace:
+        name = type(inst).__name__
+        counts[name] = counts.get(name, 0) + 1
+        bits += inst.bitwidth(cfg)
+    return {"counts": counts, "bits": bits, "bytes": bits / 8.0,
+            "n_instructions": sum(counts.values())}

@@ -1,0 +1,283 @@
+"""FEATHER+ functional machine: executes MINISA traces in JAX.
+
+This module plays the role the cycle-accurate RTL plays in the paper:
+it implements the *semantics* of every MINISA instruction so that a
+(mapper-produced) trace can be validated end-to-end against the plain
+einsum oracle.  Timing lives in ``core/perf.py``; this file is purely
+functional.
+
+Architecture state:
+
+  streaming buffer   D_str x AW image      (single bank, FEATHER+ §III-B)
+  stationary buffer  D_sta x AW image      (feeds PE local registers)
+  output buffer      dense accumulator indexed by (streamed m, stationary c)
+  layout registers   one VNLayout per operand
+  theta_EM register  last ExecuteMapping (ExecuteStreaming reuses r0/G_r/G_c)
+
+The compute tile (one ExecuteMapping + ExecuteStreaming pair) is a jitted
+gather -> dot -> scatter-add over the (t, a_h, a_w) lattice, i.e. the
+three-level reduction (temporal-in-PE, spatial-BIRRD, temporal-OB) collapses
+to a masked scatter-add, which is its functional meaning.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.feather import FeatherConfig
+from repro.core import isa
+from repro.core.layout import VNLayout
+from repro.core import vn as vnlib
+
+
+@dataclasses.dataclass
+class TraceOp:
+    """An instruction plus simulation side-band metadata.
+
+    The ISA encodes only what hardware needs (Fig. 3/5); the simulator
+    additionally needs to know *which* host tensor a Load refers to and the
+    bound VNLayout object.  ``meta`` keys used:
+
+      Load:            tensor (str), layout (VNLayout), operand ('I'|'W')
+      Set*VNLayout:    layout (VNLayout)
+      SetOVNLayout:    m_extent, n_extent (accumulator shape), commit
+                       (None | 'streaming' | 'stationary')
+      Write:           tensor (str), transpose (bool)
+      Activation:      fn (callable) applied to the committed output
+    """
+    inst: isa.Instruction
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# jitted tile kernel
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=(
+    "ah", "aw", "t_steps", "vn_size",
+    "r0", "c0", "g_r", "g_c", "s_r", "s_c", "m0", "s_m",
+    "sta_red", "sta_free", "str_red", "str_free"))
+def _tile(sta_buf, str_buf, o_acc, sta_first_rows, sta_cols,
+          str_first_rows, str_cols, *, ah, aw, t_steps, vn_size,
+          r0, c0, g_r, g_c, s_r, s_c, m0, s_m,
+          sta_red, sta_free, str_red, str_free):
+    """Execute one (E.Mapping, E.Streaming) pair.
+
+    sta_first_rows/cols: [sta_red, sta_free] physical address tables derived
+    from the stationary layout (likewise for streaming).  Address tables are
+    precomputed host-side from the VNLayout (pure index math) so the jitted
+    body is static-shape gathers + one einsum + one scatter-add.
+    """
+    a_w = jnp.arange(aw)
+    a_h = jnp.arange(ah)
+    t = jnp.arange(t_steps)
+
+    r = r0 + a_w // g_r                                        # [AW]
+    c = c0 + s_r * a_h[:, None] + s_c * (a_w % g_c)[None, :]   # [AH, AW]
+    m = m0 + s_m * t[:, None] + ((a_w % g_r) // g_c)[None, :]  # [T, AW]
+
+    # "FEATHER+ activates only VN_size x AW PEs" (paper §VI-D): rows beyond
+    # vn_size are skipped -- without this mask, c-index aliasing across PE
+    # rows would double-count products whenever vn_size < AH.
+    row_active = a_h < vn_size                                 # [AH]
+    valid_s = (row_active[:, None]
+               & (r[None, :] >= 0) & (r[None, :] < sta_red)
+               & (c >= 0) & (c < sta_free))                    # [AH, AW]
+    valid_m = (m >= 0) & (m < str_free)                        # [T, AW]
+    j_valid = (r >= 0) & (r < str_red)                         # [AW]
+
+    rs = jnp.clip(r, 0, sta_red - 1)
+    cs = jnp.clip(c, 0, sta_free - 1)
+    ms = jnp.clip(m, 0, str_free - 1)
+
+    e = jnp.arange(vn_size)
+    # stationary VN elements: [AH, AW, vn]
+    s_row = sta_first_rows[rs[None, :].repeat(ah, 0), cs]
+    s_col = sta_cols[rs[None, :].repeat(ah, 0), cs]
+    s_vals = sta_buf[s_row[..., None] + e, s_col[..., None]]
+    s_vals = jnp.where(valid_s[..., None], s_vals, 0)
+    # streaming VN elements: [T, AW, vn]
+    js = jnp.clip(r, 0, str_red - 1)
+    t_row = str_first_rows[js[None, :].repeat(t_steps, 0), ms]
+    t_col = str_cols[js[None, :].repeat(t_steps, 0), ms]
+    t_vals = str_buf[t_row[..., None] + e, t_col[..., None]]
+    t_vals = jnp.where((valid_m & j_valid[None, :])[..., None], t_vals, 0)
+
+    # psum[t, h, w] = dot over vn  (temporal reduction inside the PE)
+    psums = jnp.einsum("twv,hwv->thw", t_vals.astype(o_acc.dtype),
+                       s_vals.astype(o_acc.dtype))
+
+    # BIRRD + OB reduction == scatter-add into (m, c)
+    n_free = o_acc.shape[1]
+    flat = ms[:, None, :] * n_free + cs[None, :, :]            # [T, AH, AW]
+    mask = (valid_m[:, None, :] & valid_s[None, :, :])
+    psums = jnp.where(mask, psums, 0)
+    flat = jnp.where(mask, flat, 0)
+    return o_acc.reshape(-1).at[flat.reshape(-1)].add(
+        psums.reshape(-1)).reshape(o_acc.shape)
+
+
+def _address_tables(lay: VNLayout, red: int, free: int):
+    r_idx, c_idx = np.meshgrid(np.arange(red), np.arange(free), indexing="ij")
+    first_row, col = lay.address(r_idx, c_idx)
+    return jnp.asarray(first_row, jnp.int32), jnp.asarray(col, jnp.int32)
+
+
+class FeatherMachine:
+    """Executes a list of TraceOps against host tensors."""
+
+    def __init__(self, cfg: FeatherConfig, max_depth: int | None = None):
+        self.cfg = cfg
+        # Simulated buffer depth: tests run tiny workloads; materialising the
+        # full multi-hundred-K-row buffer would be wasteful.  The semantics
+        # are unchanged (the mapper's capacity feasibility check still uses
+        # the real depths).
+        self.max_depth = max_depth
+        self.reset()
+
+    def reset(self):
+        self.str_buf = None
+        self.sta_buf = None
+        self.layouts: dict[str, VNLayout] = {}
+        self.layout_extents: dict[str, tuple[int, int]] = {}
+        self.o_acc = None
+        self.o_extents = None
+        self.em: isa.ExecuteMapping | None = None
+        self.df = isa.Dataflow.WOS
+        self.outputs: dict[str, np.ndarray] = {}
+        self._addr_cache: dict[str, tuple] = {}
+        self._pending_commit: str | None = None
+        self._pending_activation = None
+
+    # -- helpers -------------------------------------------------------------
+    def _depth(self, needed: int) -> int:
+        cap = self.max_depth or max(needed, 1)
+        return max(needed, 1) if self.max_depth is None else max(cap, needed)
+
+    def _place(self, tensor: np.ndarray, operand: str, lay: VNLayout):
+        """Convert a dense operand to VNs, place through the layout."""
+        if operand == "I":
+            vns = vnlib.to_input_vns(np.asarray(tensor), lay.vn_size)
+        elif operand == "W":
+            vns = vnlib.to_weight_vns(np.asarray(tensor), lay.vn_size)
+        else:
+            raise ValueError(operand)
+        red, free = vns.shape[0], vns.shape[1]
+        depth = self._depth(lay.rows_needed)
+        buf = np.zeros((depth, lay.aw), dtype=np.float32)
+        r_idx, c_idx = np.meshgrid(np.arange(red), np.arange(free),
+                                   indexing="ij")
+        first_row, col = lay.address(r_idx, c_idx)
+        for e in range(lay.vn_size):
+            buf[first_row + e, col] = vns[:, :, e]
+        return jnp.asarray(buf), (red, free)
+
+    def _role(self, operand: str) -> str:
+        """Which physical buffer holds operand under the current dataflow."""
+        if self.df == isa.Dataflow.WOS:
+            return "stationary" if operand == "W" else "streaming"
+        return "stationary" if operand == "I" else "streaming"
+
+    # -- instruction semantics -------------------------------------------------
+    def run(self, ops: list[TraceOp], tensors: dict[str, np.ndarray]):
+        for op in ops:
+            self._step(op, tensors)
+        return self.outputs
+
+    def _step(self, op: TraceOp, tensors):
+        inst = op.inst
+        if isinstance(inst, (isa.SetWVNLayout, isa.SetIVNLayout)):
+            operand = "W" if isinstance(inst, isa.SetWVNLayout) else "I"
+            self.layouts[operand] = op.meta["layout"]
+        elif isinstance(inst, isa.SetOVNLayout):
+            m_ext = op.meta["m_extent"]
+            n_ext = op.meta["n_extent"]
+            self.o_acc = jnp.zeros((m_ext, n_ext), dtype=jnp.float32)
+            self.o_extents = (m_ext, n_ext)
+            self.layouts["O"] = op.meta.get("layout")
+            self._pending_commit = op.meta.get("commit")
+        elif isinstance(inst, isa.Load):
+            operand = op.meta["operand"]
+            lay = op.meta.get("layout") or self.layouts[operand]
+            self.layouts[operand] = lay
+            # The stationary tensor is VN-ified along its reduction rank as a
+            # [K, free] matrix regardless of dataflow; operand kind selects
+            # the grouping convention.
+            kind = "W" if operand == "W" else "I"
+            buf, extents = self._place(tensors[op.meta["tensor"]], kind, lay)
+            if inst.target == isa.BufferTarget.STATIONARY:
+                self.sta_buf = buf
+            else:
+                self.str_buf = buf
+            self.layout_extents[operand] = extents
+        elif isinstance(inst, isa.ExecuteMapping):
+            self.em = inst
+        elif isinstance(inst, isa.ExecuteStreaming):
+            self.df = inst.df
+            self._execute(inst)
+        elif isinstance(inst, isa.Activation):
+            self._pending_activation = op.meta.get("fn")
+        elif isinstance(inst, isa.Write):
+            out = np.asarray(self.o_acc)
+            if self._pending_activation is not None:
+                out = np.asarray(self._pending_activation(out))
+                self._pending_activation = None
+            if op.meta.get("transpose"):
+                out = out.T
+            commit_to = op.meta.get("commit_to")
+            if commit_to is not None:
+                # paper §IV-G: layer i's OB commits on-chip to the next
+                # operand buffer (IO-S: streaming, WO-S: stationary); the
+                # output becomes layer i+1's input without an off-chip
+                # round trip, and layer i+1's SetIVNLayout/Load are elided.
+                lay = op.meta["layout"]
+                buf, extents = self._place(out, "I", lay)
+                if commit_to == "stationary":
+                    self.sta_buf = buf
+                else:
+                    self.str_buf = buf
+                self.layouts["I"] = lay
+                self.layout_extents["I"] = extents
+            self.outputs[op.meta["tensor"]] = out
+        else:
+            raise NotImplementedError(type(inst))
+
+    def _execute(self, es: isa.ExecuteStreaming):
+        if self.em is None:
+            raise RuntimeError("ExecuteStreaming before ExecuteMapping")
+        if self.o_acc is None:
+            raise RuntimeError("ExecuteStreaming before SetOVNLayout")
+        sta_operand = "W" if self.df == isa.Dataflow.WOS else "I"
+        str_operand = "I" if self.df == isa.Dataflow.WOS else "W"
+        sta_lay = self.layouts[sta_operand]
+        str_lay = self.layouts[str_operand]
+        sta_red, sta_free = self.layout_extents[sta_operand]
+        str_red, str_free = self.layout_extents[str_operand]
+        key_s = (sta_operand, id(sta_lay), sta_red, sta_free)
+        key_t = (str_operand, id(str_lay), str_red, str_free)
+        if key_s not in self._addr_cache:
+            self._addr_cache[key_s] = _address_tables(sta_lay, sta_red, sta_free)
+        if key_t not in self._addr_cache:
+            self._addr_cache[key_t] = _address_tables(str_lay, str_red, str_free)
+        sfr, scol = self._addr_cache[key_s]
+        tfr, tcol = self._addr_cache[key_t]
+        em = self.em
+        self.o_acc = _tile(
+            self.sta_buf, self.str_buf, self.o_acc, sfr, scol, tfr, tcol,
+            ah=self.cfg.ah, aw=self.cfg.aw, t_steps=es.t,
+            vn_size=es.vn_size,
+            r0=em.r0, c0=em.c0, g_r=em.g_r, g_c=em.g_c,
+            s_r=em.s_r, s_c=em.s_c, m0=es.m0, s_m=es.s_m,
+            sta_red=sta_red, sta_free=sta_free,
+            str_red=str_red, str_free=str_free)
+
+
+def run_trace(cfg: FeatherConfig, ops: list[TraceOp],
+              tensors: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+    return FeatherMachine(cfg).run(ops, tensors)

@@ -1,0 +1,573 @@
+"""FEATHER+ Mapper: analytical (mapping, layout) co-search (paper §V, Tab. VII).
+
+Pipeline (paper Fig. 8/9):
+
+  workload -> VNs -> tiles -> VN groups -> combined VN groups -> column
+  duplication -> feasible layouts -> MINISA trace -> analytical latency
+
+Search knobs (Tab. VII):
+  dataflow      WO-S / IO-S (IO-S == transposed WO-S; §V-B "from the
+                mapper's perspective")
+  VN size       vn <= AH (balanced divisors of K considered; §VI-D)
+  tiling        (M_t, K_t, N_t) bounded by buffer capacities
+  grouping      n_kg x n_nb concurrent combined VN groups per invocation
+  duplication   d copies of each group across columns (T shrinks by d)
+  layout        Tab. III order per operand + level-0 factors
+  patterns      block/strided stationary c-strides, interleaved/consecutive
+                streaming (consecutive degenerates to interleaved when d>1,
+                see ExecuteStreaming's m-offset form)
+
+Mapping-first, layout-second: mapping candidates are scored with the
+analytical perf model; for the best mappings we search a feasible layout
+(single-bank streaming-row legality + OB bank legality + capacity).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable
+
+import numpy as np
+
+from repro.configs.feather import FeatherConfig
+from repro.core import isa, layout as layoutlib, perf
+from repro.core.microinst import MicroModel
+
+
+# ---------------------------------------------------------------------------
+# Workloads
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Gemm:
+    """O[M, N] = I[M, K] @ W[K, N]  (extended-einsum ranks of Fig. 1)."""
+    m: int
+    k: int
+    n: int
+    name: str = ""
+    count: int = 1       # repeated layers with identical shape
+
+    @property
+    def macs(self) -> int:
+        return self.m * self.k * self.n
+
+    @property
+    def data_bytes(self) -> int:
+        return self.m * self.k + self.k * self.n + self.m * self.n
+
+
+# ---------------------------------------------------------------------------
+# Mapping choice
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MappingChoice:
+    df: isa.Dataflow
+    vn: int                  # VN size (<= AH)
+    m_t: int                 # tile extents in the *search* orientation
+    k_t: int
+    n_t: int
+    n_kg: int                # concurrent reduction groups per invocation
+    n_nb: int                # concurrent n-blocks per invocation
+    dup: int                 # column duplication factor
+    order_w: int = 0         # Tab. III layout orders
+    order_i: int = 0
+    order_o: int = 0
+    strided: bool = False    # stationary c-stride pattern (Tab. VII)
+
+    @property
+    def concurrent(self) -> int:
+        return self.n_kg * self.n_nb * self.dup
+
+
+@dataclasses.dataclass
+class Schedule:
+    """Concrete per-tile cost streams for the perf model."""
+    choice: MappingChoice
+    gemm: Gemm
+    cfg: FeatherConfig
+    n_m: int
+    n_n: int
+    n_k: int
+    invocations_per_tile: int
+    t_steps: int             # streamed VNs per column per invocation
+    cycles_per_invocation: float
+    macs_total: int
+    minisa_bits_per_tile: float
+    minisa_layer_bits: float
+    loads_i_bytes: float
+    loads_w_bytes: float
+    store_bytes: float
+
+    @property
+    def n_tiles(self) -> int:
+        return self.n_m * self.n_n * self.n_k
+
+    @property
+    def total_invocations(self) -> int:
+        return self.n_tiles * self.invocations_per_tile
+
+    @property
+    def compute_cycles(self) -> float:
+        return self.total_invocations * self.cycles_per_invocation
+
+    # -- instruction volumes -------------------------------------------------
+    def minisa_storage_bytes(self) -> float:
+        return (self.minisa_layer_bits
+                + self.minisa_bits_per_tile * self.n_tiles) / 8.0
+
+    def micro_storage_bytes(self) -> float:
+        return MicroModel(self.cfg).storage_bytes(self.compute_cycles)
+
+    def micro_fetch_bytes(self) -> float:
+        return MicroModel(self.cfg).fetch_bytes(
+            self.compute_cycles, self.total_invocations)
+
+    # -- perf-model tile streams ----------------------------------------------
+    def tiles(self, control: str = "minisa",
+              max_tiles: int = 1024) -> list[perf.TileCost]:
+        """control in {'minisa', 'micro'} selects the fetch stream.
+
+        Tile streams longer than ``max_tiles`` are run-length merged (k
+        identical tiles -> one tile with k-scaled costs); for a uniform
+        stream the engine recurrence is linear, so merging preserves the
+        makespan to within one tile's skew while keeping the discrete-event
+        pass O(max_tiles).
+        """
+        micro = MicroModel(self.cfg)
+        out: list[perf.TileCost] = []
+        inv_cycles = self.cycles_per_invocation
+        tile_cycles = self.invocations_per_tile * inv_cycles
+        n_tiles = self.n_tiles
+        # distribute loads over the tiles that consume fresh data
+        loads_i_per = self.loads_i_bytes / max(n_tiles, 1)
+        loads_w_per = self.loads_w_bytes / max(n_tiles, 1)
+        macs_per = self.macs_total / max(n_tiles, 1)
+        out_tiles = self.n_m * self.n_n
+        store_per = self.store_bytes / max(out_tiles, 1)
+        o2s_cycles = (self.m_eff * self.n_eff) / self.cfg.aw
+        if control == "minisa":
+            fetch = self.minisa_bits_per_tile / 8.0
+        else:
+            fetch = micro.fetch_bytes(tile_cycles,
+                                      self.invocations_per_tile)
+
+        if n_tiles <= max_tiles:
+            k_period = self.n_k
+            for idx in range(n_tiles):
+                last_k = (idx + 1) % k_period == 0
+                extra = (self.minisa_layer_bits / 8.0
+                         if (idx == 0 and control == "minisa") else 0.0)
+                out.append(perf.TileCost(
+                    fetch_bytes=fetch + extra,
+                    load_bytes=loads_i_per + loads_w_per,
+                    compute_cycles=tile_cycles,
+                    out2stream_cycles=o2s_cycles if last_k else 0.0,
+                    store_bytes=store_per if last_k else 0.0,
+                    macs=macs_per))
+            return out
+
+        # merged stream: spread stores/commits uniformly (store engine is
+        # 4*AW B/cycle and almost never binding)
+        groups = max_tiles
+        base, rem = divmod(n_tiles, groups)
+        o2s_total = o2s_cycles * out_tiles
+        for gi in range(groups):
+            k = base + (1 if gi < rem else 0)
+            extra = (self.minisa_layer_bits / 8.0
+                     if (gi == 0 and control == "minisa") else 0.0)
+            out.append(perf.TileCost(
+                fetch_bytes=fetch * k + extra,
+                load_bytes=(loads_i_per + loads_w_per) * k,
+                compute_cycles=tile_cycles * k,
+                out2stream_cycles=o2s_total * k / n_tiles,
+                store_bytes=self.store_bytes * k / n_tiles,
+                macs=macs_per * k))
+        return out
+
+    @property
+    def m_eff(self) -> int:
+        return min(self.m_t, self.gemm_m)
+
+    @property
+    def n_eff(self) -> int:
+        return min(self.n_t, self.gemm_n)
+
+    @property
+    def gemm_m(self) -> int:
+        return self.gemm.n if self.choice.df == isa.Dataflow.IOS else self.gemm.m
+
+    @property
+    def gemm_n(self) -> int:
+        return self.gemm.m if self.choice.df == isa.Dataflow.IOS else self.gemm.n
+
+    @property
+    def m_t(self) -> int:
+        return self.choice.m_t
+
+    @property
+    def n_t(self) -> int:
+        return self.choice.n_t
+
+
+# ---------------------------------------------------------------------------
+# Schedule construction
+# ---------------------------------------------------------------------------
+
+def make_schedule(gemm: Gemm, choice: MappingChoice,
+                  cfg: FeatherConfig) -> Schedule | None:
+    """Lower a mapping choice to tile/invocation counts + byte streams.
+
+    Returns None if the choice is infeasible (capacity or shape).
+    """
+    ah, aw = cfg.ah, cfg.aw
+    vn = choice.vn
+    if vn > ah or vn < 1:
+        return None
+    # search orientation (IO-S transposes the GEMM)
+    ms, ks, ns = ((gemm.n, gemm.k, gemm.m)
+                  if choice.df == isa.Dataflow.IOS else
+                  (gemm.m, gemm.k, gemm.n))
+    m_t = min(choice.m_t, ms)
+    k_t = min(choice.k_t, ks)
+    n_t = min(choice.n_t, ns)
+    if min(m_t, k_t, n_t) < 1:
+        return None
+    if choice.concurrent > aw:
+        return None
+    # capacity feasibility (bytes; elem_bytes == 1)
+    if m_t * k_t > cfg.str_bytes:
+        return None
+    if k_t * n_t > cfg.sta_bytes:
+        return None
+    if m_t * n_t * cfg.acc_bytes > cfg.ob_bytes:
+        return None
+
+    n_m = math.ceil(ms / m_t)
+    n_n = math.ceil(ns / n_t)
+    n_k = math.ceil(ks / k_t)
+
+    kg_tiles = math.ceil(k_t / vn)          # reduction groups per tile
+    nb_tiles = math.ceil(n_t / vn)          # n-blocks per tile
+    # Rounds iterate the group lattice; groups beyond the tile extent are
+    # zero-padded (masked) columns, so rounds = ceil per axis.
+    invocations = (math.ceil(kg_tiles / max(choice.n_kg, 1))
+                   * math.ceil(nb_tiles / max(choice.n_nb, 1)))
+    t_steps = math.ceil(m_t / choice.dup)
+    # the ES T-field is bounded by D/AH; longer streams are expressed as
+    # several ExecuteStreaming instructions sharing one ExecuteMapping
+    # (sub-tiled execution, paper §IV-G)
+    t_max = max(cfg.vn_slots_per_col, 1)
+    es_per_invocation = math.ceil(t_steps / t_max)
+
+    # per-invocation cycles: stream T VNs x vn cycles each; stationary
+    # (re)load of vn VNs x vn elements per column is double-buffered and
+    # only exposed when longer than the previous invocation's streaming.
+    stream_cycles = t_steps * vn
+    sta_load = vn * vn
+    drain = vn + cfg.birrd_stages + 2
+    cycles_per_invocation = max(stream_cycles, sta_load) + drain
+
+    macs_total = gemm.macs  # useful MACs (padding excluded by definition)
+
+    # MINISA instruction bits
+    em_bits = cfg.bits_execute_mapping()
+    es_bits = cfg.bits_execute_streaming()
+    lay_bits = cfg.bits_set_layout()
+    load_bits = cfg.bits_load_store()
+    tile_bits = invocations * (em_bits + es_bits * es_per_invocation)
+    # per-layer: 3 layouts + loads (one Load per operand tile) + final writes
+    n_loads = n_m * n_k + n_n * n_k
+    n_writes = n_m * n_n
+    layer_bits = 3 * lay_bits + (n_loads + n_writes) * load_bits
+
+    # off-chip data movement (reload factors from buffer residency; n-outer,
+    # m-mid, k-inner loop order, OB accumulates over k)
+    i_bytes = ms * ks * cfg.elem_bytes
+    w_bytes = ks * ns * cfg.elem_bytes
+    i_resident = ms * ks <= cfg.str_bytes
+    w_panel_resident = ks * n_t <= cfg.sta_bytes
+    loads_i = i_bytes * (1 if i_resident else n_n)
+    loads_w = w_bytes * (1 if w_panel_resident else n_m)
+    store_bytes = ms * ns * cfg.elem_bytes
+
+    return Schedule(
+        choice=choice, gemm=gemm, cfg=cfg,
+        n_m=n_m, n_n=n_n, n_k=n_k,
+        invocations_per_tile=invocations,
+        t_steps=t_steps,
+        cycles_per_invocation=cycles_per_invocation,
+        macs_total=macs_total,
+        minisa_bits_per_tile=tile_bits,
+        minisa_layer_bits=layer_bits,
+        loads_i_bytes=loads_i,
+        loads_w_bytes=loads_w,
+        store_bytes=store_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration (with Tab. VII pruning heuristics)
+# ---------------------------------------------------------------------------
+
+def _pow2_tiles(lo: int, hi: int) -> list[int]:
+    out = []
+    v = lo
+    while v < hi:
+        out.append(v)
+        v *= 2
+    out.append(hi)
+    return sorted(set(out))
+
+
+def _vn_candidates(k: int, ah: int) -> list[int]:
+    """Balanced VN sizes: AH plus sizes that avoid zero-pad waste.
+
+    For K <= AH the exact K is best; for K > AH the balanced size
+    ceil(K / ceil(K / AH)) removes the ragged last VN (e.g. K=40, AH=16
+    gives vn=14 over 3 tiles, or vn=10 over 4 exact tiles).
+    """
+    cands = {min(ah, k)}
+    if k > ah:
+        base_tiles = math.ceil(k / ah)
+        for tiles in (base_tiles, base_tiles + 1):
+            cands.add(math.ceil(k / tiles))
+    return sorted(c for c in cands if 1 <= c <= ah)
+
+
+def _divisors_pow2ish(n: int) -> list[int]:
+    """Divisors of n (exact column coverage is required by Eq. 1)."""
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def enumerate_choices(gemm: Gemm, cfg: FeatherConfig,
+                      max_candidates: int = 512) -> Iterable[MappingChoice]:
+    ah, aw = cfg.ah, cfg.aw
+    for df in (isa.Dataflow.WOS, isa.Dataflow.IOS):
+        ms, ks, ns = ((gemm.n, gemm.k, gemm.m) if df == isa.Dataflow.IOS
+                      else (gemm.m, gemm.k, gemm.n))
+        # Heuristic from §III-C: IO-S when M > N, WO-S otherwise; we still
+        # search both but the pruning keeps the promising one cheap.
+        for vn in _vn_candidates(ks, ah):
+            kg_full = math.ceil(ks / vn)
+            # tiling: prefer the largest tiles that fit (fewer reloads)
+            k_opts = _pow2_tiles(min(vn, ks), min(ks, cfg.sta_bytes))
+            k_opts = [k for k in k_opts[-3:]]
+            for k_t in k_opts:
+                max_nt = max(1, cfg.sta_bytes // max(k_t, 1))
+                n_opts = _pow2_tiles(min(vn, ns), min(ns, max_nt))
+                for n_t in n_opts[-3:]:
+                    max_mt = max(1, min(cfg.str_bytes // max(k_t, 1),
+                                        cfg.ob_bytes // (max(n_t, 1)
+                                                         * cfg.acc_bytes),
+                                        cfg.vn_slots_per_col))
+                    m_opts = _pow2_tiles(1, min(ms, max_mt))
+                    for m_t in m_opts[-3:]:
+                        kg = math.ceil(min(k_t, ks) / vn)
+                        nb = math.ceil(min(n_t, ns) / vn)
+                        # Group-formation knobs.  Eq. 1's index arithmetic
+                        # forces exact column coverage: G_r = AW/n_kg,
+                        # G_c = n_nb and the duplication factor is
+                        # structurally d = G_r / G_c, so (n_kg, n_nb) must
+                        # divide the column space exactly and d is derived.
+                        for n_kg in _divisors_pow2ish(aw):
+                            if n_kg > 2 * kg:
+                                continue  # >half the columns masked: skip
+                            g_r = aw // n_kg
+                            for n_nb in _divisors_pow2ish(g_r):
+                                if n_nb > 2 * nb:
+                                    continue
+                                dup = g_r // n_nb
+                                yield MappingChoice(
+                                    df=df, vn=vn, m_t=m_t, k_t=k_t,
+                                    n_t=n_t, n_kg=n_kg, n_nb=n_nb,
+                                    dup=dup)
+
+
+# ---------------------------------------------------------------------------
+# Layout feasibility (step 6)
+# ---------------------------------------------------------------------------
+
+def _layouts_for(schedule: Schedule) -> tuple[layoutlib.VNLayout,
+                                              layoutlib.VNLayout,
+                                              layoutlib.VNLayout] | None:
+    """Derive (stationary, streaming, output) layouts realising the mapping
+    without bank conflicts.
+
+    FEATHER+'s all-to-all distribution makes the *stationary* side conflict-
+    free by construction (any resident VN can reach any column, §III-B), so
+    the binding constraints are:
+
+      streaming: the single-bank buffer serves one row (AW elements) per
+        cycle; at stream step t, element e, every column reads element e of
+        I_VN(m[t,a_w], j[a_w]) -- all of those must live in one buffer row
+        (multicast handles duplicates).  Satisfied by placing I_VNs with the
+        reduction rank innermost across columns (order with nr_L0 outermost,
+        red_L1 innermost) when n_kg*dup <= AW ... we *verify* by direct
+        address simulation below instead of trusting the construction.
+
+      output: the AW OB banks absorb one psum per bank per cycle; BIRRD can
+        permute, so legality is "<= AW distinct banks per drain cycle",
+        guaranteed when the O_VN layout's level-0 free factor >= concurrent
+        n-block width.  Also verified directly.
+    """
+    ch = schedule.choice
+    cfg = schedule.cfg
+    vn = ch.vn
+    kg = math.ceil(min(ch.k_t, schedule.gemm.k) / vn)
+    m_eff = schedule.m_eff
+    n_eff = schedule.n_eff
+    nb = math.ceil(n_eff / vn)
+
+    # candidate orders, most-promising first
+    stream_orders = [0b100, 0b010, 0b000, 0b001, 0b011, 0b101]
+    for o_i in stream_orders:
+        lay_i = layoutlib.layout_for(kg, m_eff, vn, cfg.aw, order=o_i,
+                                     nr_l0=min(cfg.aw, m_eff))
+        if _stream_feasible(lay_i, schedule):
+            break
+    else:
+        return None
+    lay_w = layoutlib.layout_for(kg, n_eff, vn, cfg.aw, order=ch.order_w)
+    lay_o = layoutlib.layout_for(math.ceil(n_eff / vn), m_eff, vn, cfg.aw,
+                                 order=ch.order_o)
+    if lay_w.rows_needed > cfg.d_sta or lay_i.rows_needed > cfg.d_str:
+        return None
+    if lay_o.rows_needed * cfg.acc_bytes > cfg.ob_bytes // cfg.aw * cfg.aw:
+        pass  # OB sized in words; capacity already checked in make_schedule
+    return lay_w, lay_i, lay_o
+
+
+def _stream_feasible(lay_i: layoutlib.VNLayout, schedule: Schedule,
+                     probe_steps: int = 4) -> bool:
+    """Single-bank streaming legality by direct address simulation."""
+    ch = schedule.choice
+    cfg = schedule.cfg
+    aw = cfg.aw
+    g_r = max(1, (aw // max(ch.n_kg, 1)))
+    g_c = max(1, ch.n_nb)
+    a_w = np.arange(aw)
+    j = a_w // g_r
+    for t in range(min(probe_steps, schedule.t_steps)):
+        m = ch.dup * t + (a_w % g_r) // g_c
+        valid = (m < schedule.m_eff) & (j < lay_i.red_l1)
+        if not valid.any():
+            continue
+        rows, _ = lay_i.address(np.where(valid, j, 0), np.where(valid, m, 0))
+        rows = rows[valid]
+        # all concurrent reads within one row -> single-bank OK (the vn
+        # elements advance row-by-row in lockstep for every column)
+        if np.unique(rows).size > 1:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Top-level search
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Plan:
+    gemm: Gemm
+    cfg: FeatherConfig
+    choice: MappingChoice
+    schedule: Schedule
+    layouts: tuple       # (W, I, O) VNLayouts
+    perf_minisa: perf.PerfResult
+    perf_micro: perf.PerfResult
+
+    @property
+    def speedup(self) -> float:
+        return self.perf_micro.cycles / max(self.perf_minisa.cycles, 1e-9)
+
+    def summary(self) -> dict:
+        s = self.schedule
+        return {
+            "workload": self.gemm.name or f"{self.gemm.m}x{self.gemm.k}x{self.gemm.n}",
+            "array": f"{self.cfg.ah}x{self.cfg.aw}",
+            "df": self.choice.df.name,
+            "vn": self.choice.vn,
+            "tile": (s.n_m, s.n_n, s.n_k),
+            "cycles_minisa": self.perf_minisa.cycles,
+            "cycles_micro": self.perf_micro.cycles,
+            "speedup": self.speedup,
+            "util_minisa": self.perf_minisa.utilization,
+            "stall_micro": self.perf_micro.stall_ifetch_frac,
+            "stall_minisa": self.perf_minisa.stall_ifetch_frac,
+            "instr_bytes_minisa": s.minisa_storage_bytes(),
+            "instr_bytes_micro": s.micro_storage_bytes(),
+            "instr_reduction": (s.micro_storage_bytes()
+                                / max(s.minisa_storage_bytes(), 1e-9)),
+            "data_bytes": self.gemm.data_bytes,
+        }
+
+
+def _prescore(sched: Schedule, cfg: FeatherConfig) -> float:
+    """Closed-form lower-bound latency for candidate ranking (the full
+    discrete-event pass runs only on the shortlist)."""
+    return max(sched.compute_cycles,
+               (sched.loads_i_bytes + sched.loads_w_bytes) / cfg.in_bw,
+               sched.store_bytes / cfg.out_bw,
+               sched.minisa_storage_bytes() / cfg.instr_bw)
+
+
+def search(gemm: Gemm, cfg: FeatherConfig, top_k: int = 8,
+           shortlist: int = 24,
+           fixed_input_vn: int | None = None,
+           fixed_input_order: int | None = None) -> Plan:
+    """Mapping-first, layout-second co-search returning the best Plan.
+
+    ``fixed_input_vn`` / ``fixed_input_order`` implement the paper's
+    *layout-constrained* mode (artifact item 6, §V step 7's inter-layer
+    compatibility): when layer i's output layout is already committed,
+    layer i+1 may only consider mappings whose input VN size matches and
+    whose input layout order equals the committed one.
+    """
+    candidates: list[tuple[float, MappingChoice, Schedule]] = []
+    seen = set()
+    for choice in enumerate_choices(gemm, cfg):
+        if fixed_input_vn is not None and choice.vn != fixed_input_vn:
+            continue
+        if fixed_input_order is not None:
+            choice = dataclasses.replace(choice,
+                                         order_i=fixed_input_order)
+        key = dataclasses.astuple(choice)
+        if key in seen:
+            continue
+        seen.add(key)
+        sched = make_schedule(gemm, choice, cfg)
+        if sched is None:
+            continue
+        candidates.append((_prescore(sched, cfg), choice, sched))
+    if not candidates:
+        raise ValueError(f"no feasible mapping for {gemm} on "
+                         f"{cfg.ah}x{cfg.aw}")
+    candidates.sort(key=lambda x: x[0])
+    scored = []
+    for _, choice, sched in candidates[:shortlist]:
+        res = perf.simulate(sched.tiles("minisa"), cfg)
+        scored.append((res.cycles, choice, sched))
+    scored.sort(key=lambda x: x[0])
+    # layout-second: walk the best mappings until one has a feasible layout
+    for cycles, choice, sched in scored[:max(top_k, 1)]:
+        layouts = _layouts_for(sched)
+        if layouts is None:
+            continue
+        res_minisa = perf.simulate(sched.tiles("minisa"), cfg)
+        res_micro = perf.simulate(sched.tiles("micro"), cfg)
+        return Plan(gemm=gemm, cfg=cfg, choice=choice, schedule=sched,
+                    layouts=layouts, perf_minisa=res_minisa,
+                    perf_micro=res_micro)
+    # fall back: accept best mapping with default layouts (always functional;
+    # perf model unchanged -- conflicts would cost extra cycles on silicon)
+    cycles, choice, sched = scored[0]
+    vn = choice.vn
+    kg = math.ceil(min(choice.k_t, gemm.k) / vn)
+    lay_w = layoutlib.layout_for(kg, sched.n_eff, vn, cfg.aw)
+    lay_i = layoutlib.layout_for(kg, sched.m_eff, vn, cfg.aw)
+    lay_o = layoutlib.layout_for(math.ceil(sched.n_eff / vn), sched.m_eff,
+                                 vn, cfg.aw)
+    return Plan(gemm=gemm, cfg=cfg, choice=choice, schedule=sched,
+                layouts=(lay_w, lay_i, lay_o),
+                perf_minisa=perf.simulate(sched.tiles("minisa"), cfg),
+                perf_micro=perf.simulate(sched.tiles("micro"), cfg))

@@ -1,0 +1,103 @@
+"""Analytical performance model: the paper's "cycle-accurate analytical
+model with a 5-engine asynchronous execution simulator" (paper §VI-A,
+appendix).
+
+Engines (inferred from Fig. 13's breakdown components):
+
+  IFETCH      -- off-chip instruction interface, cfg.instr_bw B/cycle
+  LOAD        -- off-chip input/weight loads, cfg.in_bw B/cycle
+  COMPUTE     -- the NEST array (streaming + drain cycles per invocation)
+  OUT2STREAM  -- OB -> streaming/stationary buffer commit (AW elems/cycle)
+  STORE       -- off-chip output stores, cfg.out_bw B/cycle
+
+Tiles execute in order.  Instruction fetch and operand loads for tile i+1
+overlap with compute of tile i (double buffering); a tile's compute cannot
+start until its instructions and operands have arrived, which is exactly how
+instruction-fetch stalls emerge at scale (Tab. I).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class TileCost:
+    """Everything the engines need to know about one schedulable unit."""
+    fetch_bytes: float = 0.0        # instruction bytes for this tile
+    load_bytes: float = 0.0         # fresh off-chip operand bytes
+    compute_cycles: float = 0.0     # NEST busy cycles
+    out2stream_cycles: float = 0.0  # OB commit cycles (on-chip)
+    store_bytes: float = 0.0        # off-chip output bytes
+    macs: float = 0.0               # useful MACs (utilization numerator)
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfResult:
+    cycles: float
+    macs: float
+    peak_macs_per_cycle: float
+    busy: dict[str, float]          # per-engine busy cycles
+    stall_ifetch_frac: float        # fraction of total cycles attributable
+                                    # to waiting on instruction fetch
+    cycles_no_fetch: float
+
+    @property
+    def utilization(self) -> float:
+        if self.cycles <= 0:
+            return 0.0
+        return self.macs / (self.peak_macs_per_cycle * self.cycles)
+
+    def breakdown(self) -> dict[str, float]:
+        out = dict(self.busy)
+        out["total"] = self.cycles
+        out["ifetch_stall"] = self.stall_ifetch_frac * self.cycles
+        return out
+
+
+def _simulate(tiles: Sequence[TileCost], instr_bw: float, in_bw: float,
+              out_bw: float, out2stream: bool = True) -> tuple[float, dict]:
+    """Event-driven pass over the tile sequence; returns (makespan, busy)."""
+    t_fetch = 0.0      # when the fetch engine becomes free
+    t_load = 0.0
+    t_compute = 0.0
+    t_commit = 0.0
+    t_store = 0.0
+    busy = {"ifetch": 0.0, "load": 0.0, "compute": 0.0,
+            "out2stream": 0.0, "store": 0.0}
+    for tile in tiles:
+        fetch_time = tile.fetch_bytes / instr_bw if instr_bw > 0 else 0.0
+        load_time = tile.load_bytes / in_bw if in_bw > 0 else 0.0
+        # fetch + load proceed independently and may prefetch ahead
+        t_fetch = t_fetch + fetch_time
+        t_load = t_load + load_time
+        busy["ifetch"] += fetch_time
+        busy["load"] += load_time
+        start = max(t_compute, t_fetch, t_load)
+        t_compute = start + tile.compute_cycles
+        busy["compute"] += tile.compute_cycles
+        if out2stream and tile.out2stream_cycles:
+            t_commit = max(t_commit, t_compute) + tile.out2stream_cycles
+            busy["out2stream"] += tile.out2stream_cycles
+        if tile.store_bytes:
+            store_time = tile.store_bytes / out_bw if out_bw > 0 else 0.0
+            t_store = max(t_store, max(t_commit, t_compute)) + store_time
+            busy["store"] += store_time
+    makespan = max(t_compute, t_commit, t_store, t_fetch, t_load)
+    return makespan, busy
+
+
+def simulate(tiles: Sequence[TileCost], cfg) -> PerfResult:
+    """cfg: FeatherConfig."""
+    total, busy = _simulate(tiles, cfg.instr_bw, cfg.in_bw, cfg.out_bw)
+    # Counterfactual run with free instruction delivery isolates the
+    # fetch-stall share (the paper's "explicit stall of fetching
+    # instructions", Tab. I).
+    no_fetch, _ = _simulate(tiles, float("inf"), cfg.in_bw, cfg.out_bw)
+    macs = sum(t.macs for t in tiles)
+    stall = 0.0 if total <= 0 else max(0.0, (total - no_fetch) / total)
+    return PerfResult(cycles=total, macs=macs,
+                      peak_macs_per_cycle=cfg.peak_macs_per_cycle,
+                      busy=busy, stall_ifetch_frac=stall,
+                      cycles_no_fetch=no_fetch)

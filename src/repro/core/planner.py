@@ -1,0 +1,126 @@
+"""Model-graph -> MINISA planner (the paper's ACT-ecosystem integration,
+§V-A, adapted to this framework's model zoo).
+
+The paper plugs the FEATHER+ mapper into ACT's graph-level analysis: ACT
+finds layout-flexible regions, the mapper does layout-constrained search per
+layer, and consecutive layers elide SetOVNLayout(i)/SetIVNLayout(i+1).
+
+Here the "graph" is the per-layer GEMM stream of one of our assigned
+architectures (see configs/<arch>.py:gemm_workloads).  The planner:
+
+  1. runs the mapper per distinct GEMM shape (shapes repeat across layers,
+     so plans are memoised -- the framework-level analogue of layout
+     regions),
+  2. applies the inter-layer elision discount to the MINISA byte count
+     (chained layers skip one Set*VNLayout + the intermediate Load/Write
+     pair when the producer's output layout already matches),
+  3. aggregates instruction traffic, stall fractions, speedup, utilization
+     per architecture x shape cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.configs.feather import FeatherConfig
+from repro.core import mapper as mapperlib
+from repro.core.mapper import Gemm
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmOp:
+    """One GEMM in the model graph."""
+    gemm: Gemm
+    layer: str = ""
+    chained: bool = False   # consumes the previous op's output on-chip
+    activation: str = "none"
+
+
+@dataclasses.dataclass
+class ArchPlan:
+    arch: str
+    shape: str
+    cfg: FeatherConfig
+    ops: list[GemmOp]
+    plans: dict[tuple, mapperlib.Plan]
+
+    # aggregates
+    total_macs: float = 0.0
+    cycles_minisa: float = 0.0
+    cycles_micro: float = 0.0
+    minisa_bytes: float = 0.0
+    micro_bytes: float = 0.0
+    data_bytes: float = 0.0
+    elided_bytes: float = 0.0
+
+    @property
+    def speedup(self) -> float:
+        return self.cycles_micro / max(self.cycles_minisa, 1e-9)
+
+    @property
+    def instr_reduction(self) -> float:
+        return self.micro_bytes / max(self.minisa_bytes, 1e-9)
+
+    @property
+    def utilization(self) -> float:
+        peak = self.cfg.peak_macs_per_cycle
+        return self.total_macs / max(peak * self.cycles_minisa, 1e-9)
+
+    @property
+    def instr_to_data_minisa(self) -> float:
+        return self.minisa_bytes / max(self.data_bytes, 1e-9)
+
+    @property
+    def instr_to_data_micro(self) -> float:
+        return self.micro_bytes / max(self.data_bytes, 1e-9)
+
+    def summary(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape,
+            "array": f"{self.cfg.ah}x{self.cfg.aw}",
+            "n_gemms": sum(op.gemm.count for op in self.ops),
+            "n_unique": len(self.plans),
+            "macs": self.total_macs,
+            "cycles_minisa": self.cycles_minisa,
+            "cycles_micro": self.cycles_micro,
+            "speedup": self.speedup,
+            "utilization": self.utilization,
+            "instr_bytes_minisa": self.minisa_bytes,
+            "instr_bytes_micro": self.micro_bytes,
+            "instr_reduction": self.instr_reduction,
+            "instr_to_data_minisa": self.instr_to_data_minisa,
+            "instr_to_data_micro": self.instr_to_data_micro,
+            "elided_bytes": self.elided_bytes,
+        }
+
+
+def plan_model(arch: str, shape: str, ops: Sequence[GemmOp],
+               cfg: FeatherConfig) -> ArchPlan:
+    plans: dict[tuple, mapperlib.Plan] = {}
+    out = ArchPlan(arch=arch, shape=shape, cfg=cfg, ops=list(ops),
+                   plans=plans)
+    lay_bits = cfg.bits_set_layout()
+    load_bits = cfg.bits_load_store()
+    for op in ops:
+        g = op.gemm
+        key = (g.m, g.k, g.n)
+        if key not in plans:
+            plans[key] = mapperlib.search(g, cfg)
+        plan = plans[key]
+        sched = plan.schedule
+        count = g.count
+        out.total_macs += g.macs * count
+        out.cycles_minisa += plan.perf_minisa.cycles * count
+        out.cycles_micro += plan.perf_micro.cycles * count
+        minisa_b = sched.minisa_storage_bytes()
+        if op.chained:
+            # SetIVNLayout elision + skipped intermediate Load/Write pair
+            elide_bits = lay_bits + 2 * load_bits
+            minisa_b = max(0.0, minisa_b - elide_bits / 8.0)
+            out.elided_bytes += elide_bits / 8.0 * count
+        out.minisa_bytes += minisa_b * count
+        out.micro_bytes += sched.micro_storage_bytes() * count
+        out.data_bytes += g.data_bytes * count
+    return out

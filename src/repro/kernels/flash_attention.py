@@ -1,0 +1,97 @@
+"""Flash attention (causal/full) as a Pallas TPU kernel.
+
+Grid: (batch*heads, Q blocks, KV blocks); KV is the innermost sequential
+dimension.  Running (max, sum, acc) live in VMEM scratch and the output
+block is finalised on the last KV step -- the classic online-softmax
+recurrence, with causal block skipping via pl.when.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  n_kv: int, bq: int, bkv: int, causal: bool, scale: float,
+                  kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        q = q_ref[0]                       # [bq, d]
+        k = k_ref[0]                       # [bkv, d]
+        v = v_ref[0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        if kv_len % bkv:
+            # zero-padded KV tail (ops.py raggedness) must not contribute
+            s = jnp.where(kpos < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip fully-masked blocks: kv block strictly after the q block
+        pl.when(ki * bkv <= qi * bq + bq - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == n_kv - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bkv",
+                                             "interpret", "kv_len"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bkv: int = 128,
+                    interpret: bool = False,
+                    kv_len: int | None = None) -> jax.Array:
+    """q, k, v: [BH, S, d] (heads folded into batch); returns [BH, S, d]."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % bq == 0 and sk % bkv == 0, (sq, sk, bq, bkv)
+    n_kv = sk // bkv
+    scale = d ** -0.5
+    kernel = functools.partial(
+        _flash_kernel, n_kv=n_kv, bq=bq, bkv=bkv, causal=causal, scale=scale,
+        kv_len=kv_len if kv_len is not None else sk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, sq // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

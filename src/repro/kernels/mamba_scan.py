@@ -1,0 +1,81 @@
+"""Selective-scan (Mamba-1 inner recurrence) as a Pallas TPU kernel.
+
+    h_t = da_t * h_{t-1} + dbx_t          (elementwise in [d_blk, n])
+    y_t = sum_n c_t[n] * h_t[:, n]
+
+Grid: (batch, channel blocks, L chunks); the L-chunk dimension is innermost/
+sequential, the carried state h lives in a VMEM scratch that persists across
+chunk steps (TPU grid iteration is sequential per core).  Inside a chunk the
+recurrence is a fori_loop over time in registers/VMEM -- the HBM<->VMEM
+traffic is one read of (da, dbx, c) and one write of y per element, i.e. the
+kernel is memory-bound by design, matching the SSM roofline.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(da_ref, dbx_ref, c_ref, h0_ref, y_ref, hout_ref, h_ref, *,
+                 chunk: int, n_chunks: int):
+    li = pl.program_id(2)
+
+    @pl.when(li == 0)
+    def _init():
+        h_ref[...] = h0_ref[0]
+
+    def step(t, _):
+        h = h_ref[...]
+        h = da_ref[0, t] * h + dbx_ref[0, t]       # [d_blk, n]
+        h_ref[...] = h
+        y_ref[0, t] = jnp.sum(h * c_ref[0, t][None, :],
+                              axis=-1).astype(y_ref.dtype)
+        return ()
+
+    jax.lax.fori_loop(0, chunk, step, ())
+
+    @pl.when(li == n_chunks - 1)
+    def _store():
+        hout_ref[0] = h_ref[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("d_blk", "chunk", "interpret"))
+def mamba_scan(da: jax.Array, dbx: jax.Array, c: jax.Array, h0: jax.Array,
+               *, d_blk: int = 256, chunk: int = 64,
+               interpret: bool = False):
+    """da, dbx: [B, L, D, N]; c: [B, L, N]; h0: [B, D, N].
+
+    Returns (y [B, L, D], h_last [B, D, N]).
+    """
+    b, l, d, n = da.shape
+    d_blk = min(d_blk, d)
+    chunk = min(chunk, l)
+    assert d % d_blk == 0 and l % chunk == 0, (d, d_blk, l, chunk)
+    n_chunks = l // chunk
+    kernel = functools.partial(_scan_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(b, d // d_blk, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d_blk, n), lambda bi, di, li: (bi, li, di, 0)),
+            pl.BlockSpec((1, chunk, d_blk, n), lambda bi, di, li: (bi, li, di, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, di, li: (bi, li, 0)),
+            pl.BlockSpec((1, d_blk, n), lambda bi, di, li: (bi, di, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, d_blk), lambda bi, di, li: (bi, li, di)),
+            pl.BlockSpec((1, d_blk, n), lambda bi, di, li: (bi, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l, d), da.dtype),
+            jax.ShapeDtypeStruct((b, d, n), h0.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((d_blk, n), jnp.float32)],
+        interpret=interpret,
+    )(da, dbx, c, h0)
+    return y, h_last

@@ -1,0 +1,102 @@
+"""NEST GEMM: the paper's compute atom as a Pallas TPU kernel.
+
+TPU adaptation of FEATHER+'s NEST (DESIGN.md §2): the AH-element PE dot
+product becomes the K-block of an MXU-tiled matmul; a NEST column's
+"VN group" (vn stationary VNs x T streamed VNs) becomes one (bm x bk) x
+(bk x bn) VMEM tile-pair; BIRRD's reorder-in-reduction becomes the output
+BlockSpec index map, which lets the caller pick the *output layout*
+(row-major or block-transposed) at reduction time for free -- the paper's
+(dataflow, layout) co-switching insight expressed in Mosaic terms.
+
+Grid: (M/bm, N/bn, K/bk); K is innermost (sequential on TPU) and the output
+block is revisited across it, accumulating in a VMEM fp32 scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _nest_gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    """One (bm, bn) output tile; accumulates over the K grid dimension."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU: low-precision inputs, fp32 accumulate
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
+                                             "out_dtype", "out_block_t"))
+def nest_gemm(x: jax.Array, w: jax.Array, *, bm: int = 128, bn: int = 128,
+              bk: int = 128, interpret: bool = False, out_dtype=None,
+              out_block_t: bool = False) -> jax.Array:
+    """O = X[M, K] @ W[K, N]; shapes must divide by the blocks (ops.py pads).
+
+    out_block_t=True stores output *tiles* to transposed tile coordinates
+    (O_t[j, i] blocks) -- the BIRRD-style free output re-layout: the next
+    consumer can read a column-major-of-blocks layout with zero extra
+    passes.  O then has shape (N//bn * bn rows of blocks ...) == (N, M) with
+    per-block transposition applied.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        f"{(m, k, n)} not divisible by blocks {(bm, bk, bn)}"
+    n_k = k // bk
+    out_dtype = out_dtype or x.dtype
+
+    if out_block_t:
+        def kernel(x_ref, w_ref, o_ref, acc_ref):
+            k_idx = pl.program_id(2)
+
+            @pl.when(k_idx == 0)
+            def _init():
+                acc_ref[...] = jnp.zeros_like(acc_ref)
+
+            acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                                    preferred_element_type=jnp.float32)
+
+            @pl.when(k_idx == n_k - 1)
+            def _store():
+                o_ref[...] = acc_ref[...].T.astype(o_ref.dtype)
+
+        return pl.pallas_call(
+            kernel,
+            grid=(m // bm, n // bn, n_k),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bn, bm), lambda i, j, kk: (j, i)),
+            out_shape=jax.ShapeDtypeStruct((n, m), out_dtype),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            interpret=interpret,
+        )(x, w)
+
+    return pl.pallas_call(
+        functools.partial(_nest_gemm_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

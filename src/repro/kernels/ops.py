@@ -1,0 +1,90 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run with interpret=True (the kernel body
+executes in Python, validating semantics); on TPU the same call sites lower
+to Mosaic.  ``interpret=None`` auto-detects.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mamba_scan as _ms
+from repro.kernels import nest_gemm as _ng
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.devices()[0].platform != "tpu"
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def nest_gemm(x, w, *, bm=128, bn=128, bk=128, interpret=None,
+              out_dtype=None, out_block_t=False):
+    """Ragged-shape-safe NEST GEMM (zero-pads to block multiples, the
+    paper's implicit zero-padding semantics)."""
+    interpret = _auto_interpret(interpret)
+    m, k = x.shape
+    n = w.shape[1]
+    bm_, bn_, bk_ = (min(bm, _rnd(m)), min(bn, _rnd(n)), min(bk, _rnd(k)))
+    x, _ = _pad_to(x, 0, bm_)
+    x, _ = _pad_to(x, 1, bk_)
+    w, _ = _pad_to(w, 0, bk_)
+    w, _ = _pad_to(w, 1, bn_)
+    o = _ng.nest_gemm(x, w, bm=bm_, bn=bn_, bk=bk_, interpret=interpret,
+                      out_dtype=out_dtype, out_block_t=out_block_t)
+    if out_block_t:
+        return o[:n, :m]
+    return o[:m, :n]
+
+
+def _rnd(x):
+    """Largest power of two <= x (min 8) for block sizing on small shapes."""
+    p = 8
+    while p * 2 <= x:
+        p *= 2
+    return p
+
+
+def flash_attention(q, k, v, *, causal=True, bq=128, bkv=128,
+                    interpret=None):
+    """q, k, v: [B, S, H, D] -> [B, S, H, D]."""
+    interpret = _auto_interpret(interpret)
+    b, s, h, d = q.shape
+    sk = k.shape[1]
+    bq_, bkv_ = min(bq, _rnd(s)), min(bkv, _rnd(sk))
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    qf, pq = _pad_to(qf, 1, bq_)
+    kf, _ = _pad_to(kf, 1, bkv_)
+    vf, _ = _pad_to(vf, 1, bkv_)
+    # padded KV columns must not contribute: they are causally masked for
+    # causal=True; for full attention, mask via large-negative k rows
+    o = _fa.flash_attention(qf, kf, vf, causal=causal, bq=bq_, bkv=bkv_,
+                            interpret=interpret, kv_len=sk)
+    o = o[:, :s].reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    return o
+
+
+def mamba_scan(da, dbx, c, h0, *, d_blk=256, chunk=64, interpret=None):
+    interpret = _auto_interpret(interpret)
+    b, l, d, n = da.shape
+    d_blk = min(d_blk, _rnd(d))
+    chunk = min(chunk, _rnd(l))
+    assert d % d_blk == 0 and l % chunk == 0, (
+        "mamba_scan requires power-of-two-friendly shapes; "
+        f"got d={d}, l={l}")
+    return _ms.mamba_scan(da, dbx, c, h0, d_blk=d_blk, chunk=chunk,
+                          interpret=interpret)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def nest_gemm_ref(x: jax.Array, w: jax.Array, out_dtype=None,
+                  out_block_t: bool = False, bm: int = 128,
+                  bn: int = 128) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    o = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if out_block_t:
+        # per-block transpose at swapped block coordinates == global
+        # transpose (the BIRRD-free-relayout case)
+        o = o.T
+    return o.astype(out_dtype)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    if causal:
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mamba_scan_ref(da, dbx, c, h0):
+    """Sequential reference recurrence."""
+    def step(h, xs):
+        da_t, dbx_t, c_t = xs
+        h = da_t * h + dbx_t                       # [B, D, N]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h_last, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (jnp.moveaxis(da, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(dbx, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(c, 1, 0).astype(jnp.float32)))
+    return jnp.moveaxis(ys, 0, 1).astype(da.dtype), h_last.astype(h0.dtype)

@@ -1,0 +1,239 @@
+"""Unified model facade: build_model(cfg) -> Model with init / loss /
+prefill / decode_step, plus abstract cache/batch specs for the dry-run and
+logical-axes pytrees for sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, ssm_lm, transformer
+from repro.models.common import Maker
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def _dtype(cfg):
+    return DTYPES[cfg.dtype]
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ---------------- parameters ----------------
+    def init(self, key) -> Any:
+        mk = Maker(mode="init", key=key, dtype=_dtype(self.cfg))
+        return self._params(mk)
+
+    def axes(self) -> Any:
+        return self._params(Maker(mode="axes"))
+
+    def _params(self, mk: Maker):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.decoder_params(mk, self.cfg)
+        if f == "ssm":
+            return ssm_lm.ssm_lm_params(mk, self.cfg)
+        if f == "hybrid":
+            return hybrid.hybrid_params(mk, self.cfg)
+        if f == "encdec":
+            return encdec.encdec_params(mk, self.cfg)
+        raise ValueError(f)
+
+    # ---------------- forward dispatch ----------------
+    def _forward(self, params, tokens, mode, cache=None, position_idx=None,
+                 prefix_embeds=None, frames=None, remat=True):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.decoder_forward(
+                params, self.cfg, tokens, mode=mode, cache=cache,
+                position_idx=position_idx, prefix_embeds=prefix_embeds,
+                remat=remat)
+        if f == "ssm":
+            return ssm_lm.ssm_lm_forward(
+                params, self.cfg, tokens, mode=mode, cache=cache,
+                position_idx=position_idx, remat=remat)
+        if f == "hybrid":
+            return hybrid.hybrid_forward(
+                params, self.cfg, tokens, mode=mode, cache=cache,
+                position_idx=position_idx, remat=remat)
+        if f == "encdec":
+            if mode == "decode":
+                return encdec.decode_stack(
+                    params, self.cfg, tokens, None, mode=mode, cache=cache,
+                    position_idx=position_idx)
+            enc_out = encdec.encode(params, self.cfg, frames,
+                                    remat=(mode == "train" and remat))
+            return encdec.decode_stack(params, self.cfg, tokens, enc_out,
+                                       mode=mode, remat=remat)
+        raise ValueError(f)
+
+    # ---------------- training ----------------
+    def loss(self, params, batch, remat: bool = True):
+        """Next-token cross-entropy; returns (loss, metrics)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        logits, _, aux = self._forward(
+            params, tokens, "train",
+            prefix_embeds=batch.get("patches"),
+            frames=batch.get("frames"), remat=remat)
+        # align: predict token[t+1] from position t
+        prefix = 0
+        if cfg.family == "vlm" and "patches" in batch:
+            prefix = batch["patches"].shape[1]
+            logits = logits[:, prefix:]
+        logits = logits[:, :-1].astype(jnp.float32)
+        targets = tokens[:, 1:]
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None],
+                                   axis=-1)[..., 0]
+        nll = (logz - gold).mean()
+        loss = nll + 0.01 * aux
+        return loss, {"nll": nll, "aux": aux,
+                      "perplexity": jnp.exp(nll)}
+
+    # ---------------- serving ----------------
+    def prefill(self, params, tokens, prefix_embeds=None, frames=None):
+        logits, cache, _ = self._forward(
+            params, tokens, "prefill", prefix_embeds=prefix_embeds,
+            frames=frames, remat=False)
+        return logits[:, -1], cache
+
+    def decode_step(self, params, tokens, cache, position_idx):
+        logits, cache, _ = self._forward(
+            params, tokens, "decode", cache=cache,
+            position_idx=position_idx, remat=False)
+        return logits[:, -1], cache
+
+    # ---------------- abstract specs (dry-run) ----------------
+    def batch_spec(self, shape: ShapeConfig) -> dict:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        dt = _dtype(cfg)
+        spec = {}
+        if shape.kind == "decode":
+            spec["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+            spec["position"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+        else:
+            text = s
+            if cfg.family == "vlm":
+                text = s - cfg.frontend_len
+                spec["patches"] = jax.ShapeDtypeStruct(
+                    (b, cfg.frontend_len, cfg.d_model), dt)
+            if cfg.family == "encdec":
+                spec["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.frontend_len, cfg.d_model), dt)
+            spec["tokens"] = jax.ShapeDtypeStruct((b, text), jnp.int32)
+        return spec
+
+    def cache_spec(self, batch: int, max_len: int) -> Any:
+        """Abstract decode cache (ShapeDtypeStruct pytree)."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        L = cfg.num_layers - cfg.first_k_dense
+        sds = jax.ShapeDtypeStruct
+        if cfg.family in ("dense", "moe", "vlm"):
+            if cfg.mla:
+                layer = (sds((L, batch, max_len, cfg.kv_lora_rank), dt),
+                         sds((L, batch, max_len, cfg.qk_rope_head_dim), dt))
+            else:
+                kvshape = (L, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+                layer = (sds(kvshape, dt), sds(kvshape, dt))
+            out = {"layers": layer}
+            if cfg.first_k_dense:
+                k = cfg.first_k_dense
+                if cfg.mla:
+                    out["dense"] = (
+                        sds((k, batch, max_len, cfg.kv_lora_rank), dt),
+                        sds((k, batch, max_len, cfg.qk_rope_head_dim), dt))
+                else:
+                    kd = (k, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+                    out["dense"] = (sds(kd, dt), sds(kd, dt))
+            return out
+        if cfg.family == "ssm":
+            di = cfg.ssm_d_inner
+            return {"layers": {
+                "conv": sds((L, batch, cfg.ssm_d_conv - 1, di), dt),
+                "ssm": sds((L, batch, di, cfg.ssm_state), jnp.float32)}}
+        if cfg.family == "hybrid":
+            di = cfg.ssm_d_inner
+            gnn = 2 * cfg.ssm_groups * cfg.ssm_state
+            hd = di // cfg.ssm_heads
+            n_attn = cfg.num_layers // cfg.attn_every
+            kvshape = (n_attn, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+            return {
+                "mamba": {
+                    "conv": sds((cfg.num_layers, batch, cfg.ssm_d_conv - 1,
+                                 di + gnn), dt),
+                    "ssm": sds((cfg.num_layers, batch, cfg.ssm_heads, hd,
+                                cfg.ssm_state), jnp.float32)},
+                "kv": (sds(kvshape, dt), sds(kvshape, dt))}
+        if cfg.family == "encdec":
+            kvshape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads,
+                       cfg.head_dim)
+            cross = (cfg.num_layers, batch, cfg.frontend_len,
+                     cfg.num_kv_heads, cfg.head_dim)
+            return {"layers": {"self": (sds(kvshape, dt), sds(kvshape, dt)),
+                               "cross": (sds(cross, dt), sds(cross, dt))}}
+        raise ValueError(cfg.family)
+
+    def cache_axes(self) -> Any:
+        """Logical axes mirroring cache_spec."""
+        cfg = self.cfg
+        kv_ax = ("layers", "batch", "kvseq", "kv_heads", "head_dim")
+        if cfg.family in ("dense", "moe", "vlm"):
+            if cfg.mla:
+                layer = (("layers", "batch", "kvseq", "kv_lora"),
+                         ("layers", "batch", "kvseq", "head_dim"))
+            else:
+                layer = (kv_ax, kv_ax)
+            out = {"layers": layer}
+            if cfg.first_k_dense:
+                out["dense"] = layer
+            return out
+        if cfg.family == "ssm":
+            return {"layers": {
+                "conv": ("layers", "batch", "conv", "ssm_inner"),
+                "ssm": ("layers", "batch", "ssm_inner", "ssm_state")}}
+        if cfg.family == "hybrid":
+            return {
+                "mamba": {
+                    "conv": ("layers", "batch", "conv", "ssm_inner"),
+                    "ssm": ("layers", "batch", "ssm_heads", "head_dim",
+                            "ssm_state")},
+                "kv": (kv_ax, kv_ax)}
+        if cfg.family == "encdec":
+            return {"layers": {"self": (kv_ax, kv_ax),
+                               "cross": (kv_ax, kv_ax)}}
+        raise ValueError(cfg.family)
+
+    # ---------------- parameter counting ----------------
+    def param_count(self) -> int:
+        shapes = jax.eval_shape(
+            lambda k: self.init(k), jax.random.PRNGKey(0))
+        return sum(int(math.prod(x.shape))
+                   for x in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE discounts inactive experts)."""
+        total = self.param_count()
+        cfg = self.cfg
+        if not cfg.moe_enabled:
+            return total
+        # expert params: 3 matrices per expert in gated MLPs
+        gated = cfg.mlp_act in ("swiglu", "geglu")
+        per_expert = (3 if gated else 2) * cfg.d_model * cfg.moe_d_ff
+        n_scan = cfg.num_layers - cfg.first_k_dense
+        inactive = (cfg.num_experts - cfg.experts_per_token)
+        return total - n_scan * inactive * per_expert
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg)

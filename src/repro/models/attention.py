@@ -1,0 +1,301 @@
+"""Attention variants: GQA/MQA (optionally biased), blockwise (online-
+softmax) attention for long prefill, sequence-sharded flash-decode, and
+DeepSeek-style MLA with an absorbed latent-cache decode path.
+
+Memory discipline (needed for the 32k prefill / 32k-500k decode dry-runs):
+
+  * train/short prefill: plain masked attention (best compile time);
+  * long prefill (> BLOCKWISE_THRESHOLD): lax.scan over KV chunks with a
+    running (max, sum, acc) -- O(S * chunk) score memory;
+  * decode: one-token query against the full cache.  The cache's sequence
+    axis is sharded over the 'model' mesh axis (SP for inference); XLA
+    inserts the partial-softmax all-reduces.  This is what makes e.g.
+    qwen2-72b decode_32k fit (53 GB of KV per chip otherwise).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import Maker, dense, dense_params, rope
+
+BLOCKWISE_THRESHOLD = 8192
+BLOCKWISE_CHUNK = 1024
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def gqa_params(mk: Maker, cfg) -> dict:
+    d = cfg.d_model
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": mk.param((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": mk.param((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": mk.param((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": mk.param((h, hd, d), ("heads", "head_dim", "embed")),
+        **({"bq": mk.param((h, hd), ("heads", "head_dim"), init="zeros"),
+            "bk": mk.param((kv, hd), ("kv_heads", "head_dim"), init="zeros"),
+            "bv": mk.param((kv, hd), ("kv_heads", "head_dim"), init="zeros")}
+           if getattr(cfg, "qkv_bias", False) else {}),
+    }
+
+
+def _project_qkv(p, cfg, x, positions, use_rope=True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k, num_heads):
+    """[b, s, kv, d] -> [b, s, h, d] by group repetition."""
+    b, s, kv, d = k.shape
+    if kv == num_heads:
+        return k
+    rep = num_heads // kv
+    return jnp.repeat(k, rep, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# Dense masked attention (train / short prefill)
+# ---------------------------------------------------------------------------
+
+def _attend_full(q, k, v, causal: bool, q_offset: int = 0):
+    """Grouped (GQA) attention without materialising repeated K/V
+    (§Perf iteration 3: repeat_kv inflated decode/prefill KV traffic by
+    H/KVH, e.g. 8x on qwen2)."""
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, d)
+    scale = d ** -0.5
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) * scale
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(sk)
+        mask = kpos[None, :] <= qpos[:, None]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention: scan over KV chunks with online softmax
+# ---------------------------------------------------------------------------
+
+def _attend_blockwise(q, k, v, causal: bool, chunk: int = BLOCKWISE_CHUNK):
+    from repro.dist.sharding import constrain_batch
+    # anchor KV to (batch->dp, seq, heads->model) before chunk-reshaping:
+    # otherwise the scan's per-chunk dynamic-slice loses the head sharding
+    # and gathers the full KV each iteration (§Perf iteration 7)
+    q = constrain_batch(q, extra=("", "model"))
+    k = constrain_batch(k, extra=("", "model"))
+    v = constrain_batch(v, extra=("", "model"))
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    dv = v.shape[-1]            # MLA: value head_dim != qk head_dim
+    n_chunks = max(1, sk // chunk)
+    chunk = sk // n_chunks
+    scale = d ** -0.5
+    kc = k.reshape(b, n_chunks, chunk, kvh, d)
+    vc = v.reshape(b, n_chunks, chunk, kvh, dv)
+    qg = q.reshape(b, sq, kvh, g, d)
+    qpos = jnp.arange(sq)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        k_i, v_i, idx = xs
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_i) * scale
+        if causal:
+            kpos = idx * chunk + jnp.arange(chunk)
+            mask = kpos[None, :] <= qpos[:, None]
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        scores = scores.astype(jnp.float32)
+        m_i = jnp.maximum(m_prev, scores.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_i)
+        p = jnp.exp(scores - m_i[..., None])
+        l_i = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(q.dtype), v_i).astype(jnp.float32)
+        return (m_i, l_i, acc), None
+
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+         jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)          # [b,kvh,g,q,dv]
+    out = jnp.moveaxis(out.astype(q.dtype), 3, 1)          # [b,q,kvh,g,dv]
+    return out.reshape(b, sq, h, dv)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def attend(q, k, v, causal: bool, blockwise: bool | None = None):
+    import os
+    if os.environ.get("REPRO_REPEAT_KV"):   # §Perf before/after toggle
+        k = _repeat_kv(k, q.shape[2])
+        v = _repeat_kv(v, q.shape[2])
+    if blockwise is None:
+        blockwise = k.shape[1] >= BLOCKWISE_THRESHOLD
+    if blockwise:
+        return _attend_blockwise(q, k, v, causal)
+    return _attend_full(q, k, v, causal)
+
+
+def gqa_self_attention(p, cfg, x, positions, causal=True, use_rope=True):
+    """Train / prefill path; returns (out, (k, v)) for cache seeding."""
+    q, k, v = _project_qkv(p, cfg, x, positions, use_rope)
+    out = attend(q, k, v, causal)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, (k, v)
+
+
+def gqa_decode_attention(p, cfg, x, cache_k, cache_v, position,
+                         cache_len=None, use_rope=True):
+    """One-token decode against a [b, S, kv, d] cache.
+
+    ``position``: [b] current index; the new K/V is written at it.
+    """
+    q, k_new, v_new = _project_qkv(
+        p, cfg, x, position[:, None], use_rope)
+    b, s_max = cache_k.shape[0], cache_k.shape[1]
+    # write the new token as an elementwise one-hot blend.  Measured
+    # alternatives (§Perf iteration 5): take_along_axis reads -> XLA
+    # all-gathers the sharded cache (17.9 GB/step); batched scatter ->
+    # +23% memory term (worse fusion); the blend fuses into one
+    # read+write pass over the cache shard.
+    onehot = jax.nn.one_hot(position, s_max, dtype=cache_k.dtype)
+    oh = onehot[:, :, None, None]
+    cache_k = cache_k * (1 - oh) + oh * k_new
+    cache_v = cache_v * (1 - oh) + oh * v_new
+    import os
+    kvh = cfg.num_kv_heads
+    if os.environ.get("REPRO_REPEAT_KV"):   # §Perf before/after toggle
+        cache_k = _repeat_kv(cache_k, cfg.num_heads)
+        cache_v = _repeat_kv(cache_v, cfg.num_heads)
+        kvh = cfg.num_heads
+    g = cfg.num_heads // kvh
+    qg = q.reshape(q.shape[0], 1, kvh, g, cfg.head_dim)
+    scale = cfg.head_dim ** -0.5
+    from repro.dist.sharding import constrain_seq_scores
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, cache_k) * scale
+    scores = constrain_seq_scores(scores)
+    kpos = jnp.arange(s_max)
+    mask = kpos[None, :] <= position[:, None]
+    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, cache_v)
+    out = out.reshape(q.shape[0], 1, cfg.num_heads, cfg.head_dim)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, (cache_k, cache_v)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank KV with decoupled RoPE; absorbed decode
+# ---------------------------------------------------------------------------
+
+def mla_params(mk: Maker, cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "wq_a": mk.param((d, qr), ("embed", "q_lora")),
+        "q_norm": {"scale": mk.param((qr,), ("q_lora",), init="ones")},
+        "wq_b": mk.param((qr, h, dn + dr), ("q_lora", "heads", "head_dim")),
+        "wkv_a": mk.param((d, kvr + dr), ("embed", "kv_lora")),
+        "kv_norm": {"scale": mk.param((kvr,), ("kv_lora",), init="ones")},
+        "wk_b": mk.param((kvr, h, dn), ("kv_lora", "heads", "head_dim")),
+        "wv_b": mk.param((kvr, h, dv), ("kv_lora", "heads", "head_dim")),
+        "wo": mk.param((h, dv, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _mla_q(p, cfg, x, positions):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    ql = common.rmsnorm(p["q_norm"], x @ p["wq_a"].astype(x.dtype))
+    q = jnp.einsum("bsr,rhk->bshk", ql, p["wq_b"].astype(x.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, cfg, x, positions):
+    kvr, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    kv = x @ p["wkv_a"].astype(x.dtype)
+    c_kv = common.rmsnorm(p["kv_norm"], kv[..., :kvr])
+    k_rope = rope(kv[..., kvr:][:, :, None, :], positions,
+                  cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_self_attention(p, cfg, x, positions, causal=True):
+    """Materialised MLA for train/prefill; returns latent cache pieces."""
+    dn, dv = cfg.qk_nope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_latent(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"].astype(x.dtype))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"].astype(x.dtype))
+    h = cfg.num_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                k_rope.shape[:2] + (h, k_rope.shape[-1]))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    scale_fix = (dn + cfg.qk_rope_head_dim) ** -0.5 / (q.shape[-1] ** -0.5)
+    out = attend(q * scale_fix, k, v, causal)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, (c_kv, k_rope)
+
+
+def mla_decode_attention(p, cfg, x, cache_c, cache_rope, position):
+    """Absorbed decode: attend in the 512(+64)-dim latent space.
+
+    Beyond-paper optimisation (DESIGN.md §6): the per-token cache is
+    kv_lora_rank + rope_dim instead of 2*h*head_dim (a ~14x byte cut for
+    deepseek-v2), and the per-step FLOPs drop the full K/V expansion.
+    """
+    dn = cfg.qk_nope_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x, position[:, None])
+    c_new, rope_new = _mla_latent(p, cfg, x, position[:, None])
+    b, s_max = cache_c.shape[0], cache_c.shape[1]
+    onehot = jax.nn.one_hot(position, s_max, dtype=cache_c.dtype)
+    oh = onehot[:, :, None]
+    cache_c = cache_c * (1 - oh) + oh * c_new
+    cache_rope = cache_rope * (1 - oh) + oh * rope_new
+    # absorb W_kb into q: q_lat[b,1,h,r] = q_nope . wk_b^T
+    q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"].astype(x.dtype))
+    scale = (dn + cfg.qk_rope_head_dim) ** -0.5
+    from repro.dist.sharding import constrain_seq_scores
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_lat, cache_c)
+              + jnp.einsum("bqhk,bsk->bhqs", q_rope, cache_rope)) * scale
+    scores = constrain_seq_scores(scores)
+    kpos = jnp.arange(s_max)
+    mask = kpos[None, :] <= position[:, None]
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", probs, cache_c)
+    out = jnp.einsum("bqhr,rhk->bqhk", o_lat, p["wv_b"].astype(x.dtype))
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, (cache_c, cache_rope)

@@ -1,0 +1,174 @@
+"""Shared model-building blocks (pure JAX, no flax).
+
+Parameters are nested dicts.  Every parameter is created through a ``Maker``
+which runs in one of two modes:
+
+  * ``init``: returns initialised jnp arrays (given a PRNG key stream);
+  * ``axes``: returns the tuple of *logical axis names* for the same leaf.
+
+Running the same model-definition code in both modes yields two pytrees with
+identical structure -- values and logical axes -- from which
+``dist/sharding.py`` derives NamedShardings.  This is the flax
+``param_with_axes`` idea without the dependency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Maker:
+    """Dual-mode parameter factory."""
+
+    def __init__(self, mode: str = "init", key: jax.Array | None = None,
+                 dtype=jnp.float32):
+        assert mode in ("init", "axes")
+        self.mode = mode
+        self.dtype = dtype
+        self._key = key
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(self, shape: tuple[int, ...], axes: tuple[str, ...],
+              init: str = "normal", scale: float | None = None):
+        assert len(shape) == len(axes), (shape, axes)
+        if self.mode == "axes":
+            return axes
+        key = self._next_key()
+        if init == "zeros":
+            return jnp.zeros(shape, self.dtype)
+        if init == "ones":
+            return jnp.ones(shape, self.dtype)
+        if init == "normal":
+            if scale is None:
+                # fan-in scaling over the contracted (first) dim by default
+                fan_in = shape[0] if len(shape) > 1 else shape[0]
+                scale = 1.0 / np.sqrt(max(fan_in, 1))
+            return (jax.random.normal(key, shape) * scale).astype(self.dtype)
+        raise ValueError(init)
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+
+def rmsnorm_params(mk: Maker, dim: int):
+    return {"scale": mk.param((dim,), ("embed",), init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return y.astype(dtype) * p["scale"].astype(dtype)
+
+
+def layernorm_params(mk: Maker, dim: int):
+    return {"scale": mk.param((dim,), ("embed",), init="ones"),
+            "bias": mk.param((dim,), ("embed",), init="zeros")}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+         rotary_dim: int | None = None) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    head_dim = x.shape[-1]
+    rd = rotary_dim or head_dim
+    half = rd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, half]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x_rot, x_pass = x[..., :rd], x[..., rd:]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+def sinusoidal_at(positions: jax.Array, dim: int) -> jax.Array:
+    """Sinusoidal embeddings for arbitrary integer positions (in-graph; no
+    host-side giant constants).  positions: [...] -> [..., dim]."""
+    half = dim // 2
+    div = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                  / half)
+    ang = positions[..., None].astype(jnp.float32) * div
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    return sinusoidal_at(jnp.arange(length), dim)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_params(mk: Maker, vocab: int, dim: int):
+    return {"table": mk.param((vocab, dim), ("vocab", "embed"),
+                              scale=1.0)}
+
+
+def _table(p):
+    # anchor to vocab-sharded / embed-replicated before contractions
+    # (§Perf iteration 2, see dist.sharding.constrain_rows_model)
+    from repro.dist.sharding import constrain_rows_model
+    return constrain_rows_model(p["table"])
+
+
+def embed(p, tokens):
+    return jnp.take(_table(p), tokens, axis=0)
+
+
+def unembed(p, x):
+    return jnp.einsum("...d,vd->...v", x, _table(p))
+
+
+def dense_params(mk: Maker, d_in: int, d_out: int,
+                 axes: tuple[str, str], bias: bool = False,
+                 bias_axis: str | None = None):
+    p = {"w": mk.param((d_in, d_out), axes)}
+    if bias:
+        p["b"] = mk.param((d_out,), (bias_axis or axes[1],), init="zeros")
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y

@@ -1,0 +1,131 @@
+"""Zamba2-style hybrid: scanned Mamba-2 blocks with a *shared* transformer
+block applied every ``attn_every`` blocks (weight reuse across applications,
+with per-application input norms).
+
+Simplifications vs the released zamba2 (noted in DESIGN.md): the shared
+block consumes the residual stream directly (no concat with the original
+embedding) and per-application LoRA deltas are replaced by per-application
+input norms.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attnlib
+from repro.models import common, ssm
+from repro.models.common import Maker
+from repro.models.mlp import mlp, mlp_params
+from repro.models.transformer import stacked_params
+
+
+def _mamba_block_params(mk: Maker, cfg) -> dict:
+    return {"ln": common.rmsnorm_params(mk, cfg.d_model),
+            "mamba": ssm.mamba2_params(mk, cfg)}
+
+
+def _shared_block_params(mk: Maker, cfg) -> dict:
+    return {
+        "ln_attn": common.rmsnorm_params(mk, cfg.d_model),
+        "attn": attnlib.gqa_params(mk, cfg),
+        "ln_mlp": common.rmsnorm_params(mk, cfg.d_model),
+        "mlp": mlp_params(mk, cfg.d_model, cfg.d_ff, cfg.mlp_act),
+    }
+
+
+def _n_attn(cfg) -> int:
+    return cfg.num_layers // cfg.attn_every
+
+
+def hybrid_params(mk: Maker, cfg) -> dict:
+    n_attn = _n_attn(cfg)
+    return {
+        "embed": common.embed_params(mk, cfg.vocab_size, cfg.d_model),
+        "mamba_layers": stacked_params(
+            cfg, cfg.num_layers, lambda m: _mamba_block_params(m, cfg), mk),
+        "shared": _shared_block_params(mk, cfg),
+        "app_norms": stacked_params(
+            cfg, n_attn, lambda m: common.rmsnorm_params(m, cfg.d_model), mk),
+        "ln_f": common.rmsnorm_params(mk, cfg.d_model),
+    }
+
+
+def _tree_slice(tree, lo, hi):
+    return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
+def hybrid_forward(params, cfg, tokens, mode="train", cache=None,
+                   position_idx=None, remat=True, prefix_embeds=None):
+    x = common.embed(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if mode == "decode" and position_idx is not None:
+        positions = position_idx[:, None]
+
+    from repro.dist.sharding import constrain_batch
+
+    def mamba_body(x, xs):
+        lp, c = xs
+        x = constrain_batch(x)
+        h = common.rmsnorm(lp["ln"], x)
+        y, nc = ssm.mamba2_block(lp["mamba"], cfg, h, state=c)
+        return x + y, nc
+
+    mamba_fn = (jax.checkpoint(mamba_body)
+                if (remat and mode == "train") else mamba_body)
+
+    def run_span(x, lo, hi, span_cache):
+        lp = _tree_slice(params["mamba_layers"], lo, hi)
+        if span_cache is None:
+            return jax.lax.scan(
+                lambda carry, p: mamba_fn(carry, (p, None)), x, lp)
+        return jax.lax.scan(mamba_fn, x, (lp, span_cache))
+
+    def shared_block(x, app_idx, kv):
+        norm = jax.tree.map(lambda a: a[app_idx], params["app_norms"])
+        sp = params["shared"]
+        h = common.rmsnorm(norm, x)
+        h = common.rmsnorm(sp["ln_attn"], h)
+        if mode == "decode":
+            a, new_kv = attnlib.gqa_decode_attention(
+                sp["attn"], cfg, h, kv[0], kv[1], position_idx)
+        else:
+            a, new_kv = attnlib.gqa_self_attention(
+                sp["attn"], cfg, h, positions, causal=True)
+        x = x + a
+        h = common.rmsnorm(sp["ln_mlp"], x)
+        x = x + mlp(sp["mlp"], h, cfg.mlp_act)
+        return x, new_kv
+
+    n_attn = _n_attn(cfg)
+    new_mamba_caches = []
+    new_kv_caches = []
+    pos = 0
+    for app in range(n_attn):
+        lo, hi = pos, pos + cfg.attn_every
+        span_cache = (None if cache is None else
+                      _tree_slice(cache["mamba"], lo, hi))
+        x, nc = run_span(x, lo, hi, span_cache)
+        new_mamba_caches.append(nc)
+        kv = None if cache is None else jax.tree.map(
+            lambda a: a[app], cache["kv"])
+        x, new_kv = shared_block(x, app, kv)
+        new_kv_caches.append(new_kv)
+        pos = hi
+    if pos < cfg.num_layers:
+        span_cache = (None if cache is None else
+                      _tree_slice(cache["mamba"], pos, cfg.num_layers))
+        x, nc = run_span(x, pos, cfg.num_layers, span_cache)
+        new_mamba_caches.append(nc)
+
+    x = common.rmsnorm(params["ln_f"], x)
+    logits = common.unembed(params["embed"], x)
+
+    out_cache = None
+    if mode in ("prefill", "decode"):
+        mamba_cache = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_mamba_caches)
+        kv_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_kv_caches)
+        out_cache = {"mamba": mamba_cache, "kv": kv_cache}
+    return logits, out_cache, jnp.zeros((), jnp.float32)

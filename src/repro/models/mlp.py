@@ -1,0 +1,33 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain MLPs."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.common import Maker, activation
+
+
+GATED = {"swiglu": "silu", "geglu": "gelu"}
+
+
+def mlp_params(mk: Maker, d_model: int, d_ff: int, kind: str) -> dict:
+    if kind in GATED:
+        return {
+            "w_gate": mk.param((d_model, d_ff), ("embed", "ffn")),
+            "w_up": mk.param((d_model, d_ff), ("embed", "ffn")),
+            "w_down": mk.param((d_ff, d_model), ("ffn", "embed")),
+        }
+    return {
+        "w_up": mk.param((d_model, d_ff), ("embed", "ffn")),
+        "w_down": mk.param((d_ff, d_model), ("ffn", "embed")),
+    }
+
+
+def mlp(p, x, kind: str):
+    if kind in GATED:
+        act = activation(GATED[kind])
+        h = act(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+    else:
+        act = activation(kind)
+        h = act(x @ p["w_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype)

@@ -1,0 +1,254 @@
+"""Selective state-space blocks: Mamba-1 (falcon-mamba-7b) and Mamba-2
+(zamba2 hybrid).
+
+Recurrence (per channel d, state n):
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+
+Implementation notes (TPU adaptation):
+  * prefill/train uses jax.lax.scan over sequence *chunks*: within a chunk
+    the recurrence is an associative scan (log-depth, MXU/VPU friendly);
+    across chunks a carry h propagates.  Chunking bounds the O(L*d*n)
+    element tensor to O(chunk*d*n) live memory -- required for the 32k/500k
+    cells.
+  * decode is the single-step recurrence on a carried state "cache".
+  * the fused per-chunk kernel has a Pallas implementation in
+    kernels/mamba_scan.py (validated interpret=True against ssm_ref).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import Maker
+
+SCAN_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 parameters
+# ---------------------------------------------------------------------------
+
+def mamba_params(mk: Maker, cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    n = cfg.ssm_state
+    dt_rank = cfg.ssm_dt_rank
+    return {
+        "w_in": mk.param((d, 2 * di), ("embed", "ssm_inner")),
+        "conv_w": mk.param((cfg.ssm_d_conv, di), ("conv", "ssm_inner"),
+                           scale=0.5),
+        "conv_b": mk.param((di,), ("ssm_inner",), init="zeros"),
+        "w_x": mk.param((di, dt_rank + 2 * n), ("ssm_inner", "ssm_proj")),
+        "w_dt": mk.param((dt_rank, di), ("ssm_proj", "ssm_inner")),
+        "dt_bias": mk.param((di,), ("ssm_inner",), init="zeros"),
+        "a_log": mk.param((di, n), ("ssm_inner", "ssm_state"), init="zeros"),
+        "d_skip": mk.param((di,), ("ssm_inner",), init="ones"),
+        "w_out": mk.param((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv; x: [b, l, di], w: [k, di].
+
+    Returns (y, new_state) where state is the last k-1 inputs."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return y + b.astype(x.dtype), new_state
+
+
+def _ssm_scan_fused(dt, a_log_or_a, b_t, xs, c_t, h0,
+                    chunk: int = SCAN_CHUNK, mamba2: bool = False,
+                    d_skip=None):
+    """Chunked selective scan with the discretisation fused *inside* the
+    chunk body (§Perf iteration 9).
+
+    The unfused path materialises da/dbx of shape [B, L, ...states...] in
+    fp32 before scanning (~34 GB/device for falcon-mamba train_4k); here
+    each chunk's da/dbx exist only inside the scan body, bounding live
+    memory to [B, chunk, ...] (the backward rematerialises per chunk via
+    jax.checkpoint).
+
+    mamba1: dt [B,L,D], a [D,N], b_t/c_t [B,L,N], xs [B,L,D]
+            -> y [B,L,D], h_last [B,D,N]
+    mamba2: dt [B,L,H], a [H],  b_t/c_t [B,L,H,N], xs [B,L,H,P]
+            -> y [B,L,H,P], h_last [B,H,P,N]
+    """
+    bsz, l = dt.shape[0], dt.shape[1]
+    n_chunks = max(1, l // chunk)
+    if l % n_chunks:
+        n_chunks = 1
+    cl = l // n_chunks
+
+    def reshape_c(x):
+        return jnp.moveaxis(
+            x.reshape((bsz, n_chunks, cl) + x.shape[2:]), 1, 0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_body(h, args):
+        if mamba2:
+            dt_i, b_i, c_i, x_i = args
+            da = jnp.exp(dt_i * a_log_or_a)[..., None, None]  # [B,cl,H,1,1]
+            dbx = (dt_i[..., None] * x_i.astype(jnp.float32))[..., None] \
+                * b_i.astype(jnp.float32)[..., :, None, :]    # [B,cl,H,P,N]
+        else:
+            dt_i, b_i, c_i, x_i = args
+            da = jnp.exp(dt_i.astype(jnp.float32)[..., None]
+                         * a_log_or_a)                        # [B,cl,D,N]
+            dbx = (dt_i * x_i).astype(jnp.float32)[..., None] \
+                * b_i.astype(jnp.float32)[..., None, :]       # [B,cl,D,N]
+        acc_a, acc_b = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        h_all = acc_a * h[:, None] + acc_b
+        if mamba2:
+            y = jnp.einsum("blhdn,blhn->blhd", h_all,
+                           c_i.astype(jnp.float32))
+        else:
+            y = jnp.einsum("bldn,bln->bld", h_all,
+                           c_i.astype(jnp.float32))
+        return h_all[:, -1], y
+
+    body = jax.checkpoint(chunk_body)
+    h_last, ys = jax.lax.scan(
+        body, h0.astype(jnp.float32),
+        (reshape_c(dt), reshape_c(b_t), reshape_c(c_t), reshape_c(xs)))
+    y = jnp.moveaxis(ys, 0, 1).reshape((bsz, l) + ys.shape[3:])
+    return y, h_last
+
+
+def _ssm_scan_chunked(a, bx, h0, chunk: int = SCAN_CHUNK):
+    """h_t = a_t * h_{t-1} + bx_t over axis 1 (length L).
+
+    a, bx: [B, L, ...]; h0: [B, ...].  Associative scan inside chunks,
+    sequential carry across chunks.
+    """
+    bsz, l = a.shape[0], a.shape[1]
+    n_chunks = max(1, l // chunk)
+    if l % n_chunks:
+        n_chunks = 1
+    cl = l // n_chunks
+    # a may be broadcast-shaped against bx (mamba2: scalar decay per head)
+    rest_a, rest_b = a.shape[2:], bx.shape[2:]
+    a_c = a.reshape((bsz, n_chunks, cl) + rest_a)
+    bx_c = bx.reshape((bsz, n_chunks, cl) + rest_b)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_body(h, xs):
+        a_i, bx_i = xs                      # [B, cl, ...]
+        acc_a, acc_b = jax.lax.associative_scan(combine, (a_i, bx_i), axis=1)
+        h_all = acc_a * h[:, None] + acc_b  # [B, cl, ...]
+        return h_all[:, -1], h_all
+
+    h_last, h_seq = jax.lax.scan(
+        chunk_body, h0,
+        (jnp.moveaxis(a_c, 1, 0), jnp.moveaxis(bx_c, 1, 0)))
+    h_seq = jnp.moveaxis(h_seq, 0, 1).reshape((bsz, l) + rest_b)
+    return h_seq, h_last
+
+
+def mamba_block(p, cfg, x, state=None):
+    """x: [b, l, d] -> (y, new_state).
+
+    state = {"conv": [b, k-1, di], "ssm": [b, di, n]} (decode carry).
+    """
+    di, n = cfg.ssm_d_inner, cfg.ssm_state
+    dt_rank = cfg.ssm_dt_rank
+    xz = x @ p["w_in"].astype(x.dtype)
+    xs, z = xz[..., :di], xz[..., di:]
+    conv_state = state["conv"] if state else None
+    xs, new_conv = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs = jax.nn.silu(xs)
+    proj = xs @ p["w_x"].astype(x.dtype)
+    dt = jax.nn.softplus(
+        proj[..., :dt_rank] @ p["w_dt"].astype(x.dtype)
+        + p["dt_bias"].astype(x.dtype))                      # [b, l, di]
+    b_t = proj[..., dt_rank:dt_rank + n]                     # [b, l, n]
+    c_t = proj[..., dt_rank + n:]                            # [b, l, n]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))             # [di, n]
+    h0 = (state["ssm"].astype(jnp.float32) if state
+          else jnp.zeros((x.shape[0], di, n), jnp.float32))
+    import os
+    if os.environ.get("REPRO_SSM_UNFUSED"):   # §Perf iteration 9 toggle
+        da = jnp.exp(dt.astype(jnp.float32)[..., None] * a)
+        dbx = (dt * xs).astype(jnp.float32)[..., None] * \
+            b_t.astype(jnp.float32)[..., None, :]
+        h_seq, h_last = _ssm_scan_chunked(da, dbx, h0)
+        y = jnp.einsum("bldn,bln->bld", h_seq, c_t.astype(jnp.float32))
+    else:
+        y, h_last = _ssm_scan_fused(dt, a, b_t, xs, c_t, h0)
+    y = y.astype(x.dtype)
+    y = y + xs * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(x.dtype)
+    new_state = {"conv": new_conv, "ssm": h_last.astype(jnp.float32)}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (multi-head, scalar decay per head)
+# ---------------------------------------------------------------------------
+
+def mamba2_params(mk: Maker, cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    g = cfg.ssm_groups
+    return {
+        "w_in": mk.param((d, 2 * di + 2 * g * n + h),
+                         ("embed", "ssm_inner")),
+        "conv_w": mk.param((cfg.ssm_d_conv, di + 2 * g * n),
+                           ("conv", "ssm_inner"), scale=0.5),
+        "conv_b": mk.param((di + 2 * g * n,), ("ssm_inner",), init="zeros"),
+        "a_log": mk.param((h,), ("ssm_heads",), init="zeros"),
+        "dt_bias": mk.param((h,), ("ssm_heads",), init="zeros"),
+        "d_skip": mk.param((h,), ("ssm_heads",), init="ones"),
+        "norm": {"scale": mk.param((di,), ("ssm_inner",), init="ones")},
+        "w_out": mk.param((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def mamba2_block(p, cfg, x, state=None):
+    di, n = cfg.ssm_d_inner, cfg.ssm_state
+    h, g = cfg.ssm_heads, cfg.ssm_groups
+    hd = di // h
+    bsz, l, _ = x.shape
+    zxbcdt = x @ p["w_in"].astype(x.dtype)
+    z, xbc, dt_raw = (zxbcdt[..., :di],
+                      zxbcdt[..., di:di + di + 2 * g * n],
+                      zxbcdt[..., -h:])
+    conv_state = state["conv"] if state else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di].reshape(bsz, l, h, hd)
+    b_t = xbc[..., di:di + g * n].reshape(bsz, l, g, n)
+    c_t = xbc[..., di + g * n:].reshape(bsz, l, g, n)
+    rep = h // g
+    b_t = jnp.repeat(b_t, rep, axis=2)                       # [b, l, h, n]
+    c_t = jnp.repeat(c_t, rep, axis=2)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # [b, l, h]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))              # [h]
+    h0 = (state["ssm"].astype(jnp.float32) if state
+          else jnp.zeros((bsz, h, hd, n), jnp.float32))
+    y, h_last = _ssm_scan_fused(dt, a, b_t, xs, c_t, h0, mamba2=True)
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[..., None]
+    y = y.reshape(bsz, l, di).astype(x.dtype)
+    y = common.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = y @ p["w_out"].astype(x.dtype)
+    return out, {"conv": new_conv, "ssm": h_last.astype(jnp.float32)}

@@ -1,0 +1,52 @@
+"""Attention-free SSM LM (falcon-mamba-7b): scanned Mamba-1 blocks."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, ssm
+from repro.models.common import Maker
+from repro.models.transformer import stacked_params
+
+
+def _block_params(mk: Maker, cfg) -> dict:
+    return {"ln": common.rmsnorm_params(mk, cfg.d_model),
+            "mamba": ssm.mamba_params(mk, cfg)}
+
+
+def ssm_lm_params(mk: Maker, cfg) -> dict:
+    return {
+        "embed": common.embed_params(mk, cfg.vocab_size, cfg.d_model),
+        "layers": stacked_params(cfg, cfg.num_layers,
+                                 lambda m: _block_params(m, cfg), mk),
+        "ln_f": common.rmsnorm_params(mk, cfg.d_model),
+    }
+
+
+def ssm_lm_forward(params, cfg, tokens, mode="train", cache=None,
+                   position_idx=None, remat=True, prefix_embeds=None):
+    x = common.embed(params["embed"], tokens)
+
+    from repro.dist.sharding import constrain_batch
+
+    def body(x, xs):
+        lp, c = xs
+        x = constrain_batch(x)
+        h = common.rmsnorm(lp["ln"], x)
+        y, nc = ssm.mamba_block(lp["mamba"], cfg, h, state=c)
+        return x + y, nc
+
+    body_fn = jax.checkpoint(body) if (remat and mode == "train") else body
+    scan_cache = None if cache is None else cache["layers"]
+    if scan_cache is None:
+        x, new_cache = jax.lax.scan(
+            lambda carry, lp: body_fn(carry, (lp, None)), x,
+            params["layers"])
+    else:
+        x, new_cache = jax.lax.scan(body_fn, x,
+                                    (params["layers"], scan_cache))
+    x = common.rmsnorm(params["ln_f"], x)
+    logits = common.unembed(params["embed"], x)  # falcon-mamba ties embeddings
+    out_cache = {"layers": new_cache} if mode in ("prefill", "decode") else None
+    return logits, out_cache, jnp.zeros((), jnp.float32)

@@ -1,0 +1,191 @@
+"""Decoder-only transformer LM assembly (dense / MoE / MLA variants), with
+scanned layer stacks + remat (required to keep 80-layer dry-run HLO small
+and activation memory bounded).
+
+Layer caches are pytrees stacked along the layer axis and threaded through
+the same lax.scan that runs the layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common, moe as moelib
+from repro.models.common import Maker
+from repro.models.mlp import mlp, mlp_params
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _layer_params(mk: Maker, cfg, dense_ff: int | None = None) -> dict:
+    p = {"ln_attn": common.rmsnorm_params(mk, cfg.d_model),
+         "ln_mlp": common.rmsnorm_params(mk, cfg.d_model)}
+    if cfg.mla:
+        p["attn"] = attn.mla_params(mk, cfg)
+    else:
+        p["attn"] = attn.gqa_params(mk, cfg)
+    if dense_ff is not None:
+        p["mlp"] = mlp_params(mk, cfg.d_model, dense_ff, cfg.mlp_act)
+    elif cfg.moe_enabled:
+        p["moe"] = moelib.moe_params(
+            mk, cfg.d_model, cfg.moe_d_ff, cfg.num_experts, cfg.mlp_act,
+            num_shared=cfg.num_shared_experts, shared_d_ff=cfg.shared_d_ff)
+    else:
+        p["mlp"] = mlp_params(mk, cfg.d_model, cfg.d_ff, cfg.mlp_act)
+    return p
+
+
+def stacked_params(cfg, n: int, fn, mk: Maker):
+    """Stack n copies of fn(mk) along a leading 'layers' axis."""
+    if mk.mode == "axes":
+        sub = fn(Maker(mode="axes"))
+        return jax.tree.map(lambda a: ("layers",) + a, sub,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(mk._next_key(), n)
+
+    def one(key):
+        return fn(Maker(mode="init", key=key, dtype=mk.dtype))
+
+    return jax.vmap(one)(keys)
+
+
+def decoder_params(mk: Maker, cfg) -> dict:
+    p = {"embed": common.embed_params(mk, cfg.vocab_size, cfg.d_model),
+         "ln_f": common.rmsnorm_params(mk, cfg.d_model)}
+    n_scan = cfg.num_layers - cfg.first_k_dense
+    if cfg.first_k_dense:
+        p["dense_layers"] = [
+            _layer_params(mk, cfg, dense_ff=cfg.dense_d_ff)
+            for _ in range(cfg.first_k_dense)]
+    p["layers"] = stacked_params(
+        cfg, n_scan, lambda m: _layer_params(m, cfg), mk)
+    if not cfg.tie_embeddings:
+        p["head"] = {"w": mk.param((cfg.d_model, cfg.vocab_size),
+                                   ("embed", "vocab"), scale=0.02)}
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _apply_layer(p, cfg, x, positions, mode: str, cache, position_idx,
+                 dense: bool = False):
+    """mode: 'train' | 'prefill' | 'decode'."""
+    from repro.dist.sharding import constrain_batch
+    x = constrain_batch(x)
+    h = common.rmsnorm(p["ln_attn"], x)
+    if mode == "decode":
+        if cfg.mla:
+            a, new_cache = attn.mla_decode_attention(
+                p["attn"], cfg, h, cache[0], cache[1], position_idx)
+        else:
+            a, new_cache = attn.gqa_decode_attention(
+                p["attn"], cfg, h, cache[0], cache[1], position_idx)
+    else:
+        if cfg.mla:
+            a, new_cache = attn.mla_self_attention(
+                p["attn"], cfg, h, positions, causal=True)
+        else:
+            a, new_cache = attn.gqa_self_attention(
+                p["attn"], cfg, h, positions, causal=True)
+    x = x + a
+    h = common.rmsnorm(p["ln_mlp"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if dense or not cfg.moe_enabled:
+        f = mlp(p["mlp"], h, cfg.mlp_act)
+    else:
+        f, aux = moelib.moe(
+            p["moe"], h, num_experts=cfg.num_experts,
+            top_k=cfg.experts_per_token, kind=cfg.mlp_act,
+            capacity_factor=cfg.capacity_factor)
+    x = x + f
+    return x, new_cache, aux
+
+
+def decoder_forward(params, cfg, tokens, mode: str = "train",
+                    cache=None, position_idx=None, prefix_embeds=None,
+                    remat: bool = True):
+    """Returns (logits, new_cache, aux_loss).
+
+    tokens: [B, S] (S == 1 for decode).
+    cache: stacked per-layer cache pytree or None.
+    position_idx: [B] decode positions.
+    prefix_embeds: [B, P, d] multimodal prefix (vlm), prepended in
+    train/prefill mode.
+    """
+    x = common.embed(params["embed"], tokens)
+    if prefix_embeds is not None and mode != "decode":
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if mode == "decode" and position_idx is not None:
+        positions = position_idx[:, None]
+
+    aux_total = jnp.zeros((), jnp.float32)
+    n_dense = cfg.first_k_dense
+    dense_caches = []
+    if n_dense:
+        for i, lp in enumerate(params["dense_layers"]):
+            c = None if cache is None else jax.tree.map(
+                lambda a: a[i], cache["dense"])
+            x, nc, aux = _apply_layer(p=lp, cfg=cfg, x=x,
+                                      positions=positions, mode=mode,
+                                      cache=c, position_idx=position_idx,
+                                      dense=True)
+            dense_caches.append(nc)
+            aux_total = aux_total + aux
+
+    def body(carry, xs):
+        x, aux_acc = carry
+        lp, c = xs
+        x, nc, aux = _apply_layer(p=lp, cfg=cfg, x=x, positions=positions,
+                                  mode=mode, cache=c,
+                                  position_idx=position_idx)
+        return (x, aux_acc + aux), nc
+
+    if remat and mode == "train":
+        import os
+        # §Perf iteration 8: 'dots' policy saves matmul outputs instead of
+        # recomputing every projection in the backward scan
+        if os.environ.get("REPRO_REMAT_DOTS"):
+            body_fn = jax.checkpoint(
+                body, policy=jax.checkpoint_policies
+                .dots_with_no_batch_dims_saveable)
+        else:
+            body_fn = jax.checkpoint(body)
+    else:
+        body_fn = body
+    scan_cache = None if cache is None else cache["layers"]
+    n_scan = cfg.num_layers - n_dense
+    if scan_cache is None:
+        # provide a dummy None-cache stream via a zero-length pytree
+        (x, aux_total), new_scan_cache = jax.lax.scan(
+            lambda carry, lp: body_fn(carry, (lp, None)),
+            (x, aux_total), params["layers"])
+    else:
+        (x, aux_total), new_scan_cache = jax.lax.scan(
+            body_fn, (x, aux_total), (params["layers"], scan_cache))
+
+    x = common.rmsnorm(params["ln_f"], x)
+    if cfg.tie_embeddings:
+        logits = common.unembed(params["embed"], x)
+    else:
+        logits = x @ params["head"]["w"].astype(x.dtype)
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"layers": new_scan_cache}
+        if n_dense:
+            new_cache["dense"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *dense_caches) \
+                if len(dense_caches) > 1 else jax.tree.map(
+                    lambda a: a[None], dense_caches[0])
+    return logits, new_cache, aux_total

@@ -1,0 +1,72 @@
+"""Batched serving engine: prefill -> greedy/temperature decode loop with a
+fixed-capacity KV cache (the decode_32k / long_500k cells lower exactly the
+``decode_step`` this engine calls)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0   # 0 => greedy
+    seed: int = 0
+
+
+def expand_cache(model: Model, cache, batch: int, max_len: int):
+    """Pad a prefill cache (seq == prompt length) out to max_len slots."""
+    spec = model.cache_spec(batch, max_len)
+
+    def pad(c, s):
+        if c.shape == s.shape:
+            return c.astype(s.dtype)
+        widths = [(0, t - c_) for c_, t in zip(c.shape, s.shape)]
+        return jnp.pad(c, widths).astype(s.dtype)
+
+    return jax.tree.map(pad, cache, spec)
+
+
+class Engine:
+    def __init__(self, model: Model, params, scfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.scfg = scfg
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill)
+
+    def generate(self, prompts: np.ndarray, steps: int,
+                 frames=None, prefix_embeds=None) -> np.ndarray:
+        """prompts: [B, P] int32; returns [B, steps] generated tokens."""
+        b, p = prompts.shape
+        kwargs = {}
+        if frames is not None:
+            kwargs["frames"] = frames
+        if prefix_embeds is not None:
+            kwargs["prefix_embeds"] = prefix_embeds
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                      **kwargs)
+        cache = expand_cache(self.model, cache, b, self.scfg.max_len)
+        tok = self._sample(logits, 0)
+        out = [tok]
+        pos = jnp.full((b,), p, jnp.int32)
+        for i in range(steps - 1):
+            logits, cache = self._decode(self.params, tok[:, None], cache,
+                                         pos)
+            tok = self._sample(logits, i + 1)
+            out.append(tok)
+            pos = pos + 1
+        return np.stack([np.asarray(t) for t in out], axis=1)
+
+    def _sample(self, logits, step):
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        key = jax.random.fold_in(jax.random.PRNGKey(self.scfg.seed), step)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,95 @@
+"""AdamW with fp32 master weights, global-norm clipping and a
+warmup+cosine schedule (pure JAX, optax-free)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    min_lr: float = 3e-5
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def schedule(cfg: OptimizerConfig, step):
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr + 0.5 * (cfg.peak_lr - cfg.min_lr) * (
+        1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params) -> dict:
+    # copy=True: when params are already fp32, astype would alias the same
+    # buffer and donation of (params, opt_state) would double-donate
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    return {
+        "master": jax.tree.map(f32, params),
+        "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+def update(cfg: OptimizerConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(master, mu, nu, g):
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / b1c
+        nhat = nu / b2c
+        master = master - lr * (mhat / (jnp.sqrt(nhat) + cfg.eps)
+                                + cfg.weight_decay * master)
+        return master, mu, nu
+
+    flat_m, tdef = jax.tree.flatten(state["master"])
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_nu = tdef.flatten_up_to(state["nu"])
+    flat_g = tdef.flatten_up_to(grads)
+    out = [upd(m, u, n, g) for m, u, n, g in
+           zip(flat_m, flat_mu, flat_nu, flat_g)]
+    new_master = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(tdef, [o[2] for o in out])
+    new_params = jax.tree.map(
+        lambda m, p: m.astype(p.dtype), new_master, params)
+    new_state = {"master": new_master, "mu": new_mu, "nu": new_nu,
+                 "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+def state_axes(params_axes) -> dict:
+    """Optimizer-state logical axes mirror the parameter axes."""
+    return {"master": params_axes, "mu": params_axes, "nu": params_axes,
+            "step": ()}

@@ -1,0 +1,85 @@
+"""train_step factory: value_and_grad + clip + AdamW, with optional
+microbatch gradient accumulation (lax.scan) and cross-replica gradient
+compression hooks.  Shardings are derived from logical axes, so the same
+factory serves the 1-device smoke tests and the 512-device dry-run."""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import sharding as shlib
+from repro.models.api import Model
+from repro.train import optimizer as optlib
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: optlib.OptimizerConfig = optlib.OptimizerConfig()
+    grad_accum: int = 1
+    remat: bool = True
+    compress_grads: bool = False   # int8 cross-replica compression (dist/)
+
+
+def make_loss_fn(model: Model, remat: bool):
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=remat)
+    return loss_fn
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    loss_fn = make_loss_fn(model, tcfg.remat)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.grad_accum > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                (loss, _), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                return (gsum, lsum + loss), None
+
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((tcfg.grad_accum,
+                                     x.shape[0] // tcfg.grad_accum)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)), mb_batch)
+            grads = jax.tree.map(lambda g: g / tcfg.grad_accum, grads)
+            loss = loss_sum / tcfg.grad_accum
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        if tcfg.compress_grads:
+            from repro.dist.compression import fake_quantize_int8
+            grads = jax.tree.map(fake_quantize_int8, grads)
+        params, opt_state, opt_metrics = optlib.update(
+            tcfg.opt, params, grads, opt_state)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def shardings_for(model: Model, mesh, batch_spec):
+    """(params, opt_state, batch) shardings + abstract shapes."""
+    params_axes = model.axes()
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_sh = shlib.tree_shardings(params_axes, params_shapes, mesh)
+    opt_axes = optlib.state_axes(params_axes)
+    opt_shapes = jax.eval_shape(optlib.init, params_shapes)
+    o_sh = shlib.tree_shardings(
+        {"master": params_axes, "mu": params_axes, "nu": params_axes},
+        {"master": opt_shapes["master"], "mu": opt_shapes["mu"],
+         "nu": opt_shapes["nu"]}, mesh)
+    o_sh = {**o_sh, "step": shlib.replicated(mesh)}
+    b_sh = shlib.batch_sharding(mesh, batch_spec)
+    return (p_sh, o_sh, b_sh), (params_shapes, opt_shapes)

@@ -1,0 +1,63 @@
+"""HLO structural analyzer: trip-count recovery, dot FLOPs, collectives."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze
+
+N = 256
+
+
+def _compile(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile()
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def f(x, ws):
+        y, _ = jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, ws)
+        return y
+    c = _compile(f, jax.ShapeDtypeStruct((N, N), jnp.float32),
+                 jax.ShapeDtypeStruct((10, N, N), jnp.float32))
+    r = analyze(c.as_text())
+    assert r["dot_flops"] == pytest.approx(10 * 2 * N ** 3, rel=0.01)
+    assert 10 in r["while_trips"]
+
+
+def test_nested_scan_multipliers_compose():
+    def f(x, ws):
+        def outer(c, w):
+            c2, _ = jax.lax.scan(lambda ci, _: (jnp.tanh(ci @ w), None),
+                                 c, None, length=3)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y
+    c = _compile(f, jax.ShapeDtypeStruct((N, N), jnp.float32),
+                 jax.ShapeDtypeStruct((10, N, N), jnp.float32))
+    r = analyze(c.as_text())
+    assert r["dot_flops"] == pytest.approx(30 * 2 * N ** 3, rel=0.01)
+    assert sorted(r["while_trips"], reverse=True)[:2] == [10, 3]
+
+
+def test_unrolled_matches_cost_analysis():
+    def f(x, w):
+        for _ in range(4):
+            x = x @ w
+        return x
+    c = _compile(f, jax.ShapeDtypeStruct((N, N), jnp.float32),
+                 jax.ShapeDtypeStruct((N, N), jnp.float32))
+    r = analyze(c.as_text())
+    ca = c.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    assert r["dot_flops"] == pytest.approx(float(ca["flops"]), rel=0.01)
+
+
+def test_memory_proxy_lower_bounded_by_io():
+    def f(x, w):
+        return x @ w
+    c = _compile(f, jax.ShapeDtypeStruct((N, N), jnp.float32),
+                 jax.ShapeDtypeStruct((N, N), jnp.float32))
+    r = analyze(c.as_text())
+    io_bytes = 3 * N * N * 4
+    assert r["tensor_bytes"] >= 0.9 * io_bytes

@@ -1,0 +1,115 @@
+"""ISA encoding, bitwidths (Tab. V) and layout addressing properties."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.feather import SWEEP, feather_config
+from repro.core import isa, layout as layoutlib
+
+
+def test_opcodes_are_3bit_unique():
+    codes = [int(o) for o in isa.Opcode]
+    assert len(set(codes)) == 8
+    assert all(0 <= c < 8 for c in codes)
+
+
+@pytest.mark.parametrize("ah,aw", SWEEP)
+def test_bitwidths_reasonable(ah, aw):
+    cfg = feather_config(ah, aw)
+    # Tab. V ranges: Set*VNLayout 38-44, E.Mapping 81-95, E.Streaming 45-59
+    assert 30 <= cfg.bits_set_layout() <= 50
+    assert 70 <= cfg.bits_execute_mapping() <= 105
+    assert 40 <= cfg.bits_execute_streaming() <= 65
+
+
+def test_execute_streaming_bitwidths_match_paper_exactly():
+    # Fig. 5 formula reproduces the E.Streaming column of Tab. V
+    expected = {(4, 4): 57, (4, 16): 51, (4, 64): 45,
+                (8, 8): 58, (8, 32): 52, (8, 128): 46,
+                (16, 16): 59, (16, 64): 53, (16, 256): 47}
+    for (ah, aw), bits in expected.items():
+        cfg = feather_config(ah, aw)
+        assert cfg.bits_execute_streaming() == bits, (ah, aw)
+
+
+def test_instruction_encode_roundtrip_widths():
+    cfg = feather_config(8, 32)
+    insts = [
+        isa.SetWVNLayout(order=3, nr_l0=4, nr_l1=7, red_l1=9),
+        isa.SetIVNLayout(order=0, nr_l0=1, nr_l1=2, red_l1=3),
+        isa.SetOVNLayout(order=5, nr_l0=2, nr_l1=2, red_l1=2),
+        isa.ExecuteMapping(r0=3, c0=17, g_r=4, g_c=2, s_r=1, s_c=8),
+        isa.ExecuteStreaming(m0=5, s_m=2, t=100, vn_size=8,
+                             df=isa.Dataflow.IOS),
+        isa.Load(hbm_addr=1 << 20, length=4096,
+                 target=isa.BufferTarget.STATIONARY),
+        isa.Write(hbm_addr=0, length=128),
+        isa.Activation(function=isa.ACTIVATION_FUNCS["gelu"], length=64),
+    ]
+    for inst in insts:
+        word = inst.encode(cfg)
+        assert 0 <= word < (1 << inst.bitwidth(cfg))
+        # opcode occupies the top 3 bits
+        assert word >> (inst.bitwidth(cfg) - 3) == int(inst.opcode)
+
+
+def test_trace_accounting():
+    cfg = feather_config(4, 4)
+    trace = [isa.ExecuteMapping(), isa.ExecuteStreaming()]
+    s = isa.trace_summary(trace, cfg)
+    assert s["n_instructions"] == 2
+    assert s["bits"] == (cfg.bits_execute_mapping()
+                         + cfg.bits_execute_streaming())
+
+
+# ---------------------------------------------------------------------------
+# Layout addressing properties (property-based sweeps)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("order", sorted(layoutlib.ORDER_TABLE))
+@pytest.mark.parametrize("nr_l0,nr_l1,red_l1,vn,aw", [
+    (4, 2, 2, 4, 4), (3, 3, 5, 2, 8), (1, 7, 4, 3, 16), (8, 1, 1, 1, 8),
+])
+def test_layout_flatten_bijective(order, nr_l0, nr_l1, red_l1, vn, aw):
+    lay = layoutlib.VNLayout(order=order, nr_l0=nr_l0, nr_l1=nr_l1,
+                             red_l1=red_l1, vn_size=vn, aw=aw)
+    r, c = np.meshgrid(np.arange(red_l1), np.arange(nr_l0 * nr_l1),
+                       indexing="ij")
+    l = lay.flatten(r, c)
+    # bijective onto [0, num_vns)
+    assert sorted(l.ravel().tolist()) == list(range(lay.num_vns))
+    r2, c2 = lay.unflatten(l)
+    np.testing.assert_array_equal(r, r2)
+    np.testing.assert_array_equal(c, c2)
+
+
+@pytest.mark.parametrize("order", sorted(layoutlib.ORDER_TABLE))
+def test_layout_addresses_disjoint(order):
+    lay = layoutlib.VNLayout(order=order, nr_l0=4, nr_l1=3, red_l1=5,
+                             vn_size=3, aw=8)
+    r, c = np.meshgrid(np.arange(5), np.arange(12), indexing="ij")
+    row, col = lay.address(r, c)
+    cells = set()
+    for rr, cc in zip(row.ravel(), col.ravel()):
+        for e in range(lay.vn_size):
+            cell = (rr + e, cc)
+            assert cell not in cells, "address collision"
+            cells.add(cell)
+    assert max(row.ravel()) + lay.vn_size <= lay.rows_needed
+
+
+def test_place_gather_roundtrip():
+    rng = np.random.default_rng(0)
+    for order in layoutlib.ORDER_TABLE:
+        lay = layoutlib.VNLayout(order=order, nr_l0=4, nr_l1=2, red_l1=3,
+                                 vn_size=4, aw=4)
+        vns = rng.standard_normal((3, 8, 4)).astype(np.float32)
+        buf = layoutlib.place(vns, lay, depth=lay.rows_needed)
+        r, c = np.meshgrid(np.arange(3), np.arange(8), indexing="ij")
+        out = layoutlib.gather(buf, lay, r, c)
+        np.testing.assert_allclose(out, vns)
+        # out-of-extent reads are zero (paper: implicit zero padding)
+        zero = layoutlib.gather(buf, lay, np.array([99]), np.array([0]))
+        assert (zero == 0).all()

@@ -1,0 +1,135 @@
+"""Functional machine vs einsum oracle: the RTL-equivalence claim.
+
+Property-style sweep: random GEMM shapes x array configs x both dataflows,
+plus direct ExecuteMapping semantics checks against Eq. 1 and the paper's
+Fig. 4 / §IV-E case studies.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.feather import feather_config
+from repro.core import isa, machine, mapper, trace
+from repro.core.mapping import tile_indices
+
+
+RNG = np.random.default_rng(42)
+
+
+def _run(gemm, cfg, choice=None):
+    plan = (mapper.search(gemm, cfg) if choice is None else None)
+    if choice is not None:
+        sched = mapper.make_schedule(gemm, choice, cfg)
+        assert sched is not None
+        plan = mapper.Plan(
+            gemm=gemm, cfg=cfg, choice=choice, schedule=sched,
+            layouts=(None,) * 3,
+            perf_minisa=None, perf_micro=None)
+    ops = trace.build_trace(plan)
+    i = RNG.standard_normal((gemm.m, gemm.k)).astype(np.float32)
+    w = RNG.standard_normal((gemm.k, gemm.n)).astype(np.float32)
+    out = machine.run_trace(cfg, ops, {"I": i, "W": w})["O"]
+    np.testing.assert_allclose(out, i @ w, rtol=2e-4, atol=2e-4)
+    return plan
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (4, 4, 4), (8, 8, 8), (16, 16, 16),
+    (5, 7, 3), (6, 10, 21), (1, 40, 88), (17, 40, 88), (32, 3, 50),
+])
+@pytest.mark.parametrize("ah,aw", [(4, 4), (4, 16), (8, 8)])
+def test_machine_matches_oracle_searched(m, k, n, ah, aw):
+    _run(mapper.Gemm(m=m, k=k, n=n), feather_config(ah, aw))
+
+
+@pytest.mark.parametrize("df", [isa.Dataflow.WOS, isa.Dataflow.IOS])
+@pytest.mark.parametrize("n_kg,n_nb", [(1, 1), (2, 1), (1, 2), (4, 1),
+                                       (2, 2), (1, 4)])
+def test_machine_matches_oracle_forced_grouping(df, n_kg, n_nb):
+    """Sweep the mapping knobs explicitly (Fig. 4's three regimes and the
+    mixed ones)."""
+    cfg = feather_config(4, 4)
+    gemm = mapper.Gemm(m=12, k=16, n=12)
+    dup = (4 // n_kg) // n_nb
+    choice = mapper.MappingChoice(
+        df=df, vn=4, m_t=12, k_t=16, n_t=12,
+        n_kg=n_kg, n_nb=n_nb, dup=dup)
+    _run(gemm, cfg, choice)
+
+
+@pytest.mark.parametrize("vn", [1, 2, 3, 4])
+def test_machine_vn_sizes(vn):
+    """VN_size < AH activates only vn rows (no double counting)."""
+    cfg = feather_config(4, 4)
+    gemm = mapper.Gemm(m=6, k=2 * vn + 1, n=9)
+    choice = mapper.MappingChoice(
+        df=isa.Dataflow.WOS, vn=vn, m_t=6, k_t=gemm.k, n_t=9,
+        n_kg=1, n_nb=1, dup=4)
+    _run(gemm, cfg, choice)
+
+
+def test_eq1_indices():
+    """Direct check of Eq. 1 + §IV-E streaming formulas."""
+    em = isa.ExecuteMapping(r0=0, c0=0, g_r=2, g_c=1, s_r=1, s_c=0)
+    es = isa.ExecuteStreaming(m0=0, s_m=3, t=3, vn_size=4)
+    idx = tile_indices(em, es, ah=4, aw=4)
+    # §IV-E case study: columns 0,1 -> j=0; columns 2,3 -> j=1
+    np.testing.assert_array_equal(idx.r, [0, 0, 1, 1])
+    # m = m0 + 3t + (a_w mod 2) // 1
+    np.testing.assert_array_equal(idx.m[0], [0, 1, 0, 1])
+    np.testing.assert_array_equal(idx.m[1], [3, 4, 3, 4])
+    np.testing.assert_array_equal(idx.m[2], [6, 7, 6, 7])
+
+
+def test_activation_and_chain():
+    """Activation instruction applies on the committed output."""
+    cfg = feather_config(4, 4)
+    gemm = mapper.Gemm(m=6, k=8, n=5)
+    plan = mapper.search(gemm, cfg)
+    relu = lambda x: np.maximum(x, 0)
+    ops = trace.build_trace(plan, activation=relu, act_name="relu")
+    i = RNG.standard_normal((6, 8)).astype(np.float32)
+    w = RNG.standard_normal((8, 5)).astype(np.float32)
+    out = machine.run_trace(cfg, ops, {"I": i, "W": w})["O"]
+    np.testing.assert_allclose(out, relu(i @ w), rtol=2e-4, atol=2e-4)
+
+
+def test_layout_orders_do_not_change_semantics():
+    """Any legal Tab. III order must produce the same result (layout is a
+    performance knob, not a semantic one)."""
+    cfg = feather_config(4, 4)
+    gemm = mapper.Gemm(m=8, k=12, n=10)
+    base = mapper.search(gemm, cfg).choice
+    for o in range(6):
+        choice = mapper.MappingChoice(
+            **{**{f.name: getattr(base, f.name)
+                  for f in base.__dataclass_fields__.values()},
+               "order_w": o, "order_i": (o + 1) % 6, "order_o": (o + 2) % 6})
+        _run(gemm, cfg, choice)
+
+
+@pytest.mark.parametrize("df", [isa.Dataflow.WOS, isa.Dataflow.IOS])
+@pytest.mark.parametrize("n_nb", [2, 4])
+def test_strided_stationary_pattern(df, n_nb):
+    """Tab. VII's strided c-pattern (s_r=G_c, s_c=1) covers the same
+    output space as the block pattern and matches the oracle."""
+    cfg = feather_config(4, 4)
+    gemm = mapper.Gemm(m=8, k=8, n=16)
+    dup = (4 // 1) // n_nb
+    choice = mapper.MappingChoice(
+        df=df, vn=4, m_t=8, k_t=8, n_t=16,
+        n_kg=1, n_nb=n_nb, dup=dup, strided=True)
+    _run(gemm, cfg, choice)
+
+
+def test_fig4_mapping_regimes():
+    """Fig. 4's three ExecuteMapping regimes on a 4x4 NEST: full
+    replication, two groups, and per-column distinct W_VNs."""
+    cfg = feather_config(4, 4)
+    gemm = mapper.Gemm(m=16, k=16, n=16)
+    for n_kg, n_nb in [(1, 1), (2, 1), (4, 1), (1, 4)]:
+        dup = (4 // n_kg) // n_nb
+        choice = mapper.MappingChoice(
+            df=isa.Dataflow.WOS, vn=4, m_t=16, k_t=16, n_t=16,
+            n_kg=n_kg, n_nb=n_nb, dup=dup)
+        _run(gemm, cfg, choice)

@@ -1,0 +1,150 @@
+"""Mapper + perf-model invariants, including hypothesis property tests."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.feather import SWEEP, feather_config
+from repro.core import isa, machine, mapper, perf, trace, workloads
+from repro.core.microinst import MicroModel
+
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# Schedule invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ah,aw", [(4, 4), (8, 32), (16, 256)])
+def test_schedule_capacity_and_cycles(ah, aw):
+    cfg = feather_config(ah, aw)
+    g = mapper.Gemm(m=2048, k=512, n=1024)
+    plan = mapper.search(g, cfg)
+    s = plan.schedule
+    ch = plan.choice
+    assert min(ch.m_t, g.m) * min(ch.k_t, g.k) <= cfg.str_bytes
+    assert min(ch.k_t, g.k) * min(ch.n_t, g.n) <= cfg.sta_bytes
+    # compute cycles can never beat the MAC lower bound
+    lower = g.macs / cfg.peak_macs_per_cycle
+    assert s.compute_cycles >= lower * 0.99
+    # utilization in (0, 1]
+    assert 0 < plan.perf_minisa.utilization <= 1.0
+
+
+def test_minisa_instruction_bytes_tiny_vs_micro():
+    cfg = feather_config(16, 256)
+    g = mapper.Gemm(m=65536, k=40, n=88)
+    plan = mapper.search(g, cfg)
+    s = plan.schedule
+    assert s.minisa_storage_bytes() < 1e5
+    assert s.micro_storage_bytes() / s.minisa_storage_bytes() > 1e3
+    # MINISA keeps < 0.1% instruction-cycle fraction (paper abstract)
+    assert plan.perf_minisa.stall_ifetch_frac < 1e-3
+
+
+def test_stall_grows_with_scale():
+    g = mapper.Gemm(m=65536, k=40, n=88)
+    stalls = []
+    for ah, aw in [(4, 4), (8, 8), (16, 16), (8, 128), (16, 256)]:
+        plan = mapper.search(g, feather_config(ah, aw))
+        stalls.append(plan.perf_micro.stall_ifetch_frac)
+    assert stalls[0] < 0.05 and stalls[1] < 0.05          # Tab. I small arrays
+    assert stalls[-1] > 0.9                               # 16x256
+    assert all(b >= a - 0.15 for a, b in zip(stalls, stalls[1:]))
+
+
+def test_speedup_at_16x256_in_paper_range():
+    g = mapper.Gemm(m=65536, k=40, n=88)
+    plan = mapper.search(g, feather_config(16, 256))
+    assert 10 < plan.speedup < 100     # paper: up to 31.6x geomean
+
+
+# ---------------------------------------------------------------------------
+# Perf-model unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_perf_engine_overlap():
+    cfg = feather_config(4, 4)
+    tiles = [perf.TileCost(fetch_bytes=0, load_bytes=0, compute_cycles=100,
+                           macs=100 * 16)] * 10
+    res = perf.simulate(tiles, cfg)
+    assert res.cycles == pytest.approx(1000)
+    assert res.utilization == pytest.approx(1.0)
+    # fetch slower than compute -> fetch-bound
+    tiles = [perf.TileCost(fetch_bytes=9 * 200, compute_cycles=100,
+                           macs=0)] * 10
+    res = perf.simulate(tiles, cfg)
+    assert res.cycles == pytest.approx(2000, rel=0.1)
+    assert res.stall_ifetch_frac == pytest.approx(0.5, abs=0.06)
+
+
+def test_micro_model_monotone_in_array():
+    g_bits = [MicroModel(feather_config(ah, aw)).storage_bits_per_cycle
+              for ah, aw in SWEEP]
+    assert all(b > 0 for b in g_bits)
+    assert g_bits[-1] > g_bits[0]
+
+
+# ---------------------------------------------------------------------------
+# Workload suite (Tab. IV)
+# ---------------------------------------------------------------------------
+
+def test_workload_suite_instantiates_table_iv():
+    by = workloads.by_domain()
+    assert len(by["fhe-bconv"]) == 41
+    assert len(by["fhe-ntt"]) == 6
+    assert len(by["zkp-ntt"]) == 6
+    assert len(by["gpt-oss"]) == 5
+    for g in by["fhe-bconv"]:
+        assert g.m == 65536 and 28 <= g.k <= 60 and 72 <= g.n <= 160
+    for g in by["zkp-ntt"]:
+        assert g.k == g.n and g.m in (g.k // 32, g.k // 16)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: end-to-end functional property
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(1, 48),
+    n=st.integers(1, 24),
+    ah=st.sampled_from([2, 4, 8]),
+    aw=st.sampled_from([4, 8]),
+)
+def test_property_machine_equals_oracle(m, k, n, ah, aw):
+    cfg = feather_config(ah, aw)
+    g = mapper.Gemm(m=m, k=k, n=n)
+    plan = mapper.search(g, cfg)
+    ops = trace.build_trace(plan)
+    i = RNG.standard_normal((m, k)).astype(np.float32)
+    w = RNG.standard_normal((k, n)).astype(np.float32)
+    out = machine.run_trace(cfg, ops, {"I": i, "W": w})["O"]
+    np.testing.assert_allclose(out, i @ w, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 4096),
+    k=st.integers(1, 4096),
+    n=st.integers(1, 4096),
+    idx=st.integers(0, len(SWEEP) - 1),
+)
+def test_property_schedule_conservation(m, k, n, idx):
+    """For any shape and array: cycles >= MAC bound, instruction bytes
+    positive, and the tile stream covers all loads/stores exactly once."""
+    ah, aw = SWEEP[idx]
+    cfg = feather_config(ah, aw)
+    g = mapper.Gemm(m=m, k=k, n=n)
+    plan = mapper.search(g, cfg)
+    s = plan.schedule
+    assert s.compute_cycles * cfg.peak_macs_per_cycle >= g.macs * 0.99
+    tiles = s.tiles("minisa")
+    assert len(tiles) == min(s.n_tiles, 1024)   # merged beyond 1024
+    assert sum(t.macs for t in tiles) == pytest.approx(g.macs)
+    assert sum(t.store_bytes for t in tiles) == pytest.approx(
+        s.store_bytes, rel=1e-6)
+    assert s.minisa_storage_bytes() > 0
