@@ -12,10 +12,15 @@ from repro.core.model_gemms import gemm_workloads
 from repro.core.planner import plan_model
 
 cfg = feather_config(16, 256)
-print(f"{'arch':>22} {'speedup':>8} {'util':>7} {'instr-red':>10}")
+print(f"{'arch':>22} {'speedup':>8} {'util':>7} {'instr-red':>10} "
+      f"{'tiles':>6} {'elided-B':>9}")
 for arch in ARCH_IDS:
     ops = gemm_workloads(get_config(arch), SHAPES["decode_32k"])
     plan = plan_model(arch, "decode_32k", ops, cfg)
     s = plan.summary()
+    # every per-shape plan carries its lowered Program: the same tiled
+    # artifact drives the machine, the perf model and these byte counts
+    n_tiles = sum(p.program.n_tiles for p in plan.plans.values())
     print(f"{arch:>22} {s['speedup']:8.2f} {s['utilization']:7.1%} "
-          f"{s['instr_reduction']:10.2e}")
+          f"{s['instr_reduction']:10.2e} {n_tiles:6d} "
+          f"{s['elided_bytes']:9.1f}")

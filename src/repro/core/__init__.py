@@ -10,11 +10,14 @@ Public surface:
   core.microinst    -- micro-instruction baseline traffic model
   core.perf         -- 5-engine analytical performance model
   core.mapper       -- mapping/layout co-search (paper \u00a7V)
-  core.trace        -- Plan -> MINISA trace lowering
+  core.program      -- tiled Program IR (the single lowered artifact)
+  core.trace        -- flat-trace compatibility wrappers over Program
   core.workloads    -- Tab. IV GEMM suite
   core.planner      -- LM model graph -> per-layer MINISA plans
 """
 
 from repro.core.mapper import Gemm, MappingChoice, Plan, search  # noqa: F401
+from repro.core.program import Program, Tile, lower  # noqa: F401
 from repro.core.trace import build_trace  # noqa: F401
-from repro.core.machine import FeatherMachine, TraceOp, run_trace  # noqa: F401
+from repro.core.machine import (FeatherMachine, TraceOp, run_program,  # noqa: F401
+                                run_trace)

@@ -8,17 +8,19 @@ Eight instructions:
   Load / Write                                -- off-chip <-> buffer movement
   Activation                                  -- on-buffer activation function
 
-Every instruction knows its encoded bitwidth for a given FeatherConfig
-(the instruction-traffic numbers of Fig. 12 are sums of these) and can be
-packed to / unpacked from an integer for round-trip tests.
+Every instruction declares its encoding once, as a field ``spec``:
+``(name, width(cfg), bias)`` triples.  Bitwidths (the instruction-traffic
+numbers of Fig. 12 are sums of these), ``encode`` packing and ``decode``
+unpacking are all derived from the same spec, so pack/unpack round-trips
+never re-derive field widths by hand.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
-import math
-from typing import Iterable
+import functools
+from typing import Callable, Iterable
 
 from repro.configs.feather import FeatherConfig, _clog2
 
@@ -58,24 +60,79 @@ def _pack(fields: Iterable[tuple[int, int]]) -> int:
     return word
 
 
+# Fields holding enums: decoded raw ints are cast back through these.
+_FIELD_CASTS: dict[str, Callable[[int], object]] = {
+    "df": Dataflow,
+    "target": BufferTarget,
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class Instruction:
-    """Base class: subclasses implement fields(cfg) -> [(value, width), ...]."""
+    """Base class: subclasses implement spec(cfg) -> [(name, width, bias)].
+
+    ``name`` is the dataclass field holding the value ("opcode" is implicit);
+    ``bias`` is subtracted on encode and re-added on decode (the ISA stores
+    1-based counts like G_r as value-1).
+    """
 
     opcode: Opcode = dataclasses.field(init=False, default=None, repr=False)
 
-    def fields(self, cfg: FeatherConfig) -> list[tuple[int, int]]:
+    @classmethod
+    def spec(cls, cfg: FeatherConfig) -> list[tuple[str, int, int]]:
         raise NotImplementedError
 
+    def fields(self, cfg: FeatherConfig) -> list[tuple[int, int]]:
+        out = []
+        for name, width, bias in self.spec(cfg):
+            if name == "opcode":
+                out.append((int(self.opcode), width))
+            else:
+                out.append((max(int(getattr(self, name)) - bias, 0), width))
+        return out
+
     def bitwidth(self, cfg: FeatherConfig) -> int:
-        return sum(w for _, w in self.fields(cfg))
+        # field widths depend only on (class, cfg), never on field values
+        return class_bitwidth(type(self), cfg)
 
     def encode(self, cfg: FeatherConfig) -> int:
         return _pack(self.fields(cfg))
 
+    @classmethod
+    def decode(cls, word: int, cfg: FeatherConfig) -> "Instruction":
+        """Inverse of encode (exact for in-range field values)."""
+        spec = cls.spec(cfg)
+        pos = sum(w for _, w, _ in spec)
+        kwargs = {}
+        for name, width, bias in spec:
+            pos -= width
+            raw = (word >> pos) & ((1 << width) - 1)
+            if name == "opcode":
+                if raw != int(cls.opcode):
+                    raise ValueError(
+                        f"opcode mismatch: got {raw:#b}, "
+                        f"expected {int(cls.opcode):#b} ({cls.__name__})")
+                continue
+            value = raw + bias
+            kwargs[name] = _FIELD_CASTS.get(name, int)(value)
+        return cls(**kwargs)
+
     @property
     def is_execute(self) -> bool:
         return False
+
+
+@functools.lru_cache(maxsize=None)
+def class_bitwidth(cls: type, cfg: FeatherConfig) -> int:
+    """Encoded width of any instance of ``cls`` under ``cfg``."""
+    return sum(w for _, w, _ in cls.spec(cfg))
+
+
+def decode(word: int, nbits: int, cfg: FeatherConfig) -> Instruction:
+    """Decode a packed word of known total width (the opcode occupies the
+    top 3 bits; leading zeros make the width part of the wire format)."""
+    opcode = Opcode((word >> (nbits - 3)) & 0b111)
+    return OPCODE_TO_CLASS[opcode].decode(word, cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -91,14 +148,15 @@ class SetLayoutBase(Instruction):
     nr_l1: int = 1        # level-1 factor of the non-reduction rank
     red_l1: int = 1       # level-1 factor of the reduction rank (K_L1 etc.)
 
-    def fields(self, cfg: FeatherConfig) -> list[tuple[int, int]]:
+    @classmethod
+    def spec(cls, cfg: FeatherConfig) -> list[tuple[str, int, int]]:
         slots = cfg.vn_slots_per_col
         return [
-            (int(self.opcode), 3),
-            (self.order, 3),
-            (max(self.nr_l0 - 1, 0), _clog2(cfg.aw)),
-            (max(self.nr_l1 - 1, 0), _clog2(slots)),
-            (max(self.red_l1 - 1, 0), _clog2(slots)),
+            ("opcode", 3, 0),
+            ("order", 3, 0),
+            ("nr_l0", _clog2(cfg.aw), 1),
+            ("nr_l1", _clog2(slots), 1),
+            ("red_l1", _clog2(slots), 1),
         ]
 
     @property
@@ -146,17 +204,18 @@ class ExecuteMapping(Instruction):
     s_r: int = 0
     s_c: int = 0
 
-    def fields(self, cfg: FeatherConfig) -> list[tuple[int, int]]:
+    @classmethod
+    def spec(cls, cfg: FeatherConfig) -> list[tuple[str, int, int]]:
         slots_col = cfg.vn_slots_per_col
         slots_tot = cfg.vn_slots_total
         return [
-            (int(self.opcode), 3),
-            (max(self.g_r - 1, 0), _clog2(cfg.aw)),
-            (max(self.g_c - 1, 0), _clog2(cfg.aw)),
-            (self.r0, _clog2(slots_tot)),
-            (self.c0, _clog2(slots_tot)),
-            (self.s_r, _clog2(slots_col)),
-            (self.s_c, _clog2(slots_col)),
+            ("opcode", 3, 0),
+            ("g_r", _clog2(cfg.aw), 1),
+            ("g_c", _clog2(cfg.aw), 1),
+            ("r0", _clog2(slots_tot), 0),
+            ("c0", _clog2(slots_tot), 0),
+            ("s_r", _clog2(slots_col), 0),
+            ("s_c", _clog2(slots_col), 0),
         ]
 
     @property
@@ -182,16 +241,16 @@ class ExecuteStreaming(Instruction):
     vn_size: int = 1
     df: Dataflow = Dataflow.WOS
 
-    def fields(self, cfg: FeatherConfig) -> list[tuple[int, int]]:
-        slots = cfg.vn_slots_per_col
-        w = _clog2(slots)
+    @classmethod
+    def spec(cls, cfg: FeatherConfig) -> list[tuple[str, int, int]]:
+        w = _clog2(cfg.vn_slots_per_col)
         return [
-            (int(self.opcode), 3),
-            (int(self.df), 1),
-            (self.m0, w),
-            (max(self.s_m - 1, 0), w),
-            (max(self.t - 1, 0), w),
-            (max(self.vn_size - 1, 0), _clog2(cfg.ah)),
+            ("opcode", 3, 0),
+            ("df", 1, 0),
+            ("m0", w, 0),
+            ("s_m", w, 1),
+            ("t", w, 1),
+            ("vn_size", _clog2(cfg.ah), 1),
         ]
 
     @property
@@ -204,35 +263,31 @@ class ExecuteStreaming(Instruction):
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
-class Load(Instruction):
-    opcode = Opcode.LOAD
+class MemAccess(Instruction):
+    """Shared encoding of off-chip <-> buffer movement (Load and Write have
+    identical field layouts; only the opcode differs)."""
     hbm_addr: int = 0
     length: int = 0          # elements
     target: BufferTarget = BufferTarget.STREAMING
 
-    def fields(self, cfg: FeatherConfig) -> list[tuple[int, int]]:
+    @classmethod
+    def spec(cls, cfg: FeatherConfig) -> list[tuple[str, int, int]]:
         return [
-            (int(self.opcode), 3),
-            (self.hbm_addr, 33),
-            (self.length, _clog2(cfg.d_elems * cfg.aw) + 1),
-            (int(self.target), 1),
+            ("opcode", 3, 0),
+            ("hbm_addr", 33, 0),
+            ("length", _clog2(cfg.d_elems * cfg.aw) + 1, 0),
+            ("target", 1, 0),
         ]
 
 
 @dataclasses.dataclass(frozen=True)
-class Write(Instruction):
-    opcode = Opcode.WRITE
-    hbm_addr: int = 0
-    length: int = 0
-    target: BufferTarget = BufferTarget.STREAMING
+class Load(MemAccess):
+    opcode = Opcode.LOAD
 
-    def fields(self, cfg: FeatherConfig) -> list[tuple[int, int]]:
-        return [
-            (int(self.opcode), 3),
-            (self.hbm_addr, 33),
-            (self.length, _clog2(cfg.d_elems * cfg.aw) + 1),
-            (int(self.target), 1),
-        ]
+
+@dataclasses.dataclass(frozen=True)
+class Write(MemAccess):
+    opcode = Opcode.WRITE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -243,18 +298,30 @@ class Activation(Instruction):
     length: int = 0
     target: BufferTarget = BufferTarget.STREAMING
 
-    def fields(self, cfg: FeatherConfig) -> list[tuple[int, int]]:
+    @classmethod
+    def spec(cls, cfg: FeatherConfig) -> list[tuple[str, int, int]]:
         return [
-            (int(self.opcode), 3),
-            (self.function, 4),
-            (int(self.target), 1),
-            (self.length, _clog2(cfg.d_elems * cfg.aw) + 1),
+            ("opcode", 3, 0),
+            ("function", 4, 0),
+            ("target", 1, 0),
+            ("length", _clog2(cfg.d_elems * cfg.aw) + 1, 0),
         ]
 
 
 ACTIVATION_FUNCS = {"none": 0, "relu": 1, "gelu": 2, "silu": 3,
                     "softmax": 4, "rmsnorm": 5, "layernorm": 6, "geglu": 7,
                     "swiglu": 8}
+
+OPCODE_TO_CLASS: dict[Opcode, type[Instruction]] = {
+    Opcode.SET_WVN_LAYOUT: SetWVNLayout,
+    Opcode.SET_IVN_LAYOUT: SetIVNLayout,
+    Opcode.SET_OVN_LAYOUT: SetOVNLayout,
+    Opcode.EXECUTE_MAPPING: ExecuteMapping,
+    Opcode.EXECUTE_STREAMING: ExecuteStreaming,
+    Opcode.LOAD: Load,
+    Opcode.WRITE: Write,
+    Opcode.ACTIVATION: Activation,
+}
 
 
 # ---------------------------------------------------------------------------

@@ -1,8 +1,8 @@
-"""FEATHER+ functional machine: executes MINISA traces in JAX.
+"""FEATHER+ functional machine: executes lowered MINISA Programs in JAX.
 
 This module plays the role the cycle-accurate RTL plays in the paper:
 it implements the *semantics* of every MINISA instruction so that a
-(mapper-produced) trace can be validated end-to-end against the plain
+(mapper-produced) Program can be validated end-to-end against the plain
 einsum oracle.  Timing lives in ``core/perf.py``; this file is purely
 functional.
 
@@ -10,21 +10,24 @@ Architecture state:
 
   streaming buffer   D_str x AW image      (single bank, FEATHER+ §III-B)
   stationary buffer  D_sta x AW image      (feeds PE local registers)
-  output buffer      dense accumulator indexed by (streamed m, stationary c)
-  layout registers   one VNLayout per operand
+  output buffer      dense accumulator over the full (streamed m,
+                     stationary c) extent; tiles drain slices of it
+  layout registers   one VNLayout per operand (re-bound by each Load)
   theta_EM register  last ExecuteMapping (ExecuteStreaming reuses r0/G_r/G_c)
 
-The compute tile (one ExecuteMapping + ExecuteStreaming pair) is a jitted
-gather -> dot -> scatter-add over the (t, a_h, a_w) lattice, i.e. the
-three-level reduction (temporal-in-PE, spatial-BIRRD, temporal-OB) collapses
-to a masked scatter-add, which is its functional meaning.
+Execution is genuinely tiled: Loads place operand *slices* (under the
+mapper's buffer-capacity bounds) and the Execute lattice addresses whatever
+is resident, with the TraceOp side-band carrying each tile's global
+offsets/bounds.  Consecutive ExecuteStreaming invocations that share every
+static parameter (shapes, strides, layouts, buffer contents) are batched
+into one ``jax.lax.scan`` over their dynamic scalars, so large GEMMs do not
+pay a per-invocation dispatch.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import Any
+from typing import Any, Iterable
 
 import jax
 import jax.numpy as jnp
@@ -32,48 +35,33 @@ import numpy as np
 
 from repro.configs.feather import FeatherConfig
 from repro.core import isa
-from repro.core.layout import VNLayout
 from repro.core import vn as vnlib
+from repro.core.layout import VNLayout
+from repro.core.program import Program, TraceOp  # noqa: F401 (re-export)
+
+# dyn vector layout for one invocation: [r0, c0, m0, j_off, m_off, c_off,
+# r_hi, c_hi, m_hi]
+_DYN_WIDTH = 9
+
+_STATICS = ("ah", "aw", "t_steps", "vn_size", "g_r", "g_c", "s_r", "s_c",
+            "s_m", "sta_red", "sta_free", "str_red", "str_free")
 
 
-@dataclasses.dataclass
-class TraceOp:
-    """An instruction plus simulation side-band metadata.
+def _invoke_core(sta_buf, str_buf, o_acc, sta_first_rows, sta_cols,
+                 str_first_rows, str_cols, dyn, *, ah, aw, t_steps, vn_size,
+                 g_r, g_c, s_r, s_c, s_m, sta_red, sta_free, str_red,
+                 str_free):
+    """One (E.Mapping, E.Streaming) pair: gather -> dot -> scatter-add.
 
-    The ISA encodes only what hardware needs (Fig. 3/5); the simulator
-    additionally needs to know *which* host tensor a Load refers to and the
-    bound VNLayout object.  ``meta`` keys used:
-
-      Load:            tensor (str), layout (VNLayout), operand ('I'|'W')
-      Set*VNLayout:    layout (VNLayout)
-      SetOVNLayout:    m_extent, n_extent (accumulator shape), commit
-                       (None | 'streaming' | 'stationary')
-      Write:           tensor (str), transpose (bool)
-      Activation:      fn (callable) applied to the committed output
+    The three-level reduction (temporal-in-PE, spatial-BIRRD, temporal-OB)
+    collapses to a masked scatter-add, which is its functional meaning.
+    Address tables are precomputed host-side from the VNLayouts (pure index
+    math) so the body is static-shape gathers + one einsum + a scatter-add;
+    all per-invocation scalars live in ``dyn`` so one compilation serves
+    every tile of the same shape class.
     """
-    inst: isa.Instruction
-    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
-
-
-# ---------------------------------------------------------------------------
-# jitted tile kernel
-# ---------------------------------------------------------------------------
-
-@partial(jax.jit, static_argnames=(
-    "ah", "aw", "t_steps", "vn_size",
-    "r0", "c0", "g_r", "g_c", "s_r", "s_c", "m0", "s_m",
-    "sta_red", "sta_free", "str_red", "str_free"))
-def _tile(sta_buf, str_buf, o_acc, sta_first_rows, sta_cols,
-          str_first_rows, str_cols, *, ah, aw, t_steps, vn_size,
-          r0, c0, g_r, g_c, s_r, s_c, m0, s_m,
-          sta_red, sta_free, str_red, str_free):
-    """Execute one (E.Mapping, E.Streaming) pair.
-
-    sta_first_rows/cols: [sta_red, sta_free] physical address tables derived
-    from the stationary layout (likewise for streaming).  Address tables are
-    precomputed host-side from the VNLayout (pure index math) so the jitted
-    body is static-shape gathers + one einsum + one scatter-add.
-    """
+    r0, c0, m0, j_off, m_off, c_off, r_hi, c_hi, m_hi = (
+        dyn[i] for i in range(_DYN_WIDTH))
     a_w = jnp.arange(aw)
     a_h = jnp.arange(ah)
     t = jnp.arange(t_steps)
@@ -81,16 +69,19 @@ def _tile(sta_buf, str_buf, o_acc, sta_first_rows, sta_cols,
     r = r0 + a_w // g_r                                        # [AW]
     c = c0 + s_r * a_h[:, None] + s_c * (a_w % g_c)[None, :]   # [AH, AW]
     m = m0 + s_m * t[:, None] + ((a_w % g_r) // g_c)[None, :]  # [T, AW]
+    j = r + j_off                                              # [AW]
 
     # "FEATHER+ activates only VN_size x AW PEs" (paper §VI-D): rows beyond
     # vn_size are skipped -- without this mask, c-index aliasing across PE
-    # rows would double-count products whenever vn_size < AH.
+    # rows would double-count products whenever vn_size < AH.  The _hi
+    # bounds are the current tile's extents: group-lattice overhang beyond
+    # them is the paper's implicit zero padding.
     row_active = a_h < vn_size                                 # [AH]
     valid_s = (row_active[:, None]
-               & (r[None, :] >= 0) & (r[None, :] < sta_red)
-               & (c >= 0) & (c < sta_free))                    # [AH, AW]
-    valid_m = (m >= 0) & (m < str_free)                        # [T, AW]
-    j_valid = (r >= 0) & (r < str_red)                         # [AW]
+               & (r[None, :] >= 0) & (r[None, :] < r_hi)
+               & (c >= 0) & (c < c_hi))                        # [AH, AW]
+    valid_m = (m >= 0) & (m < m_hi)                            # [T, AW]
+    j_valid = (j >= 0) & (j < r_hi + j_off)                    # [AW]
 
     rs = jnp.clip(r, 0, sta_red - 1)
     cs = jnp.clip(c, 0, sta_free - 1)
@@ -103,7 +94,7 @@ def _tile(sta_buf, str_buf, o_acc, sta_first_rows, sta_cols,
     s_vals = sta_buf[s_row[..., None] + e, s_col[..., None]]
     s_vals = jnp.where(valid_s[..., None], s_vals, 0)
     # streaming VN elements: [T, AW, vn]
-    js = jnp.clip(r, 0, str_red - 1)
+    js = jnp.clip(j, 0, str_red - 1)
     t_row = str_first_rows[js[None, :].repeat(t_steps, 0), ms]
     t_col = str_cols[js[None, :].repeat(t_steps, 0), ms]
     t_vals = str_buf[t_row[..., None] + e, t_col[..., None]]
@@ -113,14 +104,26 @@ def _tile(sta_buf, str_buf, o_acc, sta_first_rows, sta_cols,
     psums = jnp.einsum("twv,hwv->thw", t_vals.astype(o_acc.dtype),
                        s_vals.astype(o_acc.dtype))
 
-    # BIRRD + OB reduction == scatter-add into (m, c)
+    # BIRRD + OB reduction == scatter-add into the global (m, c) cell
     n_free = o_acc.shape[1]
-    flat = ms[:, None, :] * n_free + cs[None, :, :]            # [T, AH, AW]
-    mask = (valid_m[:, None, :] & valid_s[None, :, :])
+    mg = m + m_off
+    cg = c + c_off
+    flat = mg[:, None, :] * n_free + cg[None, :, :]            # [T, AH, AW]
+    mask = valid_m[:, None, :] & valid_s[None, :, :]
     psums = jnp.where(mask, psums, 0)
     flat = jnp.where(mask, flat, 0)
     return o_acc.reshape(-1).at[flat.reshape(-1)].add(
         psums.reshape(-1)).reshape(o_acc.shape)
+
+
+@partial(jax.jit, static_argnames=_STATICS)
+def _invoke_batch(sta_buf, str_buf, o_acc, sta_first_rows, sta_cols,
+                  str_first_rows, str_cols, dyn, **statics):
+    """lax.scan over a [N, 9] batch of same-shaped invocations."""
+    def body(acc, d):
+        return _invoke_core(sta_buf, str_buf, acc, sta_first_rows, sta_cols,
+                            str_first_rows, str_cols, d, **statics), None
+    return jax.lax.scan(body, o_acc, dyn)[0]
 
 
 def _address_tables(lay: VNLayout, red: int, free: int):
@@ -129,8 +132,12 @@ def _address_tables(lay: VNLayout, red: int, free: int):
     return jnp.asarray(first_row, jnp.int32), jnp.asarray(col, jnp.int32)
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
+
+
 class FeatherMachine:
-    """Executes a list of TraceOps against host tensors."""
+    """Executes a Program (or a flat TraceOp stream) against host tensors."""
 
     def __init__(self, cfg: FeatherConfig, max_depth: int | None = None):
         self.cfg = cfg
@@ -142,56 +149,61 @@ class FeatherMachine:
         self.reset()
 
     def reset(self):
-        self.str_buf = None
-        self.sta_buf = None
+        self._bufs: dict[str, np.ndarray | None] = {"stationary": None,
+                                                    "streaming": None}
+        self._buf_dev: dict[str, tuple[int, Any]] = {}
+        self._buf_ver = {"stationary": 0, "streaming": 0}
         self.layouts: dict[str, VNLayout] = {}
         self.layout_extents: dict[str, tuple[int, int]] = {}
         self.o_acc = None
-        self.o_extents = None
+        self.o_extents: tuple[int, int] | None = None
+        self._assembled: np.ndarray | None = None
         self.em: isa.ExecuteMapping | None = None
         self.df = isa.Dataflow.WOS
         self.outputs: dict[str, np.ndarray] = {}
-        self._addr_cache: dict[str, tuple] = {}
-        self._pending_commit: str | None = None
+        self._addr_cache: dict[tuple, tuple] = {}
+        self._pending: list[list[int]] = []
+        self._pending_key: tuple | None = None
         self._pending_activation = None
 
     # -- helpers -------------------------------------------------------------
     def _depth(self, needed: int) -> int:
-        cap = self.max_depth or max(needed, 1)
-        return max(needed, 1) if self.max_depth is None else max(cap, needed)
+        if self.max_depth is None:
+            return max(needed, 1)
+        return max(self.max_depth, needed)
 
-    def _place(self, tensor: np.ndarray, operand: str, lay: VNLayout):
-        """Convert a dense operand to VNs, place through the layout."""
-        if operand == "I":
-            vns = vnlib.to_input_vns(np.asarray(tensor), lay.vn_size)
-        elif operand == "W":
-            vns = vnlib.to_weight_vns(np.asarray(tensor), lay.vn_size)
-        else:
-            raise ValueError(operand)
-        red, free = vns.shape[0], vns.shape[1]
-        depth = self._depth(lay.rows_needed)
-        buf = np.zeros((depth, lay.aw), dtype=np.float32)
-        r_idx, c_idx = np.meshgrid(np.arange(red), np.arange(free),
-                                   indexing="ij")
-        first_row, col = lay.address(r_idx, c_idx)
-        for e in range(lay.vn_size):
-            buf[first_row + e, col] = vns[:, :, e]
-        return jnp.asarray(buf), (red, free)
+    def _role(self, target: isa.BufferTarget) -> str:
+        return ("stationary" if target == isa.BufferTarget.STATIONARY
+                else "streaming")
 
-    def _role(self, operand: str) -> str:
-        """Which physical buffer holds operand under the current dataflow."""
-        if self.df == isa.Dataflow.WOS:
-            return "stationary" if operand == "W" else "streaming"
-        return "stationary" if operand == "I" else "streaming"
+    def _buf_device(self, role: str):
+        ver, arr = self._buf_dev.get(role, (-1, None))
+        if ver != self._buf_ver[role]:
+            arr = jnp.asarray(self._bufs[role])
+            self._buf_dev[role] = (self._buf_ver[role], arr)
+        return arr
 
-    # -- instruction semantics -------------------------------------------------
-    def run(self, ops: list[TraceOp], tensors: dict[str, np.ndarray]):
+    # -- public entry points -------------------------------------------------
+    def run(self, ops: Iterable[TraceOp], tensors: dict[str, np.ndarray]):
         for op in ops:
             self._step(op, tensors)
+        self._flush()
         return self.outputs
 
+    def run_program(self, prog: Program,
+                    tensors: dict[str, np.ndarray]):
+        return self.run(prog.trace_ops(), tensors)
+
+    # -- instruction semantics -----------------------------------------------
     def _step(self, op: TraceOp, tensors):
         inst = op.inst
+        if isinstance(inst, isa.ExecuteMapping):
+            self.em = inst
+            return
+        if isinstance(inst, isa.ExecuteStreaming):
+            self._enqueue(inst, op.meta)
+            return
+        self._flush()
         if isinstance(inst, (isa.SetWVNLayout, isa.SetIVNLayout)):
             operand = "W" if isinstance(inst, isa.SetWVNLayout) else "I"
             self.layouts[operand] = op.meta["layout"]
@@ -200,84 +212,161 @@ class FeatherMachine:
             n_ext = op.meta["n_extent"]
             self.o_acc = jnp.zeros((m_ext, n_ext), dtype=jnp.float32)
             self.o_extents = (m_ext, n_ext)
+            self._assembled = np.zeros((m_ext, n_ext), dtype=np.float32)
             self.layouts["O"] = op.meta.get("layout")
-            self._pending_commit = op.meta.get("commit")
         elif isinstance(inst, isa.Load):
-            operand = op.meta["operand"]
-            lay = op.meta.get("layout") or self.layouts[operand]
-            self.layouts[operand] = lay
-            # The stationary tensor is VN-ified along its reduction rank as a
-            # [K, free] matrix regardless of dataflow; operand kind selects
-            # the grouping convention.
-            kind = "W" if operand == "W" else "I"
-            buf, extents = self._place(tensors[op.meta["tensor"]], kind, lay)
-            if inst.target == isa.BufferTarget.STATIONARY:
-                self.sta_buf = buf
-            else:
-                self.str_buf = buf
-            self.layout_extents[operand] = extents
-        elif isinstance(inst, isa.ExecuteMapping):
-            self.em = inst
-        elif isinstance(inst, isa.ExecuteStreaming):
-            self.df = inst.df
-            self._execute(inst)
+            self._load(op, tensors)
         elif isinstance(inst, isa.Activation):
             self._pending_activation = op.meta.get("fn")
         elif isinstance(inst, isa.Write):
-            out = np.asarray(self.o_acc)
-            if self._pending_activation is not None:
-                out = np.asarray(self._pending_activation(out))
-                self._pending_activation = None
-            if op.meta.get("transpose"):
-                out = out.T
-            commit_to = op.meta.get("commit_to")
-            if commit_to is not None:
-                # paper §IV-G: layer i's OB commits on-chip to the next
-                # operand buffer (IO-S: streaming, WO-S: stationary); the
-                # output becomes layer i+1's input without an off-chip
-                # round trip, and layer i+1's SetIVNLayout/Load are elided.
-                lay = op.meta["layout"]
-                buf, extents = self._place(out, "I", lay)
-                if commit_to == "stationary":
-                    self.sta_buf = buf
-                else:
-                    self.str_buf = buf
-                self.layouts["I"] = lay
-                self.layout_extents["I"] = extents
-            self.outputs[op.meta["tensor"]] = out
+            self._write(op)
         else:
             raise NotImplementedError(type(inst))
 
-    def _execute(self, es: isa.ExecuteStreaming):
+    # -- VN placement shared by Load and on-chip commit ----------------------
+    def _place(self, src: np.ndarray, operand: str, lay: VNLayout,
+               role: str, *, vn_row0: int = 0, col0: int = 0,
+               reset: bool = True) -> tuple[int, int]:
+        """VN-ify ``src`` and write it into ``role``'s buffer through
+        ``lay`` at the given VN-array offset; returns the placed extents.
+
+        The stationary tensor is VN-ified along its reduction rank as a
+        [K, free] matrix regardless of dataflow; operand kind selects the
+        grouping convention.
+        """
+        if operand == "W":
+            vns = vnlib.to_weight_vns(src, lay.vn_size)
+        else:
+            vns = vnlib.to_input_vns(src, lay.vn_size)
+        depth = self._depth(lay.rows_needed)
+        buf = self._bufs[role]
+        if reset or buf is None or buf.shape != (depth, lay.aw):
+            buf = np.zeros((depth, lay.aw), dtype=np.float32)
+        red, free = vns.shape[0], vns.shape[1]
+        r_idx, c_idx = np.meshgrid(np.arange(red), np.arange(free),
+                                   indexing="ij")
+        first_row, col = lay.address(r_idx + vn_row0, c_idx + col0)
+        for e in range(lay.vn_size):
+            buf[first_row + e, col] = vns[:, :, e]
+        self._bufs[role] = buf
+        self._buf_ver[role] += 1
+        return red, free
+
+    # -- Load: place a host-tensor slice through its layout ------------------
+    def _load(self, op: TraceOp, tensors):
+        meta = op.meta
+        name = meta["tensor"]
+        src = tensors.get(name) if tensors else None
+        if src is None:
+            src = self.outputs.get(name)
+        if src is None:
+            raise KeyError(f"Load refers to unknown tensor {name!r}")
+        src = np.asarray(src)
+        sl = meta.get("slice")
+        if sl is not None:
+            r0, r1, c0, c1 = sl
+            src = src[r0:r1, c0:c1]
+        operand = meta["operand"]
+        lay = meta.get("layout") or self.layouts[operand]
+        red, free = self._place(
+            src, operand, lay, self._role(op.inst.target),
+            vn_row0=meta.get("vn_row0", 0), col0=meta.get("col0", 0),
+            reset=meta.get("reset", True))
+        self.layouts[operand] = lay
+        self.layout_extents[operand] = tuple(
+            meta.get("extents", (red, free)))
+
+    # -- Execute: batch same-shaped invocations into one lax.scan ------------
+    def _enqueue(self, es: isa.ExecuteStreaming, meta: dict):
         if self.em is None:
             raise RuntimeError("ExecuteStreaming before ExecuteMapping")
         if self.o_acc is None:
             raise RuntimeError("ExecuteStreaming before SetOVNLayout")
-        sta_operand = "W" if self.df == isa.Dataflow.WOS else "I"
-        str_operand = "I" if self.df == isa.Dataflow.WOS else "W"
+        self.df = es.df
+        em = self.em
+        sta_operand = "W" if es.df == isa.Dataflow.WOS else "I"
+        str_operand = "I" if es.df == isa.Dataflow.WOS else "W"
         sta_lay = self.layouts[sta_operand]
         str_lay = self.layouts[str_operand]
         sta_red, sta_free = self.layout_extents[sta_operand]
         str_red, str_free = self.layout_extents[str_operand]
-        key_s = (sta_operand, id(sta_lay), sta_red, sta_free)
-        key_t = (str_operand, id(str_lay), str_red, str_free)
-        if key_s not in self._addr_cache:
-            self._addr_cache[key_s] = _address_tables(sta_lay, sta_red, sta_free)
-        if key_t not in self._addr_cache:
-            self._addr_cache[key_t] = _address_tables(str_lay, str_red, str_free)
-        sfr, scol = self._addr_cache[key_s]
-        tfr, tcol = self._addr_cache[key_t]
-        em = self.em
-        self.o_acc = _tile(
-            self.sta_buf, self.str_buf, self.o_acc, sfr, scol, tfr, tcol,
-            ah=self.cfg.ah, aw=self.cfg.aw, t_steps=es.t,
-            vn_size=es.vn_size,
-            r0=em.r0, c0=em.c0, g_r=em.g_r, g_c=em.g_c,
-            s_r=em.s_r, s_c=em.s_c, m0=es.m0, s_m=es.s_m,
-            sta_red=sta_red, sta_free=sta_free,
-            str_red=str_red, str_free=str_free)
+        key = (es.t, es.vn_size, es.s_m, es.df, em.g_r, em.g_c, em.s_r,
+               em.s_c, sta_lay, sta_red, sta_free, str_lay, str_red,
+               str_free, self._buf_ver["stationary"],
+               self._buf_ver["streaming"])
+        if self._pending and key != self._pending_key:
+            self._flush()
+        self._pending_key = key
+        self._pending.append([
+            em.r0, em.c0, es.m0,
+            meta.get("j_off", 0), meta.get("m_off", 0),
+            meta.get("c_off", 0),
+            meta.get("r_hi", sta_red), meta.get("c_hi", sta_free),
+            meta.get("m_hi", str_free)])
+
+    def _flush(self):
+        if not self._pending:
+            return
+        (t_steps, vn_size, s_m, df, g_r, g_c, s_r, s_c, sta_lay, sta_red,
+         sta_free, str_lay, str_red, str_free, _, _) = self._pending_key
+        for lay, red, free in ((sta_lay, sta_red, sta_free),
+                               (str_lay, str_red, str_free)):
+            ckey = (lay, red, free)
+            if ckey not in self._addr_cache:
+                self._addr_cache[ckey] = _address_tables(lay, red, free)
+        sfr, scol = self._addr_cache[(sta_lay, sta_red, sta_free)]
+        tfr, tcol = self._addr_cache[(str_lay, str_red, str_free)]
+        dyn = np.asarray(self._pending, dtype=np.int32)
+        self._pending = []
+        self._pending_key = None
+        # pad to the next power of two so scan lengths (compile keys) stay
+        # bounded; sentinel rows have m_hi == 0 -> no contribution
+        n = dyn.shape[0]
+        n_pad = _next_pow2(n)
+        if n_pad != n:
+            pad = np.zeros((n_pad - n, _DYN_WIDTH), np.int32)
+            dyn = np.concatenate([dyn, pad], axis=0)
+        self.o_acc = _invoke_batch(
+            self._buf_device("stationary"), self._buf_device("streaming"),
+            self.o_acc, sfr, scol, tfr, tcol, jnp.asarray(dyn),
+            ah=self.cfg.ah, aw=self.cfg.aw, t_steps=t_steps,
+            vn_size=vn_size, g_r=g_r, g_c=g_c, s_r=s_r, s_c=s_c, s_m=s_m,
+            sta_red=sta_red, sta_free=sta_free, str_red=str_red,
+            str_free=str_free)
+
+    # -- Write: drain an output-tile slice, assemble, maybe commit -----------
+    def _write(self, op: TraceOp):
+        meta = op.meta
+        ms, ns = self.o_extents
+        m0, m1, n0, n1 = meta.get("slice") or (0, ms, 0, ns)
+        block = np.asarray(self.o_acc[m0:m1, n0:n1])
+        if self._pending_activation is not None:
+            # applied per drained tile: exact for elementwise activations;
+            # row-wise ones (softmax/norms) need full-row tiles (n_n == 1)
+            block = np.asarray(self._pending_activation(block))
+            self._pending_activation = None
+        self._assembled[m0:m1, n0:n1] = block
+        out = self._assembled
+        if meta.get("transpose"):
+            out = out.T
+        self.outputs[meta["tensor"]] = out
+        if meta.get("final", True) and meta.get("commit_to") is not None:
+            # paper §IV-G: layer i's OB commits on-chip to the next operand
+            # buffer (IO-S: stationary, WO-S: streaming); the output becomes
+            # layer i+1's input without an off-chip round trip, and layer
+            # i+1's SetIVNLayout/Load are elided.
+            lay = meta["layout"]
+            red, free = self._place(np.asarray(out), "I", lay,
+                                    meta["commit_to"])
+            self.layouts["I"] = lay
+            self.layout_extents["I"] = (red, free)
 
 
-def run_trace(cfg: FeatherConfig, ops: list[TraceOp],
+def run_trace(cfg: FeatherConfig, ops: Iterable[TraceOp],
               tensors: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
     return FeatherMachine(cfg).run(ops, tensors)
+
+
+def run_program(cfg: FeatherConfig, prog: Program,
+                tensors: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+    return FeatherMachine(cfg).run_program(prog, tensors)

@@ -3,7 +3,7 @@
 Pipeline (paper Fig. 8/9):
 
   workload -> VNs -> tiles -> VN groups -> combined VN groups -> column
-  duplication -> feasible layouts -> MINISA trace -> analytical latency
+  duplication -> feasible layouts -> lowered Program -> simulated latency
 
 Search knobs (Tab. VII):
   dataflow      WO-S / IO-S (IO-S == transposed WO-S; §V-B "from the
@@ -17,9 +17,12 @@ Search knobs (Tab. VII):
                 streaming (consecutive degenerates to interleaved when d>1,
                 see ExecuteStreaming's m-offset form)
 
-Mapping-first, layout-second: mapping candidates are scored with the
-analytical perf model; for the best mappings we search a feasible layout
-(single-bank streaming-row legality + OB bank legality + capacity).
+Mapping-first, layout-second: candidates are ranked with a closed-form
+lower bound, the shortlist is *lowered to a tiled Program* and scored with
+the discrete-event model over the Program's actual tile stream, and for the
+best mappings we search a feasible layout (single-bank streaming-row
+legality + OB bank legality + capacity).  The winning Program is the one
+artifact every consumer (machine, perf, byte accounting) shares.
 """
 
 from __future__ import annotations
@@ -32,7 +35,7 @@ import numpy as np
 
 from repro.configs.feather import FeatherConfig
 from repro.core import isa, layout as layoutlib, perf
-from repro.core.microinst import MicroModel
+from repro.core import program as programlib
 
 
 # ---------------------------------------------------------------------------
@@ -81,159 +84,52 @@ class MappingChoice:
         return self.n_kg * self.n_nb * self.dup
 
 
-@dataclasses.dataclass
-class Schedule:
-    """Concrete per-tile cost streams for the perf model."""
-    choice: MappingChoice
-    gemm: Gemm
-    cfg: FeatherConfig
+@dataclasses.dataclass(frozen=True)
+class Tiling:
+    """Tile/invocation counts of a feasible choice.
+
+    Used for candidate *pruning* (the closed-form prescore) and layout
+    legality only -- all reported cycle/byte numbers come from the lowered
+    Program's actual tile stream, never from these counts.
+    """
+    ms: int
+    ks: int
+    ns: int
+    m_t: int
+    k_t: int
+    n_t: int
     n_m: int
     n_n: int
     n_k: int
+    t_steps: int
     invocations_per_tile: int
-    t_steps: int             # streamed VNs per column per invocation
     cycles_per_invocation: float
-    macs_total: int
-    minisa_bits_per_tile: float
-    minisa_layer_bits: float
-    loads_i_bytes: float
-    loads_w_bytes: float
-    store_bytes: float
 
     @property
     def n_tiles(self) -> int:
         return self.n_m * self.n_n * self.n_k
 
     @property
-    def total_invocations(self) -> int:
-        return self.n_tiles * self.invocations_per_tile
-
-    @property
-    def compute_cycles(self) -> float:
-        return self.total_invocations * self.cycles_per_invocation
-
-    # -- instruction volumes -------------------------------------------------
-    def minisa_storage_bytes(self) -> float:
-        return (self.minisa_layer_bits
-                + self.minisa_bits_per_tile * self.n_tiles) / 8.0
-
-    def micro_storage_bytes(self) -> float:
-        return MicroModel(self.cfg).storage_bytes(self.compute_cycles)
-
-    def micro_fetch_bytes(self) -> float:
-        return MicroModel(self.cfg).fetch_bytes(
-            self.compute_cycles, self.total_invocations)
-
-    # -- perf-model tile streams ----------------------------------------------
-    def tiles(self, control: str = "minisa",
-              max_tiles: int = 1024) -> list[perf.TileCost]:
-        """control in {'minisa', 'micro'} selects the fetch stream.
-
-        Tile streams longer than ``max_tiles`` are run-length merged (k
-        identical tiles -> one tile with k-scaled costs); for a uniform
-        stream the engine recurrence is linear, so merging preserves the
-        makespan to within one tile's skew while keeping the discrete-event
-        pass O(max_tiles).
-        """
-        micro = MicroModel(self.cfg)
-        out: list[perf.TileCost] = []
-        inv_cycles = self.cycles_per_invocation
-        tile_cycles = self.invocations_per_tile * inv_cycles
-        n_tiles = self.n_tiles
-        # distribute loads over the tiles that consume fresh data
-        loads_i_per = self.loads_i_bytes / max(n_tiles, 1)
-        loads_w_per = self.loads_w_bytes / max(n_tiles, 1)
-        macs_per = self.macs_total / max(n_tiles, 1)
-        out_tiles = self.n_m * self.n_n
-        store_per = self.store_bytes / max(out_tiles, 1)
-        o2s_cycles = (self.m_eff * self.n_eff) / self.cfg.aw
-        if control == "minisa":
-            fetch = self.minisa_bits_per_tile / 8.0
-        else:
-            fetch = micro.fetch_bytes(tile_cycles,
-                                      self.invocations_per_tile)
-
-        if n_tiles <= max_tiles:
-            k_period = self.n_k
-            for idx in range(n_tiles):
-                last_k = (idx + 1) % k_period == 0
-                extra = (self.minisa_layer_bits / 8.0
-                         if (idx == 0 and control == "minisa") else 0.0)
-                out.append(perf.TileCost(
-                    fetch_bytes=fetch + extra,
-                    load_bytes=loads_i_per + loads_w_per,
-                    compute_cycles=tile_cycles,
-                    out2stream_cycles=o2s_cycles if last_k else 0.0,
-                    store_bytes=store_per if last_k else 0.0,
-                    macs=macs_per))
-            return out
-
-        # merged stream: spread stores/commits uniformly (store engine is
-        # 4*AW B/cycle and almost never binding)
-        groups = max_tiles
-        base, rem = divmod(n_tiles, groups)
-        o2s_total = o2s_cycles * out_tiles
-        for gi in range(groups):
-            k = base + (1 if gi < rem else 0)
-            extra = (self.minisa_layer_bits / 8.0
-                     if (gi == 0 and control == "minisa") else 0.0)
-            out.append(perf.TileCost(
-                fetch_bytes=fetch * k + extra,
-                load_bytes=(loads_i_per + loads_w_per) * k,
-                compute_cycles=tile_cycles * k,
-                out2stream_cycles=o2s_total * k / n_tiles,
-                store_bytes=self.store_bytes * k / n_tiles,
-                macs=macs_per * k))
-        return out
-
-    @property
     def m_eff(self) -> int:
-        return min(self.m_t, self.gemm_m)
+        return min(self.m_t, self.ms)
 
     @property
     def n_eff(self) -> int:
-        return min(self.n_t, self.gemm_n)
-
-    @property
-    def gemm_m(self) -> int:
-        return self.gemm.n if self.choice.df == isa.Dataflow.IOS else self.gemm.m
-
-    @property
-    def gemm_n(self) -> int:
-        return self.gemm.m if self.choice.df == isa.Dataflow.IOS else self.gemm.n
-
-    @property
-    def m_t(self) -> int:
-        return self.choice.m_t
-
-    @property
-    def n_t(self) -> int:
-        return self.choice.n_t
+        return min(self.n_t, self.ns)
 
 
-# ---------------------------------------------------------------------------
-# Schedule construction
-# ---------------------------------------------------------------------------
-
-def make_schedule(gemm: Gemm, choice: MappingChoice,
-                  cfg: FeatherConfig) -> Schedule | None:
-    """Lower a mapping choice to tile/invocation counts + byte streams.
-
-    Returns None if the choice is infeasible (capacity or shape).
-    """
+def tiling(gemm: Gemm, choice: MappingChoice,
+           cfg: FeatherConfig) -> Tiling | None:
+    """Feasibility (capacity + shape) and tile counts; None if infeasible."""
     ah, aw = cfg.ah, cfg.aw
     vn = choice.vn
     if vn > ah or vn < 1:
         return None
-    # search orientation (IO-S transposes the GEMM)
-    ms, ks, ns = ((gemm.n, gemm.k, gemm.m)
-                  if choice.df == isa.Dataflow.IOS else
-                  (gemm.m, gemm.k, gemm.n))
-    m_t = min(choice.m_t, ms)
-    k_t = min(choice.k_t, ks)
-    n_t = min(choice.n_t, ns)
-    if min(m_t, k_t, n_t) < 1:
+    ms, ks, ns, _ = programlib._oriented(gemm, choice)
+    snapped = programlib.snap_tiling(gemm, choice, cfg)
+    if snapped is None:
         return None
+    m_t, k_t, n_t = snapped
     if choice.concurrent > aw:
         return None
     # capacity feasibility (bytes; elem_bytes == 1)
@@ -247,63 +143,19 @@ def make_schedule(gemm: Gemm, choice: MappingChoice,
     n_m = math.ceil(ms / m_t)
     n_n = math.ceil(ns / n_t)
     n_k = math.ceil(ks / k_t)
-
-    kg_tiles = math.ceil(k_t / vn)          # reduction groups per tile
-    nb_tiles = math.ceil(n_t / vn)          # n-blocks per tile
-    # Rounds iterate the group lattice; groups beyond the tile extent are
-    # zero-padded (masked) columns, so rounds = ceil per axis.
+    kg_tiles = math.ceil(k_t / vn)
+    nb_tiles = math.ceil(n_t / vn)
     invocations = (math.ceil(kg_tiles / max(choice.n_kg, 1))
                    * math.ceil(nb_tiles / max(choice.n_nb, 1)))
     t_steps = math.ceil(m_t / choice.dup)
-    # the ES T-field is bounded by D/AH; longer streams are expressed as
-    # several ExecuteStreaming instructions sharing one ExecuteMapping
-    # (sub-tiled execution, paper §IV-G)
-    t_max = max(cfg.vn_slots_per_col, 1)
-    es_per_invocation = math.ceil(t_steps / t_max)
-
-    # per-invocation cycles: stream T VNs x vn cycles each; stationary
-    # (re)load of vn VNs x vn elements per column is double-buffered and
-    # only exposed when longer than the previous invocation's streaming.
     stream_cycles = t_steps * vn
     sta_load = vn * vn
     drain = vn + cfg.birrd_stages + 2
     cycles_per_invocation = max(stream_cycles, sta_load) + drain
-
-    macs_total = gemm.macs  # useful MACs (padding excluded by definition)
-
-    # MINISA instruction bits
-    em_bits = cfg.bits_execute_mapping()
-    es_bits = cfg.bits_execute_streaming()
-    lay_bits = cfg.bits_set_layout()
-    load_bits = cfg.bits_load_store()
-    tile_bits = invocations * (em_bits + es_bits * es_per_invocation)
-    # per-layer: 3 layouts + loads (one Load per operand tile) + final writes
-    n_loads = n_m * n_k + n_n * n_k
-    n_writes = n_m * n_n
-    layer_bits = 3 * lay_bits + (n_loads + n_writes) * load_bits
-
-    # off-chip data movement (reload factors from buffer residency; n-outer,
-    # m-mid, k-inner loop order, OB accumulates over k)
-    i_bytes = ms * ks * cfg.elem_bytes
-    w_bytes = ks * ns * cfg.elem_bytes
-    i_resident = ms * ks <= cfg.str_bytes
-    w_panel_resident = ks * n_t <= cfg.sta_bytes
-    loads_i = i_bytes * (1 if i_resident else n_n)
-    loads_w = w_bytes * (1 if w_panel_resident else n_m)
-    store_bytes = ms * ns * cfg.elem_bytes
-
-    return Schedule(
-        choice=choice, gemm=gemm, cfg=cfg,
-        n_m=n_m, n_n=n_n, n_k=n_k,
-        invocations_per_tile=invocations,
-        t_steps=t_steps,
-        cycles_per_invocation=cycles_per_invocation,
-        macs_total=macs_total,
-        minisa_bits_per_tile=tile_bits,
-        minisa_layer_bits=layer_bits,
-        loads_i_bytes=loads_i,
-        loads_w_bytes=loads_w,
-        store_bytes=store_bytes)
+    return Tiling(ms=ms, ks=ks, ns=ns, m_t=m_t, k_t=k_t, n_t=n_t,
+                  n_m=n_m, n_n=n_n, n_k=n_k, t_steps=t_steps,
+                  invocations_per_tile=invocations,
+                  cycles_per_invocation=cycles_per_invocation)
 
 
 # ---------------------------------------------------------------------------
@@ -349,7 +201,6 @@ def enumerate_choices(gemm: Gemm, cfg: FeatherConfig,
         # Heuristic from §III-C: IO-S when M > N, WO-S otherwise; we still
         # search both but the pruning keeps the promising one cheap.
         for vn in _vn_candidates(ks, ah):
-            kg_full = math.ceil(ks / vn)
             # tiling: prefer the largest tiles that fit (fewer reloads)
             k_opts = _pow2_tiles(min(vn, ks), min(ks, cfg.sta_bytes))
             k_opts = [k for k in k_opts[-3:]]
@@ -388,7 +239,8 @@ def enumerate_choices(gemm: Gemm, cfg: FeatherConfig,
 # Layout feasibility (step 6)
 # ---------------------------------------------------------------------------
 
-def _layouts_for(schedule: Schedule) -> tuple[layoutlib.VNLayout,
+def _layouts_for(gemm: Gemm, choice: MappingChoice, dims: Tiling,
+                 cfg: FeatherConfig) -> tuple[layoutlib.VNLayout,
                                               layoutlib.VNLayout,
                                               layoutlib.VNLayout] | None:
     """Derive (stationary, streaming, output) layouts realising the mapping
@@ -411,46 +263,40 @@ def _layouts_for(schedule: Schedule) -> tuple[layoutlib.VNLayout,
         guaranteed when the O_VN layout's level-0 free factor >= concurrent
         n-block width.  Also verified directly.
     """
-    ch = schedule.choice
-    cfg = schedule.cfg
-    vn = ch.vn
-    kg = math.ceil(min(ch.k_t, schedule.gemm.k) / vn)
-    m_eff = schedule.m_eff
-    n_eff = schedule.n_eff
-    nb = math.ceil(n_eff / vn)
+    vn = choice.vn
+    kg = math.ceil(min(dims.k_t, gemm.k) / vn)
+    m_eff = dims.m_eff
+    n_eff = dims.n_eff
 
     # candidate orders, most-promising first
     stream_orders = [0b100, 0b010, 0b000, 0b001, 0b011, 0b101]
     for o_i in stream_orders:
         lay_i = layoutlib.layout_for(kg, m_eff, vn, cfg.aw, order=o_i,
                                      nr_l0=min(cfg.aw, m_eff))
-        if _stream_feasible(lay_i, schedule):
+        if _stream_feasible(lay_i, choice, dims, cfg):
             break
     else:
         return None
-    lay_w = layoutlib.layout_for(kg, n_eff, vn, cfg.aw, order=ch.order_w)
+    lay_w = layoutlib.layout_for(kg, n_eff, vn, cfg.aw, order=choice.order_w)
     lay_o = layoutlib.layout_for(math.ceil(n_eff / vn), m_eff, vn, cfg.aw,
-                                 order=ch.order_o)
+                                 order=choice.order_o)
     if lay_w.rows_needed > cfg.d_sta or lay_i.rows_needed > cfg.d_str:
         return None
-    if lay_o.rows_needed * cfg.acc_bytes > cfg.ob_bytes // cfg.aw * cfg.aw:
-        pass  # OB sized in words; capacity already checked in make_schedule
     return lay_w, lay_i, lay_o
 
 
-def _stream_feasible(lay_i: layoutlib.VNLayout, schedule: Schedule,
+def _stream_feasible(lay_i: layoutlib.VNLayout, choice: MappingChoice,
+                     dims: Tiling, cfg: FeatherConfig,
                      probe_steps: int = 4) -> bool:
     """Single-bank streaming legality by direct address simulation."""
-    ch = schedule.choice
-    cfg = schedule.cfg
     aw = cfg.aw
-    g_r = max(1, (aw // max(ch.n_kg, 1)))
-    g_c = max(1, ch.n_nb)
+    g_r = max(1, (aw // max(choice.n_kg, 1)))
+    g_c = max(1, choice.n_nb)
     a_w = np.arange(aw)
     j = a_w // g_r
-    for t in range(min(probe_steps, schedule.t_steps)):
-        m = ch.dup * t + (a_w % g_r) // g_c
-        valid = (m < schedule.m_eff) & (j < lay_i.red_l1)
+    for t in range(min(probe_steps, dims.t_steps)):
+        m = choice.dup * t + (a_w % g_r) // g_c
+        valid = (m < dims.m_eff) & (j < lay_i.red_l1)
         if not valid.any():
             continue
         rows, _ = lay_i.address(np.where(valid, j, 0), np.where(valid, m, 0))
@@ -471,7 +317,7 @@ class Plan:
     gemm: Gemm
     cfg: FeatherConfig
     choice: MappingChoice
-    schedule: Schedule
+    program: programlib.Program
     layouts: tuple       # (W, I, O) VNLayouts
     perf_minisa: perf.PerfResult
     perf_micro: perf.PerfResult
@@ -481,38 +327,48 @@ class Plan:
         return self.perf_micro.cycles / max(self.perf_minisa.cycles, 1e-9)
 
     def summary(self) -> dict:
-        s = self.schedule
+        p = self.program
+        minisa_bytes = p.minisa_bytes()
+        micro_bytes = p.micro_storage_bytes()
         return {
             "workload": self.gemm.name or f"{self.gemm.m}x{self.gemm.k}x{self.gemm.n}",
             "array": f"{self.cfg.ah}x{self.cfg.aw}",
             "df": self.choice.df.name,
             "vn": self.choice.vn,
-            "tile": (s.n_m, s.n_n, s.n_k),
+            "tile": (p.n_m, p.n_n, p.n_k),
             "cycles_minisa": self.perf_minisa.cycles,
             "cycles_micro": self.perf_micro.cycles,
             "speedup": self.speedup,
             "util_minisa": self.perf_minisa.utilization,
             "stall_micro": self.perf_micro.stall_ifetch_frac,
             "stall_minisa": self.perf_minisa.stall_ifetch_frac,
-            "instr_bytes_minisa": s.minisa_storage_bytes(),
-            "instr_bytes_micro": s.micro_storage_bytes(),
-            "instr_reduction": (s.micro_storage_bytes()
-                                / max(s.minisa_storage_bytes(), 1e-9)),
+            "instr_bytes_minisa": minisa_bytes,
+            "instr_bytes_micro": micro_bytes,
+            "instr_reduction": micro_bytes / max(minisa_bytes, 1e-9),
             "data_bytes": self.gemm.data_bytes,
         }
 
 
-def _prescore(sched: Schedule, cfg: FeatherConfig) -> float:
-    """Closed-form lower-bound latency for candidate ranking (the full
-    discrete-event pass runs only on the shortlist)."""
-    return max(sched.compute_cycles,
-               (sched.loads_i_bytes + sched.loads_w_bytes) / cfg.in_bw,
-               sched.store_bytes / cfg.out_bw,
-               sched.minisa_storage_bytes() / cfg.instr_bw)
+def _prescore(gemm: Gemm, dims: Tiling, cfg: FeatherConfig) -> float:
+    """Closed-form lower-bound latency for candidate *ranking* only (the
+    discrete-event pass over real Program tiles runs on the shortlist)."""
+    compute = dims.n_tiles * dims.invocations_per_tile \
+        * dims.cycles_per_invocation
+    i_bytes = dims.ms * dims.ks * cfg.elem_bytes
+    w_bytes = dims.ks * dims.ns * cfg.elem_bytes
+    loads = (i_bytes * (1 if i_bytes <= cfg.str_bytes else dims.n_n)
+             + w_bytes * (1 if dims.ks * dims.n_t <= cfg.sta_bytes
+                          else dims.n_m))
+    store = dims.ms * dims.ns * cfg.elem_bytes
+    instr = dims.n_tiles * dims.invocations_per_tile * (
+        cfg.bits_execute_mapping() + cfg.bits_execute_streaming()
+        * math.ceil(dims.t_steps / max(cfg.vn_slots_per_col, 1))) / 8.0
+    return max(compute, loads / cfg.in_bw, store / cfg.out_bw,
+               instr / cfg.instr_bw)
 
 
 def search(gemm: Gemm, cfg: FeatherConfig, top_k: int = 8,
-           shortlist: int = 24,
+           shortlist: int = 10,
            fixed_input_vn: int | None = None,
            fixed_input_order: int | None = None) -> Plan:
     """Mapping-first, layout-second co-search returning the best Plan.
@@ -523,7 +379,7 @@ def search(gemm: Gemm, cfg: FeatherConfig, top_k: int = 8,
     layer i+1 may only consider mappings whose input VN size matches and
     whose input layout order equals the committed one.
     """
-    candidates: list[tuple[float, MappingChoice, Schedule]] = []
+    candidates: list[tuple[float, MappingChoice, Tiling]] = []
     seen = set()
     for choice in enumerate_choices(gemm, cfg):
         if fixed_input_vn is not None and choice.vn != fixed_input_vn:
@@ -535,39 +391,47 @@ def search(gemm: Gemm, cfg: FeatherConfig, top_k: int = 8,
         if key in seen:
             continue
         seen.add(key)
-        sched = make_schedule(gemm, choice, cfg)
-        if sched is None:
+        dims = tiling(gemm, choice, cfg)
+        if dims is None:
             continue
-        candidates.append((_prescore(sched, cfg), choice, sched))
+        candidates.append((_prescore(gemm, dims, cfg), choice, dims))
     if not candidates:
         raise ValueError(f"no feasible mapping for {gemm} on "
                          f"{cfg.ah}x{cfg.aw}")
     candidates.sort(key=lambda x: x[0])
+    # shortlist: lower to real Programs and score the actual tile streams.
+    # Lowering is O(tiles), so huge candidate programs draw down a shared
+    # tile budget -- at least 4 candidates are always fully lowered.
     scored = []
-    for _, choice, sched in candidates[:shortlist]:
-        res = perf.simulate(sched.tiles("minisa"), cfg)
-        scored.append((res.cycles, choice, sched))
+    tile_budget = 60_000
+    for _, choice, dims in candidates[:shortlist]:
+        if len(scored) >= 4 and tile_budget <= 0:
+            break
+        tile_budget -= dims.n_tiles
+        prog = programlib.lower(gemm, choice, cfg)
+        res = perf.simulate(prog.tile_costs("minisa"), cfg)
+        scored.append((res.cycles, choice, dims, prog, res))
     scored.sort(key=lambda x: x[0])
     # layout-second: walk the best mappings until one has a feasible layout
-    for cycles, choice, sched in scored[:max(top_k, 1)]:
-        layouts = _layouts_for(sched)
-        if layouts is None:
-            continue
-        res_minisa = perf.simulate(sched.tiles("minisa"), cfg)
-        res_micro = perf.simulate(sched.tiles("micro"), cfg)
-        return Plan(gemm=gemm, cfg=cfg, choice=choice, schedule=sched,
-                    layouts=layouts, perf_minisa=res_minisa,
-                    perf_micro=res_micro)
-    # fall back: accept best mapping with default layouts (always functional;
-    # perf model unchanged -- conflicts would cost extra cycles on silicon)
-    cycles, choice, sched = scored[0]
-    vn = choice.vn
-    kg = math.ceil(min(choice.k_t, gemm.k) / vn)
-    lay_w = layoutlib.layout_for(kg, sched.n_eff, vn, cfg.aw)
-    lay_i = layoutlib.layout_for(kg, sched.m_eff, vn, cfg.aw)
-    lay_o = layoutlib.layout_for(math.ceil(sched.n_eff / vn), sched.m_eff,
-                                 vn, cfg.aw)
-    return Plan(gemm=gemm, cfg=cfg, choice=choice, schedule=sched,
-                layouts=(lay_w, lay_i, lay_o),
-                perf_minisa=perf.simulate(sched.tiles("minisa"), cfg),
-                perf_micro=perf.simulate(sched.tiles("micro"), cfg))
+    chosen = None
+    for cycles, choice, dims, prog, res in scored[:max(top_k, 1)]:
+        layouts = _layouts_for(gemm, choice, dims, cfg)
+        if layouts is not None:
+            chosen = (choice, dims, prog, res, layouts)
+            break
+    if chosen is None:
+        # fall back: best mapping with default layouts (always functional;
+        # perf model unchanged -- conflicts would cost cycles on silicon)
+        cycles, choice, dims, prog, res = scored[0]
+        vn = choice.vn
+        kg = math.ceil(min(choice.k_t, gemm.k) / vn)
+        lay_w = layoutlib.layout_for(kg, dims.n_eff, vn, cfg.aw)
+        lay_i = layoutlib.layout_for(kg, dims.m_eff, vn, cfg.aw)
+        lay_o = layoutlib.layout_for(math.ceil(dims.n_eff / vn),
+                                     dims.m_eff, vn, cfg.aw)
+        chosen = (choice, dims, prog, res, (lay_w, lay_i, lay_o))
+    choice, dims, prog, res_minisa, layouts = chosen
+    res_micro = perf.simulate(prog.tile_costs("micro"), cfg)
+    return Plan(gemm=gemm, cfg=cfg, choice=choice, program=prog,
+                layouts=layouts, perf_minisa=res_minisa,
+                perf_micro=res_micro)

@@ -11,21 +11,23 @@ architectures (see configs/<arch>.py:gemm_workloads).  The planner:
   1. runs the mapper per distinct GEMM shape (shapes repeat across layers,
      so plans are memoised -- the framework-level analogue of layout
      regions),
-  2. applies the inter-layer elision discount to the MINISA byte count
-     (chained layers skip one Set*VNLayout + the intermediate Load/Write
-     pair when the producer's output layout already matches),
+  2. applies the inter-layer elision as a Program-to-Program transform:
+     a chained layer's Program drops its SetIVNLayout + input Load
+     (``program.elide_input``), and the byte delta is measured on the
+     transformed instruction stream rather than discounted by formula,
   3. aggregates instruction traffic, stall fractions, speedup, utilization
-     per architecture x shape cell.
+     per architecture x shape cell -- all byte counts taken from the
+     lowered Programs' actual tile streams.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
 from repro.configs.feather import FeatherConfig
 from repro.core import mapper as mapperlib
+from repro.core import program as programlib
 from repro.core.mapper import Gemm
 
 
@@ -99,28 +101,29 @@ class ArchPlan:
 def plan_model(arch: str, shape: str, ops: Sequence[GemmOp],
                cfg: FeatherConfig) -> ArchPlan:
     plans: dict[tuple, mapperlib.Plan] = {}
+    elided_cache: dict[tuple, float] = {}
     out = ArchPlan(arch=arch, shape=shape, cfg=cfg, ops=list(ops),
                    plans=plans)
-    lay_bits = cfg.bits_set_layout()
-    load_bits = cfg.bits_load_store()
     for op in ops:
         g = op.gemm
         key = (g.m, g.k, g.n)
         if key not in plans:
             plans[key] = mapperlib.search(g, cfg)
         plan = plans[key]
-        sched = plan.schedule
+        prog = plan.program
         count = g.count
         out.total_macs += g.macs * count
         out.cycles_minisa += plan.perf_minisa.cycles * count
         out.cycles_micro += plan.perf_micro.cycles * count
-        minisa_b = sched.minisa_storage_bytes()
+        minisa_b = prog.minisa_bytes()
         if op.chained:
-            # SetIVNLayout elision + skipped intermediate Load/Write pair
-            elide_bits = lay_bits + 2 * load_bits
-            minisa_b = max(0.0, minisa_b - elide_bits / 8.0)
-            out.elided_bytes += elide_bits / 8.0 * count
+            if key not in elided_cache:
+                chained_prog = programlib.elide_input(prog)
+                elided_cache[key] = chained_prog.minisa_bytes()
+            chained_b = elided_cache[key]
+            out.elided_bytes += max(0.0, minisa_b - chained_b) * count
+            minisa_b = chained_b
         out.minisa_bytes += minisa_b * count
-        out.micro_bytes += sched.micro_storage_bytes() * count
+        out.micro_bytes += prog.micro_storage_bytes() * count
         out.data_bytes += g.data_bytes * count
     return out

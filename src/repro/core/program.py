@@ -1,0 +1,706 @@
+"""Tiled Program IR: the single lowered artifact shared by simulation,
+byte accounting and functional execution.
+
+A :class:`Program` is an ordered sequence of :class:`Tile`\\ s.  Each tile
+carries its MINISA instructions (Load* / ExecuteMapping / ExecuteStreaming /
+Activation / Write TraceOps with simulator side-band metadata), knows its
+operand-residency mode, and exposes a :class:`repro.core.perf.TileCost`.
+One lowering produces everything downstream:
+
+    Gemm + MappingChoice --lower()--> Program
+        --> FeatherMachine.run_program   (functional execution, tile by tile)
+        --> perf.simulate(tile_costs())  (5-engine analytical model)
+        --> minisa_bytes()               (byte accounting == trace_bits of
+                                          the flattened instruction stream)
+
+so what we *count* is by construction what we *execute* -- there is no
+separate closed-form instruction/byte model.
+
+Tiling & residency
+------------------
+The loop nest is n-outer, m-mid, k-inner in the mapper's search
+orientation (IO-S transposes the GEMM).  Each operand is lowered in one of
+three residency modes, decided against the real buffer capacities:
+
+  full    the whole operand fits: one Load up front, VN indices are global
+  panel   (stationary only) one k-panel per n-tile fits: incremental Loads
+          per k-tile, reused across the m loop; VN rows global, cols local
+  tiled   per-tile Loads every visit; VN indices tile-local
+
+Execute instructions address whatever the Loads put in the buffer, so the
+index bases differ per mode; the ExecuteStreaming TraceOp meta carries the
+tile's global offsets/bounds for the simulator (j_off / m_off / c_off /
+r_hi / c_hi / m_hi), which is side-band only -- hardware derives the same
+from the Load base registers.
+
+Inner-loop compression: the EM/ES block of a tile is stored as a compact
+:class:`ExecBlock` descriptor (instruction *counts* and bitwidths are
+exact; the instruction objects themselves materialise lazily via
+``trace_ops()``), so lowering a multi-million-invocation GEMM stays O(tiles)
+while the flattened stream remains well-defined and byte-identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Iterator
+
+from repro.configs.feather import FeatherConfig
+from repro.core import isa, layout as layoutlib, perf
+from repro.core.microinst import MicroModel
+
+
+@dataclasses.dataclass
+class TraceOp:
+    """An instruction plus simulation side-band metadata.
+
+    The ISA encodes only what hardware needs (Fig. 3/5); the simulator
+    additionally needs to know *which* host tensor a Load refers to, the
+    bound VNLayout object and where a tile sits in the global problem.
+    ``meta`` keys used:
+
+      Load:            tensor (str), operand ('I'|'W'), layout (VNLayout),
+                       slice ((r0, r1, c0, c1) host coords | None = whole),
+                       vn_row0 / col0 (placement offset in the layout's VN
+                       array), reset (bool), extents ((red, free) validity
+                       region)
+      Set*VNLayout:    layout (VNLayout)
+      SetOVNLayout:    m_extent, n_extent (full accumulator shape)
+      ExecuteStreaming: j_off, m_off, c_off, r_hi, c_hi, m_hi (tile bounds)
+      Write:           tensor (str), transpose (bool), slice ((m0, m1, n0,
+                       n1) in search orientation), final (bool), commit_to
+                       (None | 'streaming' | 'stationary'), layout (commit
+                       re-bind layout)
+      Activation:      fn (callable) applied to the drained output slice
+    """
+    inst: isa.Instruction
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Execute block (compressed EM/ES inner loop of one tile)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExecBlock:
+    """The (ExecuteMapping, ExecuteStreaming*) lattice of one tile.
+
+    Shared by every tile of the same extent class; instruction counts and
+    per-instruction bitwidths are exact, materialisation is lazy.
+    """
+    kg_ext: int          # reduction groups covered by this tile
+    nb_ext: int          # n-blocks covered by this tile
+    m_ext: int           # streamed free-rank extent
+    vn: int
+    n_kg: int
+    n_nb: int
+    g_r: int
+    g_c: int
+    s_r: int
+    s_c: int
+    t_max: int           # ES T-field bound (paper §IV-G sub-tiling)
+    df: isa.Dataflow
+
+    @property
+    def dup(self) -> int:
+        return max(1, self.g_r // self.g_c)
+
+    @property
+    def t_steps(self) -> int:
+        return math.ceil(self.m_ext / self.dup)
+
+    @property
+    def n_invocations(self) -> int:
+        return (math.ceil(self.kg_ext / max(self.n_kg, 1))
+                * math.ceil(self.nb_ext / max(self.n_nb, 1)))
+
+    @property
+    def es_per_invocation(self) -> int:
+        return math.ceil(self.t_steps / max(self.t_max, 1))
+
+    @property
+    def n_es(self) -> int:
+        return self.n_invocations * self.es_per_invocation
+
+    def bits(self, cfg: FeatherConfig) -> int:
+        return (self.n_invocations * cfg.bits_execute_mapping()
+                + self.n_es * cfg.bits_execute_streaming())
+
+    def compute_cycles(self, cfg: FeatherConfig) -> float:
+        """Per-invocation: stream T VNs x vn cycles each; the stationary
+        (re)load of vn VNs x vn elements is double-buffered and exposed
+        only when longer than the streaming phase; plus drain."""
+        stream = self.t_steps * self.vn
+        sta_load = self.vn * self.vn
+        drain = self.vn + cfg.birrd_stages + 2
+        return self.n_invocations * (max(stream, sta_load) + drain)
+
+    def trace_ops(self, sta_row_base: int, sta_col_base: int,
+                  str_m_base: int, es_meta: dict) -> Iterator[TraceOp]:
+        """Materialise the EM/ES stream with this tile's index bases."""
+        dup = self.dup
+        m_span = dup * max(self.t_max, 1)
+        for kg0 in range(0, self.kg_ext, self.n_kg):
+            em = isa.ExecuteMapping(
+                r0=sta_row_base + kg0, c0=sta_col_base,
+                g_r=self.g_r, g_c=self.g_c, s_r=self.s_r, s_c=self.s_c)
+            for nb0 in range(0, self.nb_ext, self.n_nb):
+                if nb0:
+                    em = dataclasses.replace(
+                        em, c0=sta_col_base + nb0 * self.vn)
+                yield TraceOp(em, {})
+                for mc in range(0, self.m_ext, m_span):
+                    t = min(self.t_max,
+                            math.ceil((self.m_ext - mc) / dup))
+                    yield TraceOp(
+                        isa.ExecuteStreaming(
+                            m0=str_m_base + mc, s_m=dup, t=t,
+                            vn_size=self.vn, df=self.df),
+                        es_meta)
+
+
+# ---------------------------------------------------------------------------
+# Tile
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Tile:
+    """One schedulable unit: its loads, its execute block, its drains."""
+    im: int
+    i_n: int
+    ik: int
+    m0: int                      # element offsets (search orientation)
+    n0: int
+    k0: int
+    m_ext: int
+    n_ext: int
+    k_ext: int
+    loads: tuple[TraceOp, ...]
+    exec_block: ExecBlock
+    drains: tuple[TraceOp, ...]  # [Activation,] Write at the last k tile
+    sta_row_base: int
+    sta_col_base: int
+    str_row_base: int
+    str_m_base: int
+    last_k: bool
+
+    @property
+    def macs(self) -> int:
+        return self.m_ext * self.k_ext * self.n_ext
+
+    def es_meta(self) -> dict:
+        return {
+            "j_off": self.str_row_base - self.sta_row_base,
+            "m_off": self.m0 - self.str_m_base,
+            "c_off": self.n0 - self.sta_col_base,
+            "r_hi": self.sta_row_base + self.exec_block.kg_ext,
+            "c_hi": self.sta_col_base + self.n_ext,
+            "m_hi": self.str_m_base + self.m_ext,
+        }
+
+    def trace_ops(self) -> Iterator[TraceOp]:
+        yield from self.loads
+        yield from self.exec_block.trace_ops(
+            self.sta_row_base, self.sta_col_base, self.str_m_base,
+            self.es_meta())
+        yield from self.drains
+
+    def bits(self, cfg: FeatherConfig) -> int:
+        fixed = sum(op.inst.bitwidth(cfg)
+                    for op in self.loads + self.drains)
+        return fixed + self.exec_block.bits(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Program
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Program:
+    """Lowered tiled program for one GEMM layer."""
+    gemm: Any                     # mapper.Gemm (kept duck-typed: m/k/n)
+    choice: Any                   # mapper.MappingChoice
+    cfg: FeatherConfig
+    prologue: tuple[TraceOp, ...]   # SetIVNLayout? SetWVNLayout SetOVNLayout
+    tiles: list[Tile]
+    n_m: int
+    n_n: int
+    n_k: int
+    residency: dict[str, str]     # {'stationary': mode, 'streaming': mode}
+    input_role: str               # 'streaming' (WO-S) | 'stationary' (IO-S)
+    out_name: str = "O"
+    activation: Callable | None = None
+    act_name: str = "none"
+    input_elided: bool = False
+
+    # -- structure -----------------------------------------------------------
+    @property
+    def n_tiles(self) -> int:
+        return len(self.tiles)
+
+    @property
+    def total_invocations(self) -> int:
+        return sum(t.exec_block.n_invocations for t in self.tiles)
+
+    @property
+    def macs(self) -> int:
+        return sum(t.macs for t in self.tiles)
+
+    def trace_ops(self) -> Iterator[TraceOp]:
+        yield from self.prologue
+        for tile in self.tiles:
+            yield from tile.trace_ops()
+
+    def instructions(self) -> Iterator[isa.Instruction]:
+        for op in self.trace_ops():
+            yield op.inst
+
+    # -- byte accounting (exact: equals trace_bits of the flat stream) -------
+    def minisa_bits(self) -> int:
+        cfg = self.cfg
+        bits = sum(op.inst.bitwidth(cfg) for op in self.prologue)
+        block_bits: dict[int, int] = {}
+        for tile in self.tiles:
+            key = id(tile.exec_block)
+            if key not in block_bits:
+                block_bits[key] = tile.exec_block.bits(cfg)
+            bits += block_bits[key] + _fixed_bits(tile, cfg)
+        return bits
+
+    def minisa_bytes(self) -> float:
+        return self.minisa_bits() / 8.0
+
+    def summary(self) -> dict:
+        return isa.trace_summary(self.instructions(), self.cfg)
+
+    # -- timing --------------------------------------------------------------
+    @property
+    def compute_cycles(self) -> float:
+        cycles: dict[int, float] = {}
+        total = 0.0
+        for tile in self.tiles:
+            key = id(tile.exec_block)
+            if key not in cycles:
+                cycles[key] = tile.exec_block.compute_cycles(self.cfg)
+            total += cycles[key]
+        return total
+
+    # -- micro-instruction baseline (counterfactual control scheme) ----------
+    def micro_storage_bytes(self) -> float:
+        return MicroModel(self.cfg).storage_bytes(self.compute_cycles)
+
+    def micro_fetch_bytes(self) -> float:
+        return MicroModel(self.cfg).fetch_bytes(
+            self.compute_cycles, self.total_invocations)
+
+    # -- perf-model tile stream (THE tile stream, not a re-derivation) -------
+    def tile_costs(self, control: str = "minisa",
+                   max_tiles: int = 4096) -> list[perf.TileCost]:
+        """control in {'minisa', 'micro'} selects the fetch stream.
+
+        Streams longer than ``max_tiles`` are run-length merged (k
+        consecutive tiles -> one cost with summed fields); the engine
+        recurrence is linear over uniform runs, so merging preserves the
+        makespan to within one tile's skew.
+        """
+        cfg = self.cfg
+        micro = MicroModel(cfg) if control == "micro" else None
+        elem = cfg.elem_bytes
+        prologue_bits = sum(op.inst.bitwidth(cfg) for op in self.prologue)
+        block_cache: dict[int, tuple[int, float, int]] = {}
+        out: list[perf.TileCost] = []
+        for i, tile in enumerate(self.tiles):
+            key = id(tile.exec_block)
+            if key not in block_cache:
+                blk = tile.exec_block
+                block_cache[key] = (blk.bits(cfg), blk.compute_cycles(cfg),
+                                    blk.n_invocations)
+            blk_bits, blk_cycles, blk_inv = block_cache[key]
+            fixed_bits = _fixed_bits(tile, cfg)
+            if control == "micro":
+                fetch = micro.fetch_bytes(blk_cycles, blk_inv)
+            else:
+                fetch = (blk_bits + fixed_bits
+                         + (prologue_bits if i == 0 else 0)) / 8.0
+            load_bytes = sum(op.inst.length for op in tile.loads) * elem
+            store = sum(op.inst.length for op in tile.drains
+                        if isinstance(op.inst, isa.Write)) * elem
+            o2s = (tile.m_ext * tile.n_ext) / cfg.aw if tile.last_k else 0.0
+            out.append(perf.TileCost(
+                fetch_bytes=fetch, load_bytes=load_bytes,
+                compute_cycles=blk_cycles, out2stream_cycles=o2s,
+                store_bytes=float(store), macs=float(tile.macs)))
+        if len(out) <= max_tiles:
+            return out
+        merged: list[perf.TileCost] = []
+        base, rem = divmod(len(out), max_tiles)
+        idx = 0
+        for gi in range(max_tiles):
+            k = base + (1 if gi < rem else 0)
+            run = out[idx:idx + k]
+            idx += k
+            merged.append(perf.TileCost(
+                fetch_bytes=sum(t.fetch_bytes for t in run),
+                load_bytes=sum(t.load_bytes for t in run),
+                compute_cycles=sum(t.compute_cycles for t in run),
+                out2stream_cycles=sum(t.out2stream_cycles for t in run),
+                store_bytes=sum(t.store_bytes for t in run),
+                macs=sum(t.macs for t in run)))
+        return merged
+
+
+def _fixed_bits(tile: Tile, cfg: FeatherConfig) -> int:
+    """Bits of a tile's non-execute instructions (class-constant widths)."""
+    bits = len(tile.loads) * isa.class_bitwidth(isa.Load, cfg)
+    for op in tile.drains:
+        bits += isa.class_bitwidth(type(op.inst), cfg)
+    return bits
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+FULL, PANEL, TILED = "full", "panel", "tiled"
+
+#: Activations that normalise over a full output row and therefore cannot
+#: be applied to a partial-row (n-tiled) drain.
+ROW_WISE_ACTIVATIONS = frozenset({"softmax", "rmsnorm", "layernorm"})
+
+
+def _oriented(gemm, choice) -> tuple[int, int, int, bool]:
+    wos = choice.df == isa.Dataflow.WOS
+    ms, ks, ns = ((gemm.m, gemm.k, gemm.n) if wos
+                  else (gemm.n, gemm.k, gemm.m))
+    return ms, ks, ns, wos
+
+
+def snap_tiling(gemm, choice, cfg) -> tuple[int, int, int] | None:
+    """Clip tile extents to the problem and snap k_t to a VN multiple
+    (global VN-row indexing of resident operands needs aligned k tiles).
+    Returns (m_t, k_t, n_t) or None if degenerate."""
+    ms, ks, ns, _ = _oriented(gemm, choice)
+    vn = choice.vn
+    if vn < 1 or vn > cfg.ah:
+        return None
+    m_t = min(choice.m_t, ms)
+    k_t = min(choice.k_t, ks)
+    n_t = min(choice.n_t, ns)
+    if min(m_t, k_t, n_t) < 1:
+        return None
+    if k_t < ks:
+        k_t = max(vn, (k_t // vn) * vn)
+    return m_t, k_t, n_t
+
+
+def lower(gemm, choice, cfg: FeatherConfig, *,
+          activation: Callable | None = None, act_name: str = "none",
+          out_name: str = "O", commit_to: str | None = None,
+          commit_layout=None, elide_input: bool = False) -> Program:
+    """Lower a (Gemm, MappingChoice) to a tiled Program.
+
+    ``elide_input`` drops the input operand's SetIVNLayout + Load(s)
+    (paper §IV-G chained layers: the producer's committing Write already
+    placed the data); only legal when the input operand is fully resident
+    -- callers should check ``input_elidable`` first.
+    """
+    ms, ks, ns, wos = _oriented(gemm, choice)
+    vn = choice.vn
+    aw, elem = cfg.aw, cfg.elem_bytes
+    snapped = snap_tiling(gemm, choice, cfg)
+    if snapped is None:
+        raise ValueError(f"infeasible mapping choice {choice} for {gemm}")
+    m_t, k_t, n_t = snapped
+    n_m = math.ceil(ms / m_t)
+    n_n = math.ceil(ns / n_t)
+    n_k = math.ceil(ks / k_t)
+    if activation is not None and act_name in ROW_WISE_ACTIVATIONS \
+            and n_n > 1:
+        # drains apply the activation per output tile; a row-wise function
+        # over a partial row would be silently wrong
+        raise ValueError(
+            f"row-wise activation {act_name!r} needs full output rows per "
+            f"tile (n_n == 1), got n_n={n_n} for {gemm}")
+    kg_total = math.ceil(ks / vn)
+
+    # residency (real buffer-capacity bounds)
+    str_mode = FULL if ms * ks * elem <= cfg.str_bytes else TILED
+    if ks * ns * elem <= cfg.sta_bytes:
+        sta_mode = FULL
+    elif ks * n_t * elem <= cfg.sta_bytes:
+        sta_mode = PANEL
+    else:
+        sta_mode = TILED
+
+    sta_name, str_name = ("W", "I") if wos else ("I", "W")
+    input_role = "streaming" if wos else "stationary"
+    df = isa.Dataflow.WOS if wos else isa.Dataflow.IOS
+
+    # full-region layouts (prologue Set*VNLayout payloads; Loads re-bind
+    # region/tile layouts as data arrives)
+    lay_sta = layoutlib.layout_for(kg_total, ns, vn, aw, order=choice.order_w)
+    lay_str = layoutlib.layout_for(kg_total, ms, vn, aw, order=choice.order_i)
+    lay_out = layoutlib.layout_for(math.ceil(ns / vn), ms, vn, aw,
+                                   order=choice.order_o)
+
+    def _lay_op(operand_tensor: str, lay) -> TraceOp:
+        return TraceOp(lay.to_instruction(operand_tensor), {"layout": lay})
+
+    prologue: list[TraceOp] = []
+    if not elide_input:
+        prologue.append(_lay_op("I", lay_str if wos else lay_sta))
+    prologue.append(_lay_op("W", lay_sta if wos else lay_str))
+    prologue.append(TraceOp(
+        isa.SetOVNLayout(order=choice.order_o, nr_l0=min(ms, aw),
+                         nr_l1=math.ceil(ms / min(ms, aw)),
+                         red_l1=math.ceil(ns / vn)),
+        {"layout": lay_out, "m_extent": ms, "n_extent": ns}))
+
+    # host-coordinate slices: the stationary tensor has (red, free) =
+    # (k, n-search); the streaming one (free, red) = (m-search, k) -- which
+    # host axes those are depends on the dataflow.
+    def sta_slice(k0, k1, f0, f1):
+        return (k0, k1, f0, f1) if wos else (f0, f1, k0, k1)
+
+    def str_slice(f0, f1, k0, k1):
+        return (f0, f1, k0, k1) if wos else (k0, k1, f0, f1)
+
+    g_r = aw // max(choice.n_kg, 1)
+    g_c = max(choice.n_nb, 1)
+    s_r, s_c = (g_c, 1) if choice.strided else (1, vn)
+    t_max = max(cfg.vn_slots_per_col, 1)
+
+    load_bits_target = (isa.BufferTarget.STATIONARY,
+                        isa.BufferTarget.STREAMING)
+    blocks: dict[tuple, ExecBlock] = {}
+    lay_cache: dict[tuple, layoutlib.VNLayout] = {}
+
+    def _lay(rows: int, cols: int, order: int) -> layoutlib.VNLayout:
+        key = (rows, cols, order)
+        if key not in lay_cache:
+            lay_cache[key] = layoutlib.layout_for(rows, cols, vn, aw,
+                                                  order=order)
+        return lay_cache[key]
+
+    tiles: list[Tile] = []
+    hbm_sta, hbm_str = 0, ks * ns  # nominal HBM base addresses
+
+    for i_n in range(n_n):
+        n0 = i_n * n_t
+        n_ext = min(n_t, ns - n0)
+        for im in range(n_m):
+            m0 = im * m_t
+            m_ext = min(m_t, ms - m0)
+            for ik in range(n_k):
+                k0 = ik * k_t
+                k_ext = min(k_t, ks - k0)
+                kg_ext = math.ceil(k_ext / vn)
+                nb_ext = math.ceil(n_ext / vn)
+                kg0 = k0 // vn
+                first = i_n == 0 and im == 0 and ik == 0
+                loads: list[TraceOp] = []
+
+                # stationary loads (under IO-S the stationary operand IS
+                # the layer input, so elision skips this load instead)
+                if sta_mode == FULL:
+                    if first and not (elide_input and sta_name == "I"):
+                        loads.append(TraceOp(
+                            isa.Load(hbm_addr=hbm_sta, length=ks * ns,
+                                     target=load_bits_target[0]),
+                            {"tensor": sta_name, "operand": sta_name,
+                             "layout": lay_sta, "slice": None,
+                             "vn_row0": 0, "col0": 0, "reset": True,
+                             "extents": (kg_total, ns)}))
+                    sta_row_base, sta_col_base = kg0, n0
+                elif sta_mode == PANEL:
+                    if im == 0:
+                        panel_lay = _lay(kg_total, n_ext, choice.order_w)
+                        loads.append(TraceOp(
+                            isa.Load(hbm_addr=hbm_sta + k0 * ns + n0,
+                                     length=k_ext * n_ext,
+                                     target=load_bits_target[0]),
+                            {"tensor": sta_name, "operand": sta_name,
+                             "layout": panel_lay,
+                             "slice": sta_slice(k0, k0 + k_ext,
+                                                n0, n0 + n_ext),
+                             "vn_row0": kg0, "col0": 0, "reset": ik == 0,
+                             "extents": (kg_total, n_ext)}))
+                    sta_row_base, sta_col_base = kg0, 0
+                else:
+                    tile_lay = _lay(kg_ext, n_ext, choice.order_w)
+                    loads.append(TraceOp(
+                        isa.Load(hbm_addr=hbm_sta + k0 * ns + n0,
+                                 length=k_ext * n_ext,
+                                 target=load_bits_target[0]),
+                        {"tensor": sta_name, "operand": sta_name,
+                         "layout": tile_lay,
+                         "slice": sta_slice(k0, k0 + k_ext, n0, n0 + n_ext),
+                         "vn_row0": 0, "col0": 0, "reset": True,
+                         "extents": (kg_ext, n_ext)}))
+                    sta_row_base, sta_col_base = 0, 0
+
+                # streaming loads
+                if str_mode == FULL:
+                    if first and not (elide_input and str_name == "I"):
+                        loads.append(TraceOp(
+                            isa.Load(hbm_addr=hbm_str, length=ms * ks,
+                                     target=load_bits_target[1]),
+                            {"tensor": str_name, "operand": str_name,
+                             "layout": lay_str, "slice": None,
+                             "vn_row0": 0, "col0": 0, "reset": True,
+                             "extents": (kg_total, ms)}))
+                    str_row_base, str_m_base = kg0, m0
+                else:
+                    tile_lay = _lay(kg_ext, m_ext, choice.order_i)
+                    loads.append(TraceOp(
+                        isa.Load(hbm_addr=hbm_str + m0 * ks + k0,
+                                 length=m_ext * k_ext,
+                                 target=load_bits_target[1]),
+                        {"tensor": str_name, "operand": str_name,
+                         "layout": tile_lay,
+                         "slice": str_slice(m0, m0 + m_ext, k0, k0 + k_ext),
+                         "vn_row0": 0, "col0": 0, "reset": True,
+                         "extents": (kg_ext, m_ext)}))
+                    str_row_base, str_m_base = 0, 0
+
+                bkey = (kg_ext, nb_ext, m_ext)
+                if bkey not in blocks:
+                    blocks[bkey] = ExecBlock(
+                        kg_ext=kg_ext, nb_ext=nb_ext, m_ext=m_ext, vn=vn,
+                        n_kg=choice.n_kg, n_nb=choice.n_nb, g_r=g_r,
+                        g_c=g_c, s_r=s_r, s_c=s_c, t_max=t_max, df=df)
+
+                last_k = ik == n_k - 1
+                drains: list[TraceOp] = []
+                if last_k:
+                    if activation is not None:
+                        drains.append(TraceOp(
+                            isa.Activation(
+                                function=isa.ACTIVATION_FUNCS.get(
+                                    act_name, 0),
+                                length=m_ext * n_ext,
+                                target=isa.BufferTarget.STREAMING),
+                            {"fn": activation}))
+                    final = (i_n == n_n - 1 and im == n_m - 1)
+                    wmeta: dict[str, Any] = {
+                        "tensor": out_name, "transpose": not wos,
+                        "slice": (m0, m0 + m_ext, n0, n0 + n_ext),
+                        "final": final}
+                    if final and commit_to is not None:
+                        wmeta["commit_to"] = commit_to
+                        wmeta["layout"] = commit_layout
+                    drains.append(TraceOp(
+                        isa.Write(hbm_addr=0, length=m_ext * n_ext,
+                                  target=isa.BufferTarget.STREAMING),
+                        wmeta))
+
+                tiles.append(Tile(
+                    im=im, i_n=i_n, ik=ik, m0=m0, n0=n0, k0=k0,
+                    m_ext=m_ext, n_ext=n_ext, k_ext=k_ext,
+                    loads=tuple(loads), exec_block=blocks[bkey],
+                    drains=tuple(drains),
+                    sta_row_base=sta_row_base, sta_col_base=sta_col_base,
+                    str_row_base=str_row_base, str_m_base=str_m_base,
+                    last_k=last_k))
+
+    return Program(
+        gemm=gemm, choice=choice, cfg=cfg, prologue=tuple(prologue),
+        tiles=tiles, n_m=n_m, n_n=n_n, n_k=n_k,
+        residency={"stationary": sta_mode, "streaming": str_mode},
+        input_role=input_role, out_name=out_name,
+        activation=activation, act_name=act_name,
+        input_elided=elide_input)
+
+
+# ---------------------------------------------------------------------------
+# Program-to-Program transforms (paper §IV-G chained-layer elision)
+# ---------------------------------------------------------------------------
+
+def input_elidable(program: Program) -> bool:
+    """A consumer may skip its input Load/SetIVNLayout only when the input
+    operand is fully resident (one Load covers it -- exactly what the
+    producer's on-chip commit replaces)."""
+    return program.residency[program.input_role] == FULL
+
+
+def elide_input(program: Program) -> Program:
+    """Chained-consumer transform: re-lower without the input operand's
+    SetIVNLayout + Load.  Returns ``program`` unchanged when not legal."""
+    if program.input_elided or not input_elidable(program):
+        return program
+    return lower(program.gemm, program.choice, program.cfg,
+                 activation=program.activation, act_name=program.act_name,
+                 out_name=program.out_name, elide_input=True)
+
+
+def with_commit(program: Program, commit_to: str, commit_layout) -> Program:
+    """Chained-producer transform: the final Write commits the output
+    on-chip into the consumer's operand buffer instead of going off-chip."""
+    return lower(program.gemm, program.choice, program.cfg,
+                 activation=program.activation, act_name=program.act_name,
+                 out_name=program.out_name, commit_to=commit_to,
+                 commit_layout=commit_layout,
+                 elide_input=program.input_elided)
+
+
+def chain(programs: list[Program]) -> list[Program]:
+    """Wire a layer chain: producer i commits on-chip and consumer i+1
+    elides its input Load + SetIVNLayout, whenever the VN sizes match and
+    the consumer's input is fully resident; incompatible neighbours fall
+    back to an off-chip round trip (no elision).
+
+    Un-elided consumers have their input Loads retargeted to the producer's
+    named output (the machine resolves tensor names against its committed
+    outputs), so the fallback also executes correctly.  Input Programs are
+    never mutated; rewired layers are fresh objects."""
+    out: list[Program] = []
+    for i, prog in enumerate(programs):
+        nxt = programs[i + 1] if i + 1 < len(programs) else None
+        elide = False
+        retarget: str | None = None
+        if i > 0:
+            prev = programs[i - 1]
+            if prev.choice.vn == prog.choice.vn and input_elidable(prog):
+                elide = True
+            else:
+                retarget = prev.out_name
+        commit_to = commit_lay = None
+        if nxt is not None and nxt.choice.vn == prog.choice.vn \
+                and input_elidable(nxt):
+            vn = prog.choice.vn
+            commit_lay = layoutlib.layout_for(
+                math.ceil(prog.gemm.n / vn), prog.gemm.m, vn, prog.cfg.aw,
+                order=prog.choice.order_o)
+            commit_to = ("streaming"
+                         if nxt.choice.df == isa.Dataflow.WOS
+                         else "stationary")
+        cur = prog
+        if elide or commit_to is not None:
+            # single re-lower carrying both roles; retargeting (below) must
+            # come last so a re-lower cannot undo it
+            cur = lower(prog.gemm, prog.choice, prog.cfg,
+                        activation=prog.activation,
+                        act_name=prog.act_name, out_name=prog.out_name,
+                        commit_to=commit_to, commit_layout=commit_lay,
+                        elide_input=elide)
+        if retarget is not None:
+            cur = _retarget_input(cur, retarget)
+        out.append(cur)
+    return out
+
+
+def _retarget_input(program: Program, source_name: str) -> Program:
+    """Copy of ``program`` whose input Loads read ``source_name`` (the
+    producer's committed output) instead of the host 'I' tensor.  The
+    input Program -- possibly shared or memoized -- is left untouched."""
+    new_tiles = []
+    for tile in program.tiles:
+        loads = tuple(
+            TraceOp(op.inst, {**op.meta, "tensor": source_name})
+            if op.meta.get("tensor") == "I" else op
+            for op in tile.loads)
+        if any(a is not b for a, b in zip(loads, tile.loads)):
+            tile = dataclasses.replace(tile, loads=loads)
+        new_tiles.append(tile)
+    return dataclasses.replace(program, tiles=new_tiles)

@@ -1,167 +1,50 @@
-"""MINISA trace generation (paper §IV-G execution model, §V step 7).
+"""Flat-trace compatibility layer over the tiled Program IR.
 
-Lowers a mapper Plan into the canonical per-layer trace
-
-    Load* -> SetIVNLayout -> SetWVNLayout -> SetOVNLayout
-          -> { ExecuteMapping -> ExecuteStreaming* }^rounds
-          -> [Activation] -> Write
-
-with the machine-executable TraceOp side-band (layouts, tensor names).
-
-The functional builder keeps whole operands resident (tests use workloads
-that fit on-chip); tiling is expressed through (r0, c0, m0) offsets, which
-is semantically identical to re-loading tiles when capacity allows -- the
-instruction *count* accounting for capacity-bound tilings lives in
-``mapper.Schedule``.
-
-For consecutive layers the paper elides SetOVNLayout(i) == SetIVNLayout(i+1);
-``build_chain_trace`` implements that: layer i's outputs are committed to the
-streaming buffer and layer i+1 skips its input Load and SetIVNLayout.
+The untiled per-layer trace builder this module used to contain is gone:
+``core/program.py`` is the single lowering (paper §IV-G execution model,
+§V step 7), and what used to be a separate functional trace is now just
+the flattened TraceOp stream of a Program.  These wrappers keep the
+historical ``build_trace`` / ``build_chain_trace`` entry points for
+examples and tests that want a plain list of ops.
 """
 
 from __future__ import annotations
 
-import math
 from typing import Callable
 
-import numpy as np
-
-from repro.configs.feather import FeatherConfig
-from repro.core import isa, layout as layoutlib
-from repro.core.machine import TraceOp
-from repro.core.mapper import Gemm, MappingChoice, Plan
+from repro.core import program as programlib
+from repro.core.machine import TraceOp  # noqa: F401 (re-export)
+from repro.core.mapper import Plan
 
 
 def build_trace(plan: Plan, activation: Callable | None = None,
                 act_name: str = "none") -> list[TraceOp]:
-    gemm, cfg, ch = plan.gemm, plan.cfg, plan.choice
-    return _build_layer(gemm, ch, cfg, activation, act_name)
-
-
-def _build_layer(gemm: Gemm, ch: MappingChoice, cfg: FeatherConfig,
-                 activation: Callable | None = None,
-                 act_name: str = "none",
-                 out_name: str = "O",
-                 commit_to: str | None = None,
-                 skip_input_load: bool = False) -> list[TraceOp]:
-    ah, aw = cfg.ah, cfg.aw
-    vn = ch.vn
-    wos = ch.df == isa.Dataflow.WOS
-    # search orientation: stationary free rank = ns, streaming free = ms
-    ms, ks, ns = (gemm.m, gemm.k, gemm.n) if wos else (gemm.n, gemm.k, gemm.m)
-    kg_total = math.ceil(ks / vn)
-    nb_total = math.ceil(ns / vn)
-
-    lay_sta = layoutlib.layout_for(kg_total, ns, vn, aw, order=ch.order_w)
-    lay_str = layoutlib.layout_for(kg_total, ms, vn, aw, order=ch.order_i)
-    lay_out = layoutlib.layout_for(nb_total, ms, vn, aw, order=ch.order_o)
-
-    sta_operand, str_operand = ("W", "I") if wos else ("I", "W")
-    # operand-kind for VN grouping inside the machine: the stationary tensor
-    # is always VN-ified along K as a [K, free] matrix ('W'-style) and the
-    # streaming one as [free, K] ('I'-style) -- under IO-S the roles swap,
-    # so the machine receives transposed tensors via the meta 'tensor' key.
-    ops: list[TraceOp] = []
-
-    def _lay_inst(operand: str, lay: layoutlib.VNLayout):
-        return lay.to_instruction(operand)
-
-    if not skip_input_load:
-        # chained layers reuse the previous SetOVNLayout as SetIVNLayout
-        ops.append(TraceOp(_lay_inst("I", lay_str if wos else lay_sta),
-                           {"layout": lay_str if wos else lay_sta}))
-    ops.append(TraceOp(_lay_inst("W", lay_sta if wos else lay_str),
-                       {"layout": lay_sta if wos else lay_str}))
-    ops.append(TraceOp(
-        isa.SetOVNLayout(order=ch.order_o, nr_l0=min(ms, aw),
-                         nr_l1=math.ceil(ms / min(ms, aw)),
-                         red_l1=nb_total),
-        {"layout": lay_out, "m_extent": ms, "n_extent": ns, "commit": None}))
-
-    # Loads: a chained layer's *input* operand is already on-chip (placed
-    # by the previous layer's committing Write), so only the weight-side
-    # operand is loaded.  Under WO-S the input is the streaming operand;
-    # under IO-S it is the stationary one.
-    load_sta = not (skip_input_load and not wos)
-    load_str = not (skip_input_load and wos)
-    if load_sta:
-        ops.append(TraceOp(
-            isa.Load(hbm_addr=0, length=ks * ns,
-                     target=isa.BufferTarget.STATIONARY),
-            {"tensor": sta_operand, "operand": sta_operand,
-             "layout": lay_sta}))
-    if load_str:
-        ops.append(TraceOp(
-            isa.Load(hbm_addr=ks * ns, length=ms * ks,
-                     target=isa.BufferTarget.STREAMING),
-            {"tensor": str_operand, "operand": str_operand,
-             "layout": lay_str}))
-
-    # Execute rounds over the (kg, nb) group lattice + m chunks.
-    g_r = aw // ch.n_kg
-    g_c = ch.n_nb
-    dup = g_r // g_c
-    s_r, s_c = (g_c, 1) if ch.strided else (1, vn)
-    t_max = max(cfg.vn_slots_per_col, 1)
-    for kg0 in range(0, kg_total, ch.n_kg):
-        for nb0 in range(0, nb_total, ch.n_nb):
-            em = isa.ExecuteMapping(r0=kg0, c0=nb0 * vn, g_r=g_r, g_c=g_c,
-                                    s_r=s_r, s_c=s_c)
-            ops.append(TraceOp(em, {}))
-            m_span = dup * t_max
-            for m0 in range(0, ms, m_span):
-                t = min(t_max, math.ceil((ms - m0) / dup))
-                ops.append(TraceOp(
-                    isa.ExecuteStreaming(
-                        m0=m0, s_m=dup, t=t, vn_size=vn,
-                        df=isa.Dataflow.WOS if wos else isa.Dataflow.IOS),
-                    {}))
-
+    """Flattened instruction stream of the plan's Program (re-lowered when
+    an activation is requested, since activations live in the tile drains)."""
+    prog = plan.program
     if activation is not None:
-        ops.append(TraceOp(
-            isa.Activation(function=isa.ACTIVATION_FUNCS.get(act_name, 0),
-                           length=ms * ns,
-                           target=isa.BufferTarget.STREAMING),
-            {"fn": activation}))
-    write_meta = {"tensor": out_name, "transpose": not wos}
-    if commit_to is not None:
-        # next layer consumes the output on-chip: its input layout is this
-        # layer's output-VN layout re-bound as an I_VN layout.  The commit
-        # happens in GEMM orientation O[M, N] (post-transpose), so the next
-        # input has free rank M and reduction rank N regardless of df.
-        next_kg = math.ceil(gemm.n / vn)
-        write_meta["commit_to"] = commit_to
-        write_meta["layout"] = layoutlib.layout_for(next_kg, gemm.m, vn, aw,
-                                                    order=ch.order_o)
-    ops.append(TraceOp(
-        isa.Write(hbm_addr=0, length=ms * ns,
-                  target=isa.BufferTarget.STREAMING), write_meta))
-    return ops
+        prog = programlib.lower(plan.gemm, plan.choice, plan.cfg,
+                                activation=activation, act_name=act_name)
+    return list(prog.trace_ops())
 
 
 def build_chain_trace(plans: list[Plan],
-                      activations: list[Callable | None] | None = None
+                      activations: list[Callable | None] | None = None,
+                      act_names: list[str] | None = None
                       ) -> list[list[TraceOp]]:
-    """Per-layer traces for a chain (paper §IV-G): layer i's Write commits
-    the output on-chip into layer i+1's input buffer, and layer i+1 elides
-    its SetIVNLayout + input Load.
+    """Per-layer flat traces for a chain (paper §IV-G): layer i's Write
+    commits the output on-chip into layer i+1's input buffer, and layer
+    i+1 elides its SetIVNLayout + input Load.
 
     On-chip chaining requires matching VN sizes across the boundary (the
     committed O_VNs *are* the next layer's I_VNs); incompatible neighbours
     fall back to an off-chip round trip (no elision).
     """
-    traces = []
+    progs = []
     for i, plan in enumerate(plans):
         act = activations[i] if activations else None
-        nxt = plans[i + 1] if i + 1 < len(plans) else None
-        commit_to = None
-        if nxt is not None and nxt.choice.vn == plan.choice.vn:
-            commit_to = ("streaming"
-                         if nxt.choice.df == isa.Dataflow.WOS
-                         else "stationary")
-        prev = plans[i - 1] if i > 0 else None
-        skip = (prev is not None and prev.choice.vn == plan.choice.vn)
-        traces.append(_build_layer(
+        name = act_names[i] if act_names else "none"
+        progs.append(programlib.lower(
             plan.gemm, plan.choice, plan.cfg, activation=act,
-            out_name=f"O{i}", commit_to=commit_to, skip_input_load=skip))
-    return traces
+            act_name=name, out_name=f"O{i}"))
+    return [list(p.trace_ops()) for p in programlib.chain(progs)]

@@ -1,0 +1,7 @@
+"""Distributed substrate: logical-axis sharding rules, gradient
+compression, and elastic checkpoint resume.
+
+  sharding     -- logical axis names -> PartitionSpecs / NamedShardings
+  compression  -- int8 fake-quantisation + compressed DP all-reduce
+  elastic      -- restore a checkpoint onto a (possibly different) mesh
+"""

@@ -1,0 +1,28 @@
+"""Elastic resume: restore the latest checkpoint onto explicit (possibly
+different-topology) shardings.
+
+The checkpoint stores plain host arrays (ckpt.manager); re-sharding is a
+``jax.device_put`` against the *new* mesh's NamedShardings, so a job can
+resume on a different chip count without a conversion step.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def resume(manager, abstract_tree, shardings):
+    """(restored_tree | None, start_step).
+
+    ``abstract_tree``: pytree of ShapeDtypeStructs (or arrays) giving the
+    expected structure/shapes; ``shardings``: matching pytree of
+    NamedShardings, or None to keep the restore on host-default devices.
+    Returns (None, 0) when the directory holds no checkpoint.
+    """
+    step = manager.latest_step()
+    if step is None:
+        return None, 0
+    restored = manager.restore(step, abstract_tree)
+    if shardings is not None:
+        restored = jax.tree.map(jax.device_put, restored, shardings)
+    return restored, step

@@ -114,9 +114,13 @@ def _dot_flops(line: str, symtab: dict[str, list[int]]) -> float:
             if d:
                 res_elems *= int(d)
     lc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
-    # lhs operand name
+    # lhs operand name: first %-prefixed symbol in the argument list (newer
+    # XLA prints operand shapes inline, e.g. "dot(f32[256,256]{1,0} %a, ...)",
+    # older versions just "dot(%a, ...)")
     args = line[line.index("dot(") + 4:]
-    lhs_name = args.split(",")[0].strip().lstrip("%")
+    m_lhs = re.search(r"%([\w\.\-]+)", args)
+    lhs_name = (m_lhs.group(1) if m_lhs
+                else args.split(",")[0].strip().lstrip("%"))
     lhs_dims = symtab.get(lhs_name)
     if lc is None or lhs_dims is None:
         return 2.0 * res_elems  # conservative fallback

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.feather import feather_config
 from repro.core import machine, mapper, trace
@@ -58,6 +58,7 @@ def test_on_chip_chain_commit_matches_oracle():
     SetIVNLayout + input Load and still matches the 3-layer oracle."""
     import dataclasses
     from repro.core import isa as isalib
+    from repro.core import program as programlib
 
     cfg = feather_config(4, 4)
     relu = lambda x: np.maximum(x, 0)
@@ -70,7 +71,7 @@ def test_on_chip_chain_commit_matches_oracle():
             ch = dataclasses.replace(p.choice, vn=4,
                                      df=isalib.Dataflow.WOS)
             p = dataclasses.replace(
-                p, choice=ch, schedule=mapper.make_schedule(g, ch, cfg))
+                p, choice=ch, program=programlib.lower(g, ch, cfg))
         plans.append(p)
     traces = trace.build_chain_trace(plans, [relu, relu, None])
     i0 = RNG.standard_normal((10, 12)).astype(np.float32)

@@ -53,6 +53,25 @@ def test_instruction_encode_roundtrip_widths():
         assert 0 <= word < (1 << inst.bitwidth(cfg))
         # opcode occupies the top 3 bits
         assert word >> (inst.bitwidth(cfg) - 3) == int(inst.opcode)
+        # spec-driven decode inverts encode exactly -- no field widths
+        # re-derived by hand
+        assert type(inst).decode(word, cfg) == inst
+        assert isa.decode(word, inst.bitwidth(cfg), cfg) == inst
+
+
+def test_load_write_share_encoding():
+    """Load and Write are one MemAccess layout; only the opcode differs."""
+    cfg = feather_config(4, 16)
+    load = isa.Load(hbm_addr=77, length=123,
+                    target=isa.BufferTarget.STATIONARY)
+    write = isa.Write(hbm_addr=77, length=123,
+                      target=isa.BufferTarget.STATIONARY)
+    assert isinstance(load, isa.MemAccess) and isinstance(write, isa.MemAccess)
+    assert load.spec(cfg)[1:] == write.spec(cfg)[1:]
+    assert load.bitwidth(cfg) == write.bitwidth(cfg)
+    # same payload bits under different opcodes
+    mask = (1 << (load.bitwidth(cfg) - 3)) - 1
+    assert load.encode(cfg) & mask == write.encode(cfg) & mask
 
 
 def test_trace_accounting():

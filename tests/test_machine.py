@@ -2,14 +2,14 @@
 
 Property-style sweep: random GEMM shapes x array configs x both dataflows,
 plus direct ExecuteMapping semantics checks against Eq. 1 and the paper's
-Fig. 4 / §IV-E case studies.
-"""
+Fig. 4 / §IV-E case studies.  Forced mapping choices exercise the Program
+lowering directly (no search)."""
 
 import numpy as np
 import pytest
 
 from repro.configs.feather import feather_config
-from repro.core import isa, machine, mapper, trace
+from repro.core import isa, machine, mapper, program
 from repro.core.mapping import tile_indices
 
 
@@ -17,20 +17,15 @@ RNG = np.random.default_rng(42)
 
 
 def _run(gemm, cfg, choice=None):
-    plan = (mapper.search(gemm, cfg) if choice is None else None)
-    if choice is not None:
-        sched = mapper.make_schedule(gemm, choice, cfg)
-        assert sched is not None
-        plan = mapper.Plan(
-            gemm=gemm, cfg=cfg, choice=choice, schedule=sched,
-            layouts=(None,) * 3,
-            perf_minisa=None, perf_micro=None)
-    ops = trace.build_trace(plan)
+    if choice is None:
+        prog = mapper.search(gemm, cfg).program
+    else:
+        prog = program.lower(gemm, choice, cfg)
     i = RNG.standard_normal((gemm.m, gemm.k)).astype(np.float32)
     w = RNG.standard_normal((gemm.k, gemm.n)).astype(np.float32)
-    out = machine.run_trace(cfg, ops, {"I": i, "W": w})["O"]
+    out = machine.run_program(cfg, prog, {"I": i, "W": w})["O"]
     np.testing.assert_allclose(out, i @ w, rtol=2e-4, atol=2e-4)
-    return plan
+    return prog
 
 
 @pytest.mark.parametrize("m,k,n", [
@@ -82,15 +77,16 @@ def test_eq1_indices():
 
 
 def test_activation_and_chain():
-    """Activation instruction applies on the committed output."""
+    """Activation instruction applies on the drained output."""
     cfg = feather_config(4, 4)
     gemm = mapper.Gemm(m=6, k=8, n=5)
     plan = mapper.search(gemm, cfg)
     relu = lambda x: np.maximum(x, 0)
-    ops = trace.build_trace(plan, activation=relu, act_name="relu")
+    prog = program.lower(gemm, plan.choice, cfg, activation=relu,
+                         act_name="relu")
     i = RNG.standard_normal((6, 8)).astype(np.float32)
     w = RNG.standard_normal((8, 5)).astype(np.float32)
-    out = machine.run_trace(cfg, ops, {"I": i, "W": w})["O"]
+    out = machine.run_program(cfg, prog, {"I": i, "W": w})["O"]
     np.testing.assert_allclose(out, relu(i @ w), rtol=2e-4, atol=2e-4)
 
 
@@ -133,3 +129,16 @@ def test_fig4_mapping_regimes():
             df=isa.Dataflow.WOS, vn=4, m_t=16, k_t=16, n_t=16,
             n_kg=n_kg, n_nb=n_nb, dup=dup)
         _run(gemm, cfg, choice)
+
+
+def test_flat_trace_equals_program_execution():
+    """machine.run over the flattened TraceOp stream == run_program (the
+    flat trace is the same artifact, not a second lowering)."""
+    cfg = feather_config(4, 16)
+    gemm = mapper.Gemm(m=17, k=40, n=24)
+    prog = mapper.search(gemm, cfg).program
+    i = RNG.standard_normal((gemm.m, gemm.k)).astype(np.float32)
+    w = RNG.standard_normal((gemm.k, gemm.n)).astype(np.float32)
+    a = machine.run_program(cfg, prog, {"I": i, "W": w})["O"]
+    b = machine.run_trace(cfg, list(prog.trace_ops()), {"I": i, "W": w})["O"]
+    np.testing.assert_array_equal(a, b)

@@ -1,45 +1,49 @@
-"""Mapper + perf-model invariants, including hypothesis property tests."""
+"""Mapper + perf-model invariants, including property tests (hypothesis
+when installed, a deterministic fallback sampler otherwise)."""
 
 import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.feather import SWEEP, feather_config
-from repro.core import isa, machine, mapper, perf, trace, workloads
+from repro.core import isa, machine, mapper, perf, workloads
 from repro.core.microinst import MicroModel
 
 RNG = np.random.default_rng(7)
 
 
 # ---------------------------------------------------------------------------
-# Schedule invariants
+# Program invariants
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("ah,aw", [(4, 4), (8, 32), (16, 256)])
-def test_schedule_capacity_and_cycles(ah, aw):
+def test_program_capacity_and_cycles(ah, aw):
     cfg = feather_config(ah, aw)
     g = mapper.Gemm(m=2048, k=512, n=1024)
     plan = mapper.search(g, cfg)
-    s = plan.schedule
+    p = plan.program
     ch = plan.choice
     assert min(ch.m_t, g.m) * min(ch.k_t, g.k) <= cfg.str_bytes
     assert min(ch.k_t, g.k) * min(ch.n_t, g.n) <= cfg.sta_bytes
     # compute cycles can never beat the MAC lower bound
     lower = g.macs / cfg.peak_macs_per_cycle
-    assert s.compute_cycles >= lower * 0.99
+    assert p.compute_cycles >= lower * 0.99
     # utilization in (0, 1]
     assert 0 < plan.perf_minisa.utilization <= 1.0
+    # the Program's tiles cover exactly the useful MACs
+    assert p.macs == g.macs
 
 
 def test_minisa_instruction_bytes_tiny_vs_micro():
     cfg = feather_config(16, 256)
     g = mapper.Gemm(m=65536, k=40, n=88)
     plan = mapper.search(g, cfg)
-    s = plan.schedule
-    assert s.minisa_storage_bytes() < 1e5
-    assert s.micro_storage_bytes() / s.minisa_storage_bytes() > 1e3
+    p = plan.program
+    assert p.minisa_bytes() < 1e5
+    assert p.micro_storage_bytes() / p.minisa_bytes() > 1e3
     # MINISA keeps < 0.1% instruction-cycle fraction (paper abstract)
     assert plan.perf_minisa.stall_ifetch_frac < 1e-3
 
@@ -104,7 +108,7 @@ def test_workload_suite_instantiates_table_iv():
 
 
 # ---------------------------------------------------------------------------
-# Hypothesis: end-to-end functional property
+# Properties: end-to-end functional + conservation over the Program tiles
 # ---------------------------------------------------------------------------
 
 @settings(max_examples=12, deadline=None)
@@ -119,10 +123,9 @@ def test_property_machine_equals_oracle(m, k, n, ah, aw):
     cfg = feather_config(ah, aw)
     g = mapper.Gemm(m=m, k=k, n=n)
     plan = mapper.search(g, cfg)
-    ops = trace.build_trace(plan)
     i = RNG.standard_normal((m, k)).astype(np.float32)
     w = RNG.standard_normal((k, n)).astype(np.float32)
-    out = machine.run_trace(cfg, ops, {"I": i, "W": w})["O"]
+    out = machine.run_program(cfg, plan.program, {"I": i, "W": w})["O"]
     np.testing.assert_allclose(out, i @ w, rtol=3e-4, atol=3e-4)
 
 
@@ -133,18 +136,18 @@ def test_property_machine_equals_oracle(m, k, n, ah, aw):
     n=st.integers(1, 4096),
     idx=st.integers(0, len(SWEEP) - 1),
 )
-def test_property_schedule_conservation(m, k, n, idx):
+def test_property_program_conservation(m, k, n, idx):
     """For any shape and array: cycles >= MAC bound, instruction bytes
-    positive, and the tile stream covers all loads/stores exactly once."""
+    positive, and the Program's tile stream covers all MACs/stores
+    exactly once."""
     ah, aw = SWEEP[idx]
     cfg = feather_config(ah, aw)
     g = mapper.Gemm(m=m, k=k, n=n)
     plan = mapper.search(g, cfg)
-    s = plan.schedule
-    assert s.compute_cycles * cfg.peak_macs_per_cycle >= g.macs * 0.99
-    tiles = s.tiles("minisa")
-    assert len(tiles) == min(s.n_tiles, 1024)   # merged beyond 1024
+    p = plan.program
+    assert p.compute_cycles * cfg.peak_macs_per_cycle >= g.macs * 0.99
+    tiles = p.tile_costs("minisa")
     assert sum(t.macs for t in tiles) == pytest.approx(g.macs)
     assert sum(t.store_bytes for t in tiles) == pytest.approx(
-        s.store_bytes, rel=1e-6)
-    assert s.minisa_storage_bytes() > 0
+        g.m * g.n * cfg.elem_bytes)
+    assert p.minisa_bits() > 0

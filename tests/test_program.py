@@ -1,0 +1,211 @@
+"""Tiled Program IR: the count-what-you-execute invariants.
+
+The Program is the single lowered artifact: these tests pin (a) functional
+equivalence of genuinely tiled execution (capacity-bound, n_tiles > 1 on
+every rank) against the einsum oracle, and (b) byte-accounting identity
+between ``Program.minisa_bits`` and ``isa.trace_bits`` of the flattened
+instruction stream."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.feather import feather_config
+from repro.core import isa, machine, mapper, perf, program
+
+RNG = np.random.default_rng(3)
+
+
+def _tiny_cfg():
+    """Buffers shrunk so a 20x12x18 GEMM tiles on every rank."""
+    return dataclasses.replace(feather_config(4, 4), str_bytes=16 * 8,
+                               sta_bytes=8 * 8, ob_bytes=16 * 8 * 4)
+
+
+def _choice(df=isa.Dataflow.WOS):
+    return mapper.MappingChoice(df=df, vn=4, m_t=8, k_t=8, n_t=8,
+                                n_kg=1, n_nb=1, dup=4)
+
+
+@pytest.mark.parametrize("df", [isa.Dataflow.WOS, isa.Dataflow.IOS])
+def test_capacity_bound_tiling_matches_oracle(df):
+    cfg = _tiny_cfg()
+    g = mapper.Gemm(m=20, k=12, n=18)
+    prog = program.lower(g, _choice(df), cfg)
+    assert prog.n_m > 1 and prog.n_n > 1 and prog.n_k > 1
+    assert prog.residency == {"stationary": "tiled", "streaming": "tiled"}
+    i = RNG.standard_normal((g.m, g.k)).astype(np.float32)
+    w = RNG.standard_normal((g.k, g.n)).astype(np.float32)
+    out = machine.run_program(cfg, prog, {"I": i, "W": w})["O"]
+    np.testing.assert_allclose(out, i @ w, rtol=2e-4, atol=2e-4)
+
+
+def test_panel_residency_matches_oracle():
+    """Stationary k-panel resident (incremental Loads reused over the m
+    loop), streaming tiled."""
+    cfg = dataclasses.replace(feather_config(4, 4), str_bytes=16 * 6,
+                              sta_bytes=12 * 8, ob_bytes=16 * 8 * 4)
+    g = mapper.Gemm(m=20, k=12, n=18)
+    prog = program.lower(g, _choice(), cfg)
+    assert prog.residency["stationary"] == "panel"
+    i = RNG.standard_normal((g.m, g.k)).astype(np.float32)
+    w = RNG.standard_normal((g.k, g.n)).astype(np.float32)
+    out = machine.run_program(cfg, prog, {"I": i, "W": w})["O"]
+    np.testing.assert_allclose(out, i @ w, rtol=2e-4, atol=2e-4)
+
+
+def test_program_bytes_equal_flattened_trace_bits():
+    """minisa_bits (computed from counts) == trace_bits of the materialised
+    stream, for every residency mode."""
+    cases = [
+        (feather_config(4, 4), mapper.Gemm(m=12, k=16, n=12)),   # full
+        (_tiny_cfg(), mapper.Gemm(m=20, k=12, n=18)),            # tiled
+        (dataclasses.replace(feather_config(4, 4), str_bytes=16 * 6,
+                             sta_bytes=12 * 8, ob_bytes=16 * 8 * 4),
+         mapper.Gemm(m=20, k=12, n=18)),                         # panel
+    ]
+    for cfg, g in cases:
+        prog = program.lower(g, _choice(), cfg)
+        flat = isa.trace_bits(prog.instructions(), cfg)
+        assert flat == prog.minisa_bits(), prog.residency
+
+
+def test_tile_costs_conserve_loads_and_macs():
+    """The perf tile stream is the Program's tiles: MACs, loads and stores
+    sum to the workload's totals (reload factors appear as extra Load
+    instructions, not as scaled formulas)."""
+    cfg = _tiny_cfg()
+    g = mapper.Gemm(m=20, k=12, n=18)
+    prog = program.lower(g, _choice(), cfg)
+    tiles = prog.tile_costs("minisa")
+    assert len(tiles) == prog.n_tiles
+    assert sum(t.macs for t in tiles) == g.macs
+    assert sum(t.store_bytes for t in tiles) == g.m * g.n * cfg.elem_bytes
+    # streaming operand is reloaded once per n-tile sweep (n-outer loop)
+    load_total = sum(t.load_bytes for t in tiles)
+    i_bytes, w_bytes = g.m * g.k, g.k * g.n
+    assert load_total == i_bytes * prog.n_n + w_bytes * prog.n_m
+    # and the loads equal the Load instructions' own length fields
+    load_from_insts = sum(
+        op.inst.length for op in prog.trace_ops()
+        if isinstance(op.inst, isa.Load)) * cfg.elem_bytes
+    assert load_from_insts == load_total
+
+
+def test_perf_simulate_consumes_program_tiles():
+    cfg = _tiny_cfg()
+    g = mapper.Gemm(m=20, k=12, n=18)
+    prog = program.lower(g, _choice(), cfg)
+    res = perf.simulate(prog.tile_costs("minisa"), cfg)
+    assert res.cycles >= prog.compute_cycles
+    assert res.macs == g.macs
+
+
+def test_elide_input_transform():
+    """Chained-consumer transform drops exactly one SetIVNLayout + the
+    input Load; only legal when the input operand is fully resident."""
+    cfg = feather_config(4, 4)
+    g = mapper.Gemm(m=10, k=12, n=8)
+    prog = program.lower(g, _choice(), cfg)
+    assert program.input_elidable(prog)
+    elided = program.elide_input(prog)
+    base = {k: v for k, v in prog.summary()["counts"].items()}
+    after = {k: v for k, v in elided.summary()["counts"].items()}
+    assert base["SetIVNLayout"] == after.get("SetIVNLayout", 0) + 1
+    assert base["Load"] == after["Load"] + 1
+    assert elided.minisa_bits() < prog.minisa_bits()
+    # a capacity-bound input is NOT elidable (its loads are structural)
+    tiled = program.lower(mapper.Gemm(m=20, k=12, n=18), _choice(),
+                          _tiny_cfg())
+    assert not program.input_elidable(tiled)
+    assert program.elide_input(tiled) is tiled
+
+
+@pytest.mark.parametrize("consumer_df", [isa.Dataflow.WOS, isa.Dataflow.IOS])
+def test_chain_commit_matches_oracle(consumer_df):
+    """program.chain wires producer commit -> consumer elision for both
+    consumer dataflows (under IO-S the *stationary* operand is the input,
+    so the elision must skip that load, not the streaming one)."""
+    cfg = feather_config(4, 4)
+    g1 = mapper.Gemm(m=10, k=12, n=8)
+    g2 = mapper.Gemm(m=10, k=8, n=6)
+    p1 = program.lower(g1, _choice(), cfg, out_name="O0")
+    p2 = program.lower(g2, _choice(consumer_df), cfg, out_name="O1")
+    chained = program.chain([p1, p2])
+    assert chained[1].input_elided
+    # consumer loads only its weight-side operand
+    load_tensors = [op.meta["tensor"] for op in chained[1].trace_ops()
+                    if isinstance(op.inst, isa.Load)]
+    assert load_tensors == ["W"]
+    i0 = RNG.standard_normal((10, 12)).astype(np.float32)
+    w1 = RNG.standard_normal((12, 8)).astype(np.float32)
+    w2 = RNG.standard_normal((8, 6)).astype(np.float32)
+    m = machine.FeatherMachine(cfg)
+    m.run_program(chained[0], {"I": i0, "W": w1})
+    m.run_program(chained[1], {"W": w2})
+    np.testing.assert_allclose(m.outputs["O1"], (i0 @ w1) @ w2,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chain_mixed_vn_retargets_and_commits():
+    """A(vn=2) -> B(vn=4) -> C(vn=4): B cannot elide (vn mismatch with A)
+    so its input Load is retargeted to A's committed output, and that
+    rewiring must survive B's own commit-for-C re-lower.  The original
+    Programs are not mutated."""
+    cfg = feather_config(4, 4)
+    gs = [mapper.Gemm(m=8, k=8, n=8), mapper.Gemm(m=8, k=8, n=8),
+          mapper.Gemm(m=8, k=8, n=8)]
+    ch2 = mapper.MappingChoice(df=isa.Dataflow.WOS, vn=2, m_t=8, k_t=8,
+                               n_t=8, n_kg=1, n_nb=1, dup=4)
+    progs = [program.lower(gs[0], ch2, cfg, out_name="O0"),
+             program.lower(gs[1], _choice(), cfg, out_name="O1"),
+             program.lower(gs[2], _choice(), cfg, out_name="O2")]
+    chained = program.chain(progs)
+    assert not chained[1].input_elided and chained[2].input_elided
+    b_inputs = [op.meta["tensor"] for op in chained[1].trace_ops()
+                if isinstance(op.inst, isa.Load)
+                and op.meta["operand"] == "I"]
+    assert b_inputs == ["O0"]
+    # the caller's Program was not mutated by the retarget
+    assert all(op.meta["tensor"] in ("I", "W")
+               for op in progs[1].trace_ops()
+               if isinstance(op.inst, isa.Load))
+    i0 = RNG.standard_normal((8, 8)).astype(np.float32)
+    ws = [RNG.standard_normal((8, 8)).astype(np.float32) for _ in range(3)]
+    m = machine.FeatherMachine(cfg)
+    m.run_program(chained[0], {"I": i0, "W": ws[0]})
+    m.run_program(chained[1], {"W": ws[1]})
+    m.run_program(chained[2], {"W": ws[2]})
+    np.testing.assert_allclose(m.outputs["O2"], ((i0 @ ws[0]) @ ws[1]) @ ws[2],
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_row_wise_activation_rejected_on_tiled_output():
+    """Partial-row drains cannot apply softmax/norms: loud error, not
+    silently wrong numbers."""
+    cfg = _tiny_cfg()
+    g = mapper.Gemm(m=20, k=12, n=18)
+    softmax = lambda x: np.exp(x) / np.exp(x).sum(-1, keepdims=True)
+    with pytest.raises(ValueError, match="row-wise activation"):
+        program.lower(g, _choice(), cfg, activation=softmax,
+                      act_name="softmax")
+    # elementwise activations stay legal on the same tiling
+    prog = program.lower(g, _choice(), cfg,
+                         activation=lambda x: np.maximum(x, 0),
+                         act_name="relu")
+    assert prog.n_n > 1
+
+
+def test_searched_program_is_plan_artifact():
+    """mapper.search returns the lowered Program and scores it with the
+    same tile stream perf.simulate sees."""
+    cfg = feather_config(8, 8)
+    g = mapper.Gemm(m=96, k=40, n=88)
+    plan = mapper.search(g, cfg)
+    res = perf.simulate(plan.program.tile_costs("minisa"), cfg)
+    assert res.cycles == pytest.approx(plan.perf_minisa.cycles)
+    # summary byte counts come from the same Program
+    s = plan.summary()
+    assert s["instr_bytes_minisa"] == pytest.approx(
+        plan.program.minisa_bytes())
