@@ -1,14 +1,18 @@
 """Benchmark driver: one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
 
 Prints human-readable tables for each artifact, then the machine-readable
-``name,us_per_call,derived`` CSV summary.
+``name,us_per_call,derived`` CSV summary, and writes ``BENCH_results.json``
+(name -> us_per_call + derived metrics) so the perf trajectory is tracked
+across PRs (CI uploads it as a workflow artifact).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import time
 
 
@@ -22,40 +26,51 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="skip the full 58x9 sweep-based figures")
+    ap.add_argument("--json", default="BENCH_results.json",
+                    help="machine-readable results path ('' disables)")
     args = ap.parse_args()
 
-    from benchmarks import (arch_plans, breakdown, instr_traffic,
-                            isa_bitwidth, roofline, scaling, speedup,
-                            stall_table, tpu_gpu_compare)
+    from benchmarks import (arch_plans, backend_compare, breakdown,
+                            instr_traffic, isa_bitwidth, roofline, scaling,
+                            speedup, stall_table, tpu_gpu_compare)
 
     rows = []
 
-    def bench(name, fn, derive):
+    def bench(name, fn, derive, metrics=None):
+        """metrics(result) -> flat dict of JSON-friendly derived numbers."""
         t0 = time.time()
         result = fn()
         us = (time.time() - t0) * 1e6
-        rows.append((name, us, derive(result)))
+        extra = metrics(result) if metrics is not None else {}
+        rows.append((name, us, derive(result), extra))
         return result
 
     bench("tabV_isa_bitwidths", isa_bitwidth.run,
           lambda r: "estream_exact=" + str(all(
               v["e_streaming"] == v["paper"][2] for v in r.values())))
     bench("tabI_stall_table", stall_table.run,
-          lambda r: "stall_16x256=" + _fmt(r[(16, 256)][0]))
+          lambda r: "stall_16x256=" + _fmt(r[(16, 256)][0]),
+          lambda r: {"stall_16x256": r[(16, 256)][0]})
     if not args.quick:
         bench("fig10_speedup", speedup.run,
               lambda r: "geomean_16x256="
-              + _fmt(r[(16, 256)]["geomean_speedup"]))
+              + _fmt(r[(16, 256)]["geomean_speedup"]),
+              lambda r: {"geomean_speedup_16x256":
+                         r[(16, 256)]["geomean_speedup"]})
         bench("fig12_instr_traffic", instr_traffic.run,
               lambda r: "geomean_reduction_16x256="
-              + _fmt(r[(16, 256)]["geomean_reduction"]))
+              + _fmt(r[(16, 256)]["geomean_reduction"]),
+              lambda r: {"geomean_reduction_16x256":
+                         r[(16, 256)]["geomean_reduction"]})
         bench("fig11_tpu_gpu_modelled", tpu_gpu_compare.run,
               lambda r: "feather_vs_tpu_irregular=" + _fmt(
                   r["feather_util_irregular"]
                   / max(r["tpu_util_irregular"], 1e-9)))
     bench("fig13_breakdown", breakdown.run,
           lambda r: "min_util=" + _fmt(min(v["utilization"]
-                                           for v in r.values())))
+                                           for v in r.values())),
+          lambda r: {"min_utilization": min(v["utilization"]
+                                            for v in r.values())})
     bench("sec6d_scaling", scaling.run,
           lambda r: "aw64to256_speedup=" + _fmt(
               r[("AW", 64)]["geomean_cycles"]
@@ -65,10 +80,35 @@ def main() -> None:
     bench("roofline_from_dryrun", roofline.run,
           lambda r: "cells=" + str(sum(1 for x in r
                                        if x.get("status") == "OK")))
+    bench("backend_compare",
+          lambda: backend_compare.run(quick=args.quick),
+          lambda r: "max_wallclock_speedup=" + _fmt(
+              max(v["wallclock_speedup"] for v in r.values())),
+          lambda r: {f"{name}.{key}": row[key]
+                     for name, row in r.items()
+                     for key in ("us_interpreter", "us_pallas",
+                                 "us_pallas_cold", "wallclock_speedup",
+                                 "cycles_minisa", "macs")})
 
     print("\nname,us_per_call,derived")
-    for name, us, derived in rows:
+    for name, us, derived, _ in rows:
         print(f"{name},{us:.0f},{derived}")
+
+    if args.json:
+        payload = {
+            "meta": {
+                "quick": args.quick,
+                "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+                "platform": platform.platform(),
+            },
+            "results": {
+                name: {"us_per_call": us, "derived": derived, **extra}
+                for name, us, derived, extra in rows
+            },
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"\nwrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -2,14 +2,28 @@
 and print the instruction-traffic table -- the framework-level integration
 of the paper (core/planner + core/model_gemms).
 
-    PYTHONPATH=src python examples/minisa_plan.py
+    PYTHONPATH=src python examples/minisa_plan.py [--check-backends]
+
+``--check-backends`` additionally executes each architecture's planned
+Programs (the ones small enough to run functionally) on both execution
+backends -- interpreter and Pallas -- against the einsum oracle.
 """
+
+import argparse
 
 from repro.configs.base import SHAPES
 from repro.configs.feather import feather_config
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.core.model_gemms import gemm_workloads
-from repro.core.planner import plan_model
+from repro.core.planner import cross_check, plan_model
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--check-backends", action="store_true",
+                help="cross-validate planned Programs on the interpreter "
+                     "and Pallas backends against the einsum oracle")
+ap.add_argument("--max-check-macs", type=float, default=2e8,
+                help="skip functional execution of GEMMs above this size")
+args = ap.parse_args()
 
 cfg = feather_config(16, 256)
 print(f"{'arch':>22} {'speedup':>8} {'util':>7} {'instr-red':>10} "
@@ -19,8 +33,14 @@ for arch in ARCH_IDS:
     plan = plan_model(arch, "decode_32k", ops, cfg)
     s = plan.summary()
     # every per-shape plan carries its lowered Program: the same tiled
-    # artifact drives the machine, the perf model and these byte counts
+    # artifact drives the backends, the perf model and these byte counts
     n_tiles = sum(p.program.n_tiles for p in plan.plans.values())
     print(f"{arch:>22} {s['speedup']:8.2f} {s['utilization']:7.1%} "
           f"{s['instr_reduction']:10.2e} {n_tiles:6d} "
           f"{s['elided_bytes']:9.1f}")
+    if args.check_backends:
+        errs = cross_check(plan, max_macs=args.max_check_macs)
+        worst = max((e for d in errs.values() for e in d.values()),
+                    default=0.0)
+        print(f"{'':>22} backends OK on {len(errs)}/{len(plan.plans)} "
+              f"unique GEMMs (max |err| {worst:.2e})")

@@ -3,17 +3,20 @@
     PYTHONPATH=src python examples/quickstart.py
 
 1. mapper searches (mapping, layout) for a GEMM on FEATHER+ 8x8;
-2. the plan lowers to a MINISA trace (8-instruction ISA);
-3. the functional FEATHER+ machine executes the trace in JAX;
-4. the result is checked against the einsum oracle;
+2. the plan lowers to a tiled Program (8-instruction MINISA ISA);
+3. the Program executes on BOTH backends: the interpreter (functional
+   FEATHER+ machine, tile by tile) and the Pallas compiler (one
+   pallas_call derived from the Program's tiling);
+4. both results are checked against the einsum oracle;
 5. the analytical model reports cycles/stalls vs the micro-instruction
    baseline.
 """
 
 import numpy as np
 
+from repro import backends
 from repro.configs.feather import feather_config
-from repro.core import machine, mapper, trace
+from repro.core import mapper
 from repro.core.isa import trace_summary
 
 cfg = feather_config(8, 8)
@@ -24,16 +27,20 @@ print(f"chosen mapping: df={plan.choice.df.name} vn={plan.choice.vn} "
       f"tile=({plan.choice.m_t},{plan.choice.k_t},{plan.choice.n_t}) "
       f"groups=({plan.choice.n_kg},{plan.choice.n_nb}) dup={plan.choice.dup}")
 
-ops = trace.build_trace(plan)
-print("\ntrace:", trace_summary([o.inst for o in ops], cfg))
+prog = plan.program
+print("\ntrace:", trace_summary(prog.instructions(), cfg))
+print("pallas lowering:", backends.compile_program(prog).describe())
 
 rng = np.random.default_rng(0)
 i = rng.standard_normal((gemm.m, gemm.k)).astype(np.float32)
 w = rng.standard_normal((gemm.k, gemm.n)).astype(np.float32)
-out = machine.run_trace(cfg, ops, {"I": i, "W": w})["O"]
-err = np.abs(out - i @ w).max()
-print(f"\nfunctional check vs oracle: max |err| = {err:.2e}")
-assert err < 1e-3
+oracle = i @ w
+for backend in ("interpreter", "pallas"):
+    out = plan.execute({"I": i, "W": w}, backend=backend)["O"]
+    err = np.abs(out - oracle).max()
+    print(f"functional check [{backend:>11}] vs oracle: "
+          f"max |err| = {err:.2e}")
+    assert err < 1e-3
 
 s = plan.summary()
 print(f"\nanalytical model: {s['cycles_minisa']:.0f} cycles (MINISA) vs "

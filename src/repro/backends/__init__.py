@@ -1,0 +1,84 @@
+"""Pluggable execution backends for lowered MINISA Programs.
+
+    from repro import backends
+
+    be = backends.get_backend("pallas", cfg)
+    out = be.run_program(plan.program, {"I": i, "W": w})["O"]
+
+Every backend consumes the same tiled Program IR the mapper lowers once
+(``core/program.py``), so the cross-backend equivalence check
+
+    interpreter == pallas == einsum oracle
+
+is the correctness spine tying the functional machine, the compiled
+kernels and the analytical model to one artifact.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.backends.base import Backend
+from repro.backends.interpreter import InterpreterBackend
+from repro.backends.pallas_backend import (CompiledProgram, PallasBackend,
+                                           compile_program)
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.configs.feather import FeatherConfig
+    from repro.core.program import Program
+
+__all__ = [
+    "Backend", "InterpreterBackend", "PallasBackend", "CompiledProgram",
+    "compile_program", "BACKENDS", "get_backend", "run", "cross_check",
+]
+
+BACKENDS: dict[str, type[Backend]] = {
+    InterpreterBackend.name: InterpreterBackend,
+    PallasBackend.name: PallasBackend,
+}
+
+
+def get_backend(backend: str | Backend, cfg: "FeatherConfig",
+                **kwargs) -> Backend:
+    """Resolve a backend name (or pass an instance through)."""
+    if isinstance(backend, Backend):
+        return backend
+    try:
+        cls = BACKENDS[backend]
+    except KeyError:
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"available: {sorted(BACKENDS)}") from None
+    return cls(cfg, **kwargs)
+
+
+def run(program: "Program", tensors: dict[str, np.ndarray],
+        backend: str | Backend = "interpreter",
+        **backend_kwargs) -> dict[str, np.ndarray]:
+    """One-shot execution of a single Program on a fresh backend."""
+    be = get_backend(backend, program.cfg, **backend_kwargs)
+    return be.run_program(program, tensors)
+
+
+def cross_check(program: "Program", tensors: dict[str, np.ndarray],
+                backends: tuple[str, ...] = ("interpreter", "pallas"),
+                rtol: float = 2e-4, atol: float = 2e-4) -> dict[str, float]:
+    """Run ``program`` on every named backend and compare each output to
+    the einsum oracle (fp32-accumulate tolerance); returns the max abs
+    error per backend and raises on mismatch."""
+    g = program.gemm
+    i = np.asarray(tensors["I"], np.float32)
+    w = np.asarray(tensors["W"], np.float32)
+    oracle = i @ w
+    if program.activation is not None:
+        oracle = np.asarray(program.activation(oracle))
+    errs: dict[str, float] = {}
+    for name in backends:
+        out = run(program, tensors, backend=name)[program.out_name]
+        np.testing.assert_allclose(out, oracle, rtol=rtol,
+                                   atol=atol + rtol * g.k,
+                                   err_msg=f"backend {name!r} diverged from "
+                                           f"oracle on {g}")
+        errs[name] = float(np.abs(out - oracle).max())
+    return errs

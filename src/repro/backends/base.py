@@ -1,0 +1,59 @@
+"""Execution-backend interface: how a lowered Program becomes numbers.
+
+A :class:`Backend` consumes the tiled Program IR (``core/program.py``) and
+produces the named output tensors.  Two implementations ship:
+
+  interpreter  ``backends.interpreter.InterpreterBackend`` -- drives the
+               FEATHER+ functional machine tile by tile (the semantics of
+               every MINISA instruction, formerly the orchestration loop
+               inside ``core/machine.py``)
+  pallas       ``backends.pallas_backend.PallasBackend`` -- compiles the
+               Program's tiling to one ``pl.pallas_call`` per layer
+               (interpret-mode on CPU, Mosaic on TPU)
+
+Backends are stateful across ``run_program`` calls within one instance:
+chained Programs (paper §IV-G) resolve their elided/retargeted inputs
+against the backend's committed outputs, exactly like the machine's
+on-chip commit.  ``reset()`` clears that state.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.configs.feather import FeatherConfig
+    from repro.core.program import Program
+
+
+class Backend(abc.ABC):
+    """Common interface over Program executors."""
+
+    #: registry key; subclasses override
+    name: str = "abstract"
+
+    def __init__(self, cfg: "FeatherConfig"):
+        self.cfg = cfg
+        self.outputs: dict[str, np.ndarray] = {}
+
+    @abc.abstractmethod
+    def run_program(self, program: "Program",
+                    tensors: dict[str, np.ndarray] | None = None
+                    ) -> dict[str, np.ndarray]:
+        """Execute one lowered Program; returns all named outputs so far.
+
+        Chained layer sequences (``program.chain``) are executed with one
+        ``run_program`` call per layer on the same backend instance,
+        passing each layer's own tensors (the default lowering names every
+        layer's weight Load 'W', so a single shared dict would silently
+        reuse layer 0's weights)."""
+
+    def reset(self) -> None:
+        self.outputs = {}
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"{type(self).__name__}(ah={self.cfg.ah}, "
+                f"aw={self.cfg.aw})")

@@ -6,18 +6,19 @@ Public surface:
   core.isa          -- the 8 MINISA instructions + bitwidths
   core.layout       -- Set*VNLayout semantics and address generation
   core.vn           -- Virtual Neuron views of operands
-  core.machine      -- functional FEATHER+ (executes traces in JAX)
+  core.machine      -- MINISA instruction semantics (FEATHER+ state in JAX)
   core.microinst    -- micro-instruction baseline traffic model
   core.perf         -- 5-engine analytical performance model
-  core.mapper       -- mapping/layout co-search (paper \u00a7V)
+  core.mapper       -- mapping/layout co-search (paper §V)
   core.program      -- tiled Program IR (the single lowered artifact)
-  core.trace        -- flat-trace compatibility wrappers over Program
+  core.trace        -- DEPRECATED flat-trace wrappers over Program
   core.workloads    -- Tab. IV GEMM suite
   core.planner      -- LM model graph -> per-layer MINISA plans
+
+Execution backends (interpreter / Pallas) live in ``repro.backends``.
 """
 
 from repro.core.mapper import Gemm, MappingChoice, Plan, search  # noqa: F401
 from repro.core.program import Program, Tile, lower  # noqa: F401
-from repro.core.trace import build_trace  # noqa: F401
 from repro.core.machine import (FeatherMachine, TraceOp, run_program,  # noqa: F401
                                 run_trace)

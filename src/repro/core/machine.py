@@ -1,10 +1,16 @@
-"""FEATHER+ functional machine: executes lowered MINISA Programs in JAX.
+"""FEATHER+ functional machine: MINISA instruction *semantics* in JAX.
 
 This module plays the role the cycle-accurate RTL plays in the paper:
-it implements the *semantics* of every MINISA instruction so that a
+it implements the semantics of every MINISA instruction so that a
 (mapper-produced) Program can be validated end-to-end against the plain
 einsum oracle.  Timing lives in ``core/perf.py``; this file is purely
 functional.
+
+The orchestration loop (walking a Program's TraceOp stream) lives in
+``repro.backends.interpreter.InterpreterBackend``: the machine exposes
+``step``/``flush`` and the backend drives them.  The module-level
+``run_trace`` / ``run_program`` helpers remain as thin wrappers over that
+backend for existing call sites.
 
 Architecture state:
 
@@ -137,7 +143,10 @@ def _next_pow2(n: int) -> int:
 
 
 class FeatherMachine:
-    """Executes a Program (or a flat TraceOp stream) against host tensors."""
+    """MINISA architecture state + per-instruction semantics.
+
+    Drive it with ``step(op, tensors)`` per TraceOp and a final ``flush()``
+    (or use ``backends.InterpreterBackend``, which owns that loop)."""
 
     def __init__(self, cfg: FeatherConfig, max_depth: int | None = None):
         self.cfg = cfg
@@ -183,19 +192,8 @@ class FeatherMachine:
             self._buf_dev[role] = (self._buf_ver[role], arr)
         return arr
 
-    # -- public entry points -------------------------------------------------
-    def run(self, ops: Iterable[TraceOp], tensors: dict[str, np.ndarray]):
-        for op in ops:
-            self._step(op, tensors)
-        self._flush()
-        return self.outputs
-
-    def run_program(self, prog: Program,
-                    tensors: dict[str, np.ndarray]):
-        return self.run(prog.trace_ops(), tensors)
-
     # -- instruction semantics -----------------------------------------------
-    def _step(self, op: TraceOp, tensors):
+    def step(self, op: TraceOp, tensors):
         inst = op.inst
         if isinstance(inst, isa.ExecuteMapping):
             self.em = inst
@@ -203,7 +201,7 @@ class FeatherMachine:
         if isinstance(inst, isa.ExecuteStreaming):
             self._enqueue(inst, op.meta)
             return
-        self._flush()
+        self.flush()
         if isinstance(inst, (isa.SetWVNLayout, isa.SetIVNLayout)):
             operand = "W" if isinstance(inst, isa.SetWVNLayout) else "I"
             self.layouts[operand] = op.meta["layout"]
@@ -295,7 +293,7 @@ class FeatherMachine:
                str_free, self._buf_ver["stationary"],
                self._buf_ver["streaming"])
         if self._pending and key != self._pending_key:
-            self._flush()
+            self.flush()
         self._pending_key = key
         self._pending.append([
             em.r0, em.c0, es.m0,
@@ -304,7 +302,7 @@ class FeatherMachine:
             meta.get("r_hi", sta_red), meta.get("c_hi", sta_free),
             meta.get("m_hi", str_free)])
 
-    def _flush(self):
+    def flush(self):
         if not self._pending:
             return
         (t_steps, vn_size, s_m, df, g_r, g_c, s_r, s_c, sta_lay, sta_red,
@@ -364,9 +362,11 @@ class FeatherMachine:
 
 def run_trace(cfg: FeatherConfig, ops: Iterable[TraceOp],
               tensors: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
-    return FeatherMachine(cfg).run(ops, tensors)
+    from repro.backends.interpreter import InterpreterBackend
+    return InterpreterBackend(cfg).run_trace(ops, tensors)
 
 
 def run_program(cfg: FeatherConfig, prog: Program,
                 tensors: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
-    return FeatherMachine(cfg).run_program(prog, tensors)
+    from repro.backends.interpreter import InterpreterBackend
+    return InterpreterBackend(cfg).run_program(prog, tensors)

@@ -326,6 +326,20 @@ class Plan:
     def speedup(self) -> float:
         return self.perf_micro.cycles / max(self.perf_minisa.cycles, 1e-9)
 
+    def execute(self, tensors: dict, backend="interpreter",
+                **backend_kwargs) -> dict:
+        """Run the winning Program on an execution backend.
+
+        ``backend`` is a registry name ('interpreter' drives the FEATHER+
+        functional machine tile by tile; 'pallas' compiles the Program's
+        tiling to one ``pl.pallas_call``) or a ``backends.Backend``
+        instance for stateful multi-layer runs.  Returns the named output
+        tensors ({self.program.out_name: ...}).
+        """
+        from repro import backends as backendlib
+        be = backendlib.get_backend(backend, self.cfg, **backend_kwargs)
+        return be.run_program(self.program, tensors)
+
     def summary(self) -> dict:
         p = self.program
         minisa_bytes = p.minisa_bytes()

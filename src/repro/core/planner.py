@@ -98,6 +98,36 @@ class ArchPlan:
         }
 
 
+def cross_check(arch_plan: ArchPlan,
+                backends: Sequence[str] = ("interpreter", "pallas"),
+                max_macs: float = 2e8, seed: int = 0) -> dict[tuple, dict]:
+    """Execute the planned Programs on the selected backends against the
+    einsum oracle (the correctness spine behind the analytic numbers).
+
+    Every unique GEMM plan whose functional execution fits ``max_macs`` is
+    run; huge layers (decode GEMMs reach billions of MACs) are skipped --
+    their *mappings* are identical shape classes to the checked ones.
+    Returns {(m, k, n): {backend: max_abs_err}} and raises on divergence.
+    """
+    import numpy as np
+
+    from repro import backends as backendlib
+
+    rng = np.random.default_rng(seed)
+    out: dict[tuple, dict] = {}
+    for key, plan in arch_plan.plans.items():
+        g = plan.gemm
+        if g.macs > max_macs:
+            continue
+        tensors = {
+            "I": rng.standard_normal((g.m, g.k)).astype(np.float32),
+            "W": rng.standard_normal((g.k, g.n)).astype(np.float32),
+        }
+        out[key] = backendlib.cross_check(plan.program, tensors,
+                                          backends=tuple(backends))
+    return out
+
+
 def plan_model(arch: str, shape: str, ops: Sequence[GemmOp],
                cfg: FeatherConfig) -> ArchPlan:
     plans: dict[tuple, mapperlib.Plan] = {}

@@ -8,7 +8,8 @@ operand-residency mode, and exposes a :class:`repro.core.perf.TileCost`.
 One lowering produces everything downstream:
 
     Gemm + MappingChoice --lower()--> Program
-        --> FeatherMachine.run_program   (functional execution, tile by tile)
+        --> backends.InterpreterBackend  (functional execution, tile by tile)
+        --> backends.PallasBackend       (compiled: tiling -> pallas_call)
         --> perf.simulate(tile_costs())  (5-engine analytical model)
         --> minisa_bytes()               (byte accounting == trace_bits of
                                           the flattened instruction stream)

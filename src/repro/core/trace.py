@@ -1,15 +1,22 @@
-"""Flat-trace compatibility layer over the tiled Program IR.
+"""DEPRECATED flat-trace compatibility layer over the tiled Program IR.
 
-The untiled per-layer trace builder this module used to contain is gone:
-``core/program.py`` is the single lowering (paper §IV-G execution model,
-§V step 7), and what used to be a separate functional trace is now just
-the flattened TraceOp stream of a Program.  These wrappers keep the
-historical ``build_trace`` / ``build_chain_trace`` entry points for
-examples and tests that want a plain list of ops.
+.. deprecated::
+    The Program (``core/program.py``) is the single lowered artifact and
+    the execution backends (``repro.backends``) are the supported way to
+    run it; a flat instruction stream is just ``Program.trace_ops()``.
+    All in-repo consumers have been ported; these wrappers remain only
+    for external callers of the historical ``build_trace`` /
+    ``build_chain_trace`` entry points and now emit
+    ``DeprecationWarning``.  Use instead:
+
+        plan.program.trace_ops()                      # flat stream
+        program.chain([...])                          # §IV-G chaining
+        plan.execute(tensors, backend=...)            # execution
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Callable
 
 from repro.core import program as programlib
@@ -17,10 +24,20 @@ from repro.core.machine import TraceOp  # noqa: F401 (re-export)
 from repro.core.mapper import Plan
 
 
+def _deprecated(name: str, replacement: str) -> None:
+    warnings.warn(
+        f"repro.core.trace.{name} is deprecated; use {replacement}",
+        DeprecationWarning, stacklevel=3)
+
+
 def build_trace(plan: Plan, activation: Callable | None = None,
                 act_name: str = "none") -> list[TraceOp]:
     """Flattened instruction stream of the plan's Program (re-lowered when
-    an activation is requested, since activations live in the tile drains)."""
+    an activation is requested, since activations live in the tile drains).
+
+    Deprecated: iterate ``plan.program.trace_ops()`` (lowering with
+    ``program.lower(..., activation=...)`` when needed) instead."""
+    _deprecated("build_trace", "Program.trace_ops()")
     prog = plan.program
     if activation is not None:
         prog = programlib.lower(plan.gemm, plan.choice, plan.cfg,
@@ -36,10 +53,9 @@ def build_chain_trace(plans: list[Plan],
     commits the output on-chip into layer i+1's input buffer, and layer
     i+1 elides its SetIVNLayout + input Load.
 
-    On-chip chaining requires matching VN sizes across the boundary (the
-    committed O_VNs *are* the next layer's I_VNs); incompatible neighbours
-    fall back to an off-chip round trip (no elision).
-    """
+    Deprecated: use ``program.chain`` on lowered Programs and execute
+    them on a stateful backend instead."""
+    _deprecated("build_chain_trace", "program.chain() + backends")
     progs = []
     for i, plan in enumerate(plans):
         act = activations[i] if activations else None

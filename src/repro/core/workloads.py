@@ -81,6 +81,40 @@ def by_domain() -> dict[str, list[Gemm]]:
     }
 
 
+def ci_suite() -> list[Gemm]:
+    """The Tab. IV sweep at functionally-executable extents.
+
+    Same four families and the same relative geometry (tall-skinny BConv,
+    square NTT, wide decode GEMMs), with the huge ranks scaled down so the
+    execution backends can run *every* mapping the mapper emits against
+    the einsum oracle on CPU in CI (max rank 256, max ~8M MACs/GEMM).
+    The family scale factors are chosen so the downscaled families do not
+    land on each other (fhe-ntt keeps m >= 32, zkp-ntt m <= 16); the one
+    shape Tab. IV's own filler duplicates gets a deterministic m bump, so
+    all 58 shapes are pairwise distinct and each contributes its own
+    mapping-search problem.
+    """
+    out = [Gemm(m=96, k=g.k, n=g.n, name=g.name + "-ci")
+           for g in _bconv_shapes()]
+    out += [Gemm(m=g.m // 2, k=g.k // 16, n=g.n // 16, name=g.name + "-ci")
+            for g in _fhe_ntt_shapes()]
+    out += [Gemm(m=max(g.m // 128, 2), k=g.k // 256, n=g.n // 256,
+                 name=g.name + "-ci")
+            for g in _zkp_ntt_shapes()]
+    out += [Gemm(m=64, k=max(g.k // 32, 8), n=min(max(g.n // 32, 8), 192),
+                 name=g.name + "-ci")
+            for g in _gpt_oss_shapes()]
+    seen: set[tuple[int, int, int]] = set()
+    uniq: list[Gemm] = []
+    for g in out:
+        m = g.m
+        while (m, g.k, g.n) in seen:
+            m += 8
+        seen.add((m, g.k, g.n))
+        uniq.append(Gemm(m=m, k=g.k, n=g.n, name=g.name))
+    return uniq
+
+
 def small_suite() -> list[Gemm]:
     """Reduced shapes (same families) for CI-speed tests."""
     return [

@@ -39,12 +39,16 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         if causal:
             qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
             s = jnp.where(kpos <= qpos, s, NEG_INF)
-        if kv_len % bkv:
-            # zero-padded KV tail (ops.py raggedness) must not contribute
+        if kv_len < n_kv * bkv:
+            # zero-padded KV tail (ops.py raggedness) must not contribute --
+            # guard on the padded extent, not kv_len % bkv: a block-aligned
+            # kv_len shorter than the padded buffer must still be masked
             s = jnp.where(kpos < kv_len, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
-        p = jnp.exp(s - m_new)
+        # exp(s - m_new) == 1, not 0, when an entire row is masked so far
+        # (s == m_new == NEG_INF); zero those explicitly or padding leaks
+        p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new))
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
         acc_ref[...] = acc_ref[...] * alpha + jnp.dot(

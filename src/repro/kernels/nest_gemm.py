@@ -10,6 +10,12 @@ BlockSpec index map, which lets the caller pick the *output layout*
 
 Grid: (M/bm, N/bn, K/bk); K is innermost (sequential on TPU) and the output
 block is revisited across it, accumulating in a VMEM fp32 scratch.
+
+``repro.backends.pallas_backend`` compiles lowered Programs onto this
+kernel: the Program's snapped tiling becomes (bm, bk, bn), an IO-S
+(transposed-accumulator) SetOVNLayout becomes ``out_block_t``, and an
+elementwise Activation drain becomes ``act`` (fused at the final K step,
+exactly where the interpreter applies it to the drained tile).
 """
 
 from __future__ import annotations
@@ -21,8 +27,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+#: Elementwise activations fusable at the output-store step (the MINISA
+#: Activation instruction's elementwise subset; row-wise functions such as
+#: softmax/norms need full rows and are applied by the caller instead).
+ACT_FNS = {
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
 
-def _nest_gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+
+def _nest_gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int,
+                      out_block_t: bool, act: str | None):
     """One (bm, bn) output tile; accumulates over the K grid dimension."""
     k_idx = pl.program_id(2)
 
@@ -36,14 +52,21 @@ def _nest_gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
 
     @pl.when(k_idx == n_k - 1)
     def _store():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        acc = acc_ref[...]
+        if act is not None:
+            acc = ACT_FNS[act](acc)
+        if out_block_t:
+            acc = acc.T
+        o_ref[...] = acc.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
-                                             "out_dtype", "out_block_t"))
+                                             "out_dtype", "out_block_t",
+                                             "act"))
 def nest_gemm(x: jax.Array, w: jax.Array, *, bm: int = 128, bn: int = 128,
               bk: int = 128, interpret: bool = False, out_dtype=None,
-              out_block_t: bool = False) -> jax.Array:
+              out_block_t: bool = False,
+              act: str | None = None) -> jax.Array:
     """O = X[M, K] @ W[K, N]; shapes must divide by the blocks (ops.py pads).
 
     out_block_t=True stores output *tiles* to transposed tile coordinates
@@ -51,52 +74,36 @@ def nest_gemm(x: jax.Array, w: jax.Array, *, bm: int = 128, bn: int = 128,
     consumer can read a column-major-of-blocks layout with zero extra
     passes.  O then has shape (N//bn * bn rows of blocks ...) == (N, M) with
     per-block transposition applied.
+
+    ``act`` fuses an elementwise activation (a key of :data:`ACT_FNS`) into
+    the final-K store, before the optional block transpose.
     """
     m, k = x.shape
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
         f"{(m, k, n)} not divisible by blocks {(bm, bk, bn)}"
+    assert act is None or act in ACT_FNS, act
     n_k = k // bk
     out_dtype = out_dtype or x.dtype
 
     if out_block_t:
-        def kernel(x_ref, w_ref, o_ref, acc_ref):
-            k_idx = pl.program_id(2)
-
-            @pl.when(k_idx == 0)
-            def _init():
-                acc_ref[...] = jnp.zeros_like(acc_ref)
-
-            acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
-                                    preferred_element_type=jnp.float32)
-
-            @pl.when(k_idx == n_k - 1)
-            def _store():
-                o_ref[...] = acc_ref[...].T.astype(o_ref.dtype)
-
-        return pl.pallas_call(
-            kernel,
-            grid=(m // bm, n // bn, n_k),
-            in_specs=[
-                pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-                pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            ],
-            out_specs=pl.BlockSpec((bn, bm), lambda i, j, kk: (j, i)),
-            out_shape=jax.ShapeDtypeStruct((n, m), out_dtype),
-            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-            interpret=interpret,
-        )(x, w)
+        out_spec = pl.BlockSpec((bn, bm), lambda i, j, kk: (j, i))
+        out_shape = jax.ShapeDtypeStruct((n, m), out_dtype)
+    else:
+        out_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+        out_shape = jax.ShapeDtypeStruct((m, n), out_dtype)
 
     return pl.pallas_call(
-        functools.partial(_nest_gemm_kernel, n_k=n_k),
+        functools.partial(_nest_gemm_kernel, n_k=n_k,
+                          out_block_t=out_block_t, act=act),
         grid=(m // bm, n // bn, n_k),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        out_specs=out_spec,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, w)

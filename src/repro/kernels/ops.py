@@ -31,9 +31,10 @@ def _pad_to(x, axis, mult):
 
 
 def nest_gemm(x, w, *, bm=128, bn=128, bk=128, interpret=None,
-              out_dtype=None, out_block_t=False):
+              out_dtype=None, out_block_t=False, act=None):
     """Ragged-shape-safe NEST GEMM (zero-pads to block multiples, the
-    paper's implicit zero-padding semantics)."""
+    paper's implicit zero-padding semantics).  ``act`` fuses an
+    elementwise activation from :data:`nest_gemm.ACT_FNS` into the store."""
     interpret = _auto_interpret(interpret)
     m, k = x.shape
     n = w.shape[1]
@@ -43,7 +44,7 @@ def nest_gemm(x, w, *, bm=128, bn=128, bk=128, interpret=None,
     w, _ = _pad_to(w, 0, bk_)
     w, _ = _pad_to(w, 1, bn_)
     o = _ng.nest_gemm(x, w, bm=bm_, bn=bn_, bk=bk_, interpret=interpret,
-                      out_dtype=out_dtype, out_block_t=out_block_t)
+                      out_dtype=out_dtype, out_block_t=out_block_t, act=act)
     if out_block_t:
         return o[:n, :m]
     return o[:m, :n]

@@ -1,0 +1,205 @@
+"""Execution-backend equivalence: PallasBackend == InterpreterBackend ==
+einsum oracle, for every mapping the mapper emits across the Tab. IV
+workload sweep (CI-scaled extents), plus the compiled-lowering invariants
+(grid/BlockSpec derivation, IO-S out_block_t, activation fusion, chained
+Programs)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import backends
+from repro.configs.feather import feather_config
+from repro.core import isa, mapper, program, workloads
+
+RNG = np.random.default_rng(7)
+
+
+def _tensors(g):
+    return {
+        "I": RNG.standard_normal((g.m, g.k)).astype(np.float32),
+        "W": RNG.standard_normal((g.k, g.n)).astype(np.float32),
+    }
+
+
+def _choice(df=isa.Dataflow.WOS, vn=4):
+    return mapper.MappingChoice(df=df, vn=vn, m_t=8, k_t=8, n_t=8,
+                                n_kg=1, n_nb=1, dup=4)
+
+
+# ---------------------------------------------------------------------------
+# The correctness spine: the 50+-GEMM sweep on both backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gemm", workloads.ci_suite(),
+                         ids=lambda g: g.name)
+def test_backend_equivalence_workload_sweep(gemm):
+    """Search each Tab. IV workload (CI extents), lower the winning
+    mapping once, and demand interpreter == pallas == oracle at fp32
+    accumulate tolerance."""
+    cfg = feather_config(4, 16)
+    plan = mapper.search(gemm, cfg)
+    backends.cross_check(plan.program, _tensors(gemm))
+
+
+def test_ci_suite_covers_the_paper_sweep():
+    suite = workloads.ci_suite()
+    assert len(suite) == len(workloads.suite())
+    # pairwise distinct: every entry is its own mapping-search problem
+    assert len({(g.m, g.k, g.n) for g in suite}) == len(suite) >= 50
+    assert max(max(g.m, g.k, g.n) for g in suite) <= 256
+    domains = {g.name.split("-")[0] for g in suite}
+    assert domains == {"fhe", "zkp", "gpt"}
+
+
+# ---------------------------------------------------------------------------
+# Forced lowerings: residency modes, dataflows, activations
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("df", [isa.Dataflow.WOS, isa.Dataflow.IOS])
+def test_backends_agree_on_capacity_bound_tiling(df):
+    """Shrunk buffers force tiled residency on every rank; both backends
+    must still agree with the oracle (the pallas grid covers n_m x n_n x
+    n_k > 1 kernel blocks)."""
+    cfg = dataclasses.replace(feather_config(4, 4), str_bytes=16 * 8,
+                              sta_bytes=8 * 8, ob_bytes=16 * 8 * 4)
+    g = mapper.Gemm(m=20, k=12, n=18)
+    prog = program.lower(g, _choice(df), cfg)
+    assert prog.residency == {"stationary": "tiled", "streaming": "tiled"}
+    comp = backends.compile_program(prog)
+    assert comp.n_launches > 1
+    backends.cross_check(prog, _tensors(g))
+
+
+@pytest.mark.parametrize("df", [isa.Dataflow.WOS, isa.Dataflow.IOS])
+def test_pallas_lowering_geometry(df):
+    """The compiled grid/blocks derive from the Program's snapped tiling
+    (search orientation mapped to host coordinates) and the IO-S
+    transposed accumulator lowers to the out_block_t index map."""
+    cfg = feather_config(4, 4)
+    g = mapper.Gemm(m=20, k=12, n=18)
+    prog = program.lower(g, _choice(df), cfg)
+    comp = backends.compile_program(prog)
+    m_t, k_t, n_t = program.snap_tiling(g, prog.choice, cfg)
+    wos = df == isa.Dataflow.WOS
+    assert comp.out_block_t == (not wos)
+    assert (comp.bm, comp.bk, comp.bn) == \
+        ((m_t, k_t, n_t) if wos else (n_t, k_t, m_t))
+    import math
+    assert comp.grid == (math.ceil(g.m / comp.bm),
+                         math.ceil(g.n / comp.bn),
+                         math.ceil(g.k / comp.bk))
+
+
+def test_pallas_fused_and_host_activations():
+    """Elementwise act_name lowers to the in-kernel fusion; an unknown
+    callable falls back to host application -- both must match the
+    interpreter."""
+    cfg = feather_config(4, 4)
+    g = mapper.Gemm(m=10, k=12, n=8)
+    t = _tensors(g)
+    relu_prog = program.lower(g, _choice(), cfg,
+                              activation=lambda x: np.maximum(x, 0),
+                              act_name="relu")
+    assert backends.compile_program(relu_prog).fused_act == "relu"
+    backends.cross_check(relu_prog, t)
+    square = lambda x: x * x
+    sq_prog = program.lower(g, _choice(), cfg, activation=square,
+                            act_name="none")
+    comp = backends.compile_program(sq_prog)
+    assert comp.fused_act is None and comp.host_act is square
+    backends.cross_check(sq_prog, t)
+
+
+# ---------------------------------------------------------------------------
+# Chained Programs (paper §IV-G) across backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["interpreter", "pallas"])
+def test_chain_commit_and_elision(backend):
+    """Producer commits on-chip, consumer elides its input Load: both
+    backends resolve the chain to the 2-layer oracle."""
+    cfg = feather_config(4, 4)
+    g1 = mapper.Gemm(m=10, k=12, n=8)
+    g2 = mapper.Gemm(m=10, k=8, n=6)
+    p1 = program.lower(g1, _choice(), cfg, out_name="O0")
+    p2 = program.lower(g2, _choice(), cfg, out_name="O1")
+    chained = program.chain([p1, p2])
+    assert chained[1].input_elided
+    i0 = RNG.standard_normal((10, 12)).astype(np.float32)
+    w1 = RNG.standard_normal((12, 8)).astype(np.float32)
+    w2 = RNG.standard_normal((8, 6)).astype(np.float32)
+    be = backends.get_backend(backend, cfg)
+    be.run_program(chained[0], {"I": i0, "W": w1})
+    out = be.run_program(chained[1], {"W": w2})
+    np.testing.assert_allclose(out["O1"], (i0 @ w1) @ w2,
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("backend", ["interpreter", "pallas"])
+def test_chain_retargeted_input(backend):
+    """vn-mismatched neighbour cannot elide: its input Load is retargeted
+    to the producer's named output, which both backends resolve from
+    their own outputs."""
+    cfg = feather_config(4, 4)
+    gs = [mapper.Gemm(m=8, k=8, n=8)] * 3
+    progs = [program.lower(gs[0], _choice(vn=2), cfg, out_name="O0"),
+             program.lower(gs[1], _choice(), cfg, out_name="O1"),
+             program.lower(gs[2], _choice(), cfg, out_name="O2")]
+    chained = program.chain(progs)
+    assert not chained[1].input_elided and chained[2].input_elided
+    i0 = RNG.standard_normal((8, 8)).astype(np.float32)
+    ws = [RNG.standard_normal((8, 8)).astype(np.float32) for _ in range(3)]
+    be = backends.get_backend(backend, cfg)
+    be.run_program(chained[0], {"I": i0, "W": ws[0]})
+    be.run_program(chained[1], {"W": ws[1]})
+    out = be.run_program(chained[2], {"W": ws[2]})
+    np.testing.assert_allclose(out["O2"], ((i0 @ ws[0]) @ ws[1]) @ ws[2],
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# API surface
+# ---------------------------------------------------------------------------
+
+def test_backend_registry_and_plan_execute():
+    cfg = feather_config(4, 4)
+    with pytest.raises(ValueError, match="unknown backend"):
+        backends.get_backend("fpga", cfg)
+    be = backends.PallasBackend(cfg)
+    assert backends.get_backend(be, cfg) is be
+    g = mapper.Gemm(m=10, k=12, n=8)
+    plan = mapper.search(g, cfg)
+    t = _tensors(g)
+    oracle = t["I"] @ t["W"]
+    for backend in ("interpreter", "pallas"):
+        out = plan.execute(t, backend=backend)["O"]
+        np.testing.assert_allclose(out, oracle, rtol=2e-4, atol=2e-4)
+
+
+def test_interpreter_backend_is_machine_semantics():
+    """module-level machine.run_program (the compat wrapper) and the
+    InterpreterBackend produce identical arrays."""
+    from repro.core import machine
+    cfg = feather_config(4, 16)
+    g = mapper.Gemm(m=17, k=40, n=24)
+    prog = mapper.search(g, cfg).program
+    t = _tensors(g)
+    a = machine.run_program(cfg, prog, t)["O"]
+    b = backends.InterpreterBackend(cfg).run_program(prog, t)["O"]
+    np.testing.assert_array_equal(a, b)
+
+
+def test_pallas_max_block_subdivision():
+    """max_block bounds one kernel block's working set: the grid refines
+    but the numbers do not change."""
+    cfg = feather_config(8, 8)
+    g = mapper.Gemm(m=96, k=64, n=96)
+    prog = mapper.search(g, cfg).program
+    t = _tensors(g)
+    small = backends.PallasBackend(cfg, max_block=32)
+    comp = small.compile(prog)
+    assert max(comp.bm, comp.bk, comp.bn) <= 64  # full residency: <= 2x cap
+    out = small.run_program(prog, t)["O"]
+    np.testing.assert_allclose(out, t["I"] @ t["W"], rtol=2e-4, atol=2e-2)

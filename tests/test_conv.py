@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs.feather import feather_config
-from repro.core import machine, mapper, trace
+from repro.core import machine, mapper
 from repro.core.conv import Conv2D, conv2d_ref, im2col
 
 RNG = np.random.default_rng(9)
@@ -26,10 +26,9 @@ def test_conv_through_feather_machine(conv):
     g = conv.to_gemm()
     cfg = feather_config(4, 4)
     plan = mapper.search(g, cfg)
-    ops = trace.build_trace(plan)
     patches = im2col(x, conv)
     wmat = kern.reshape(-1, conv.c_out)
-    out = machine.run_trace(cfg, ops, {"I": patches, "W": wmat})["O"]
+    out = plan.execute({"I": patches, "W": wmat})["O"]
     oh, ow = conv.out_hw
     got = out.reshape(conv.n, oh, ow, conv.c_out)
     expect = conv2d_ref(x, kern, conv)
@@ -58,9 +57,9 @@ def test_layout_constrained_search():
     assert constrained.choice.order_i == 0b100
     # constrained search can never beat the free one
     assert constrained.perf_minisa.cycles >= free.perf_minisa.cycles * 0.999
-    # functional correctness preserved under the constraint
-    ops = trace.build_trace(constrained)
+    # functional correctness preserved under the constraint (the Program
+    # IS the plan artifact; no separate trace build)
     i = RNG.standard_normal((64, 40)).astype(np.float32)
     w = RNG.standard_normal((40, 48)).astype(np.float32)
-    out = machine.run_trace(cfg, ops, {"I": i, "W": w})["O"]
+    out = machine.run_program(cfg, constrained.program, {"I": i, "W": w})["O"]
     np.testing.assert_allclose(out, i @ w, rtol=2e-4, atol=2e-4)

@@ -7,8 +7,10 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
+from repro import backends
 from repro.configs.feather import feather_config
-from repro.core import machine, mapper, trace
+from repro.core import mapper
+from repro.core import program as programlib
 from repro.models import moe as moelib
 from repro.models.common import Maker
 
@@ -29,13 +31,13 @@ def test_two_layer_chain_with_activation():
 
     g1 = mapper.Gemm(m=10, k=12, n=8)
     plan1 = mapper.search(g1, cfg)
-    ops1 = trace.build_trace(plan1, activation=relu, act_name="relu")
-    o1 = machine.run_trace(cfg, ops1, {"I": i0, "W": w1})["O"]
+    prog1 = programlib.lower(g1, plan1.choice, cfg, activation=relu,
+                             act_name="relu")
+    o1 = backends.run(prog1, {"I": i0, "W": w1})["O"]
 
     g2 = mapper.Gemm(m=10, k=8, n=6)
     plan2 = mapper.search(g2, cfg)
-    ops2 = trace.build_trace(plan2)
-    o2 = machine.run_trace(cfg, ops2, {"I": o1, "W": w2})["O"]
+    o2 = plan2.execute({"I": o1, "W": w2})["O"]
 
     expect = relu(i0 @ w1) @ w2
     np.testing.assert_allclose(o2, expect, rtol=2e-4, atol=2e-4)
@@ -45,10 +47,12 @@ def test_chain_trace_per_layer_counts():
     cfg = feather_config(8, 8)
     plans = [mapper.search(mapper.Gemm(m=16, k=24, n=16), cfg),
              mapper.search(mapper.Gemm(m=16, k=16, n=12), cfg)]
-    traces = trace.build_chain_trace(plans)
-    assert len(traces) == 2
-    for t in traces:
-        names = [type(op.inst).__name__ for op in t]
+    progs = programlib.chain([
+        programlib.lower(p.gemm, p.choice, cfg, out_name=f"O{i}")
+        for i, p in enumerate(plans)])
+    assert len(progs) == 2
+    for prog in progs:
+        names = [type(op.inst).__name__ for op in prog.trace_ops()]
         assert names.count("SetOVNLayout") == 1
         assert "ExecuteMapping" in names and "ExecuteStreaming" in names
 
@@ -56,36 +60,31 @@ def test_chain_trace_per_layer_counts():
 def test_on_chip_chain_commit_matches_oracle():
     """Paper §IV-G: layer i's Write commits on-chip; layer i+1 elides its
     SetIVNLayout + input Load and still matches the 3-layer oracle."""
-    import dataclasses
     from repro.core import isa as isalib
-    from repro.core import program as programlib
 
     cfg = feather_config(4, 4)
     relu = lambda x: np.maximum(x, 0)
     gs = [mapper.Gemm(m=10, k=12, n=8), mapper.Gemm(m=10, k=8, n=6),
           mapper.Gemm(m=10, k=6, n=9)]
-    plans = []
-    for g in gs:
-        p = mapper.search(g, cfg)
-        if p.choice.vn != 4 or p.choice.df != isalib.Dataflow.WOS:
-            ch = dataclasses.replace(p.choice, vn=4,
-                                     df=isalib.Dataflow.WOS)
-            p = dataclasses.replace(
-                p, choice=ch, program=programlib.lower(g, ch, cfg))
-        plans.append(p)
-    traces = trace.build_chain_trace(plans, [relu, relu, None])
+    acts = [(relu, "relu"), (relu, "relu"), (None, "none")]
+    choice = mapper.MappingChoice(df=isalib.Dataflow.WOS, vn=4, m_t=16,
+                                  k_t=16, n_t=16, n_kg=1, n_nb=1, dup=4)
+    progs = programlib.chain([
+        programlib.lower(g, choice, cfg, activation=act, act_name=name,
+                         out_name=f"O{i}")
+        for i, (g, (act, name)) in enumerate(zip(gs, acts))])
     i0 = RNG.standard_normal((10, 12)).astype(np.float32)
     w1 = RNG.standard_normal((12, 8)).astype(np.float32)
     w2 = RNG.standard_normal((8, 6)).astype(np.float32)
     w3 = RNG.standard_normal((6, 9)).astype(np.float32)
-    m = machine.FeatherMachine(cfg)
-    m.run(traces[0], {"I": i0, "W": w1})
-    m.run(traces[1], {"W": w2})      # input arrived via on-chip commit
-    m.run(traces[2], {"W": w3})
+    m = backends.InterpreterBackend(cfg)
+    m.run_program(progs[0], {"I": i0, "W": w1})
+    m.run_program(progs[1], {"W": w2})   # input arrived via on-chip commit
+    m.run_program(progs[2], {"W": w3})
     expect = relu(relu(i0 @ w1) @ w2) @ w3
     np.testing.assert_allclose(m.outputs["O2"], expect, rtol=2e-4,
                                atol=2e-4)
-    names1 = [type(op.inst).__name__ for op in traces[1]]
+    names1 = [type(op.inst).__name__ for op in progs[1].trace_ops()]
     assert "SetIVNLayout" not in names1          # elided
     assert names1.count("Load") == 1             # weights only
 

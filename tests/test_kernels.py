@@ -4,7 +4,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
+from repro.kernels import flash_attention as _fa
 from repro.kernels import ops, ref
 
 RNG = np.random.default_rng(3)
@@ -77,6 +79,90 @@ def test_mamba_scan(b, l, d, n):
                                rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Randomized oracle sweeps (ragged shapes the parametrized grids miss)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(m=st.integers(1, 150), k=st.integers(1, 150), n=st.integers(1, 150))
+def test_nest_gemm_randomized_ragged(m, k, n):
+    """Arbitrary non-block-multiple shapes vs the einsum oracle (the
+    zero-pad path of ops.nest_gemm must be exact, not approximate)."""
+    x, w = _rand((m, k), jnp.float32), _rand((k, n), jnp.float32)
+    out = ops.nest_gemm(x, w, interpret=True)
+    expect = ref.nest_gemm_ref(x, w)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4 * max(k, 1))
+
+
+@settings(max_examples=8, deadline=None)
+@given(m=st.integers(2, 140), k=st.integers(2, 100), n=st.integers(2, 140))
+def test_nest_gemm_out_block_t_randomized_ragged(m, k, n):
+    """The BIRRD-style block-transposed output map on ragged shapes:
+    per-block transposition at swapped block coordinates must equal the
+    global transpose after the pad-slice round trip."""
+    x, w = _rand((m, k), jnp.float32), _rand((k, n), jnp.float32)
+    out = ops.nest_gemm(x, w, interpret=True, out_block_t=True)
+    expect = ref.nest_gemm_ref(x, w, out_block_t=True)
+    assert out.shape == (n, m)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4 * max(k, 1))
+
+
+@pytest.mark.parametrize("act", ["relu", "gelu", "silu"])
+def test_nest_gemm_fused_activation(act):
+    """Activation fused at the final-K store == oracle + host activation
+    (the PallasBackend's lowering of elementwise Activation drains)."""
+    import jax
+    x, w = _rand((96, 72), jnp.float32), _rand((72, 80), jnp.float32)
+    out = ops.nest_gemm(x, w, interpret=True, act=act)
+    fn = {"relu": lambda v: jnp.maximum(v, 0.0), "gelu": jax.nn.gelu,
+          "silu": jax.nn.silu}[act]
+    expect = fn(ref.nest_gemm_ref(x, w))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-2)
+
+
+@settings(max_examples=6, deadline=None)
+@given(s=st.integers(2, 96), sk=st.integers(2, 200),
+       d=st.sampled_from([16, 32, 64]))
+def test_flash_attention_noncausal_padded_kv_randomized(s, sk, d):
+    """Non-causal cross-attention with ragged (padded) KV: the docstring
+    promises padded KV rows are masked -- randomized regression."""
+    b, h = 1, 2
+    q = _rand((b, s, h, d), jnp.float32) * 0.3
+    k = _rand((b, sk, h, d), jnp.float32) * 0.3
+    v = _rand((b, sk, h, d), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=False, interpret=True)
+    qf = jnp.transpose(q, (0, 2, 1, 3)).reshape(b * h, s, d)
+    kf = jnp.transpose(k, (0, 2, 1, 3)).reshape(b * h, sk, d)
+    vf = jnp.transpose(v, (0, 2, 1, 3)).reshape(b * h, sk, d)
+    expect = ref.flash_attention_ref(qf, kf, vf, causal=False)
+    expect = expect.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_blockaligned_padded_kv_does_not_leak():
+    """Regression for the raw kernel's pad guard: a block-aligned kv_len
+    shorter than the padded buffer (kv_len % bkv == 0) used to skip the
+    mask entirely, letting whole padding blocks contribute.  Poison the
+    pad region to make any leak loud."""
+    bh, s, d, real_kv = 2, 64, 32, 64
+    q = _rand((bh, s, d), jnp.float32) * 0.3
+    k = _rand((bh, real_kv, d), jnp.float32) * 0.3
+    v = _rand((bh, real_kv, d), jnp.float32)
+    poison = jnp.full((bh, 64, d), 100.0, jnp.float32)
+    k_pad = jnp.concatenate([k, poison], axis=1)     # padded to 128
+    v_pad = jnp.concatenate([v, poison], axis=1)
+    out = _fa.flash_attention(q, k_pad, v_pad, causal=False, bq=32, bkv=64,
+                              kv_len=real_kv, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)
 
 
 def test_mamba_scan_matches_model_recurrence():

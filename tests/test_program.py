@@ -11,6 +11,7 @@ import dataclasses
 import numpy as np
 import pytest
 
+from repro import backends
 from repro.configs.feather import feather_config
 from repro.core import isa, machine, mapper, perf, program
 
@@ -141,7 +142,7 @@ def test_chain_commit_matches_oracle(consumer_df):
     i0 = RNG.standard_normal((10, 12)).astype(np.float32)
     w1 = RNG.standard_normal((12, 8)).astype(np.float32)
     w2 = RNG.standard_normal((8, 6)).astype(np.float32)
-    m = machine.FeatherMachine(cfg)
+    m = backends.InterpreterBackend(cfg)
     m.run_program(chained[0], {"I": i0, "W": w1})
     m.run_program(chained[1], {"W": w2})
     np.testing.assert_allclose(m.outputs["O1"], (i0 @ w1) @ w2,
@@ -173,7 +174,7 @@ def test_chain_mixed_vn_retargets_and_commits():
                if isinstance(op.inst, isa.Load))
     i0 = RNG.standard_normal((8, 8)).astype(np.float32)
     ws = [RNG.standard_normal((8, 8)).astype(np.float32) for _ in range(3)]
-    m = machine.FeatherMachine(cfg)
+    m = backends.InterpreterBackend(cfg)
     m.run_program(chained[0], {"I": i0, "W": ws[0]})
     m.run_program(chained[1], {"W": ws[1]})
     m.run_program(chained[2], {"W": ws[2]})
