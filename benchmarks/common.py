@@ -1,6 +1,6 @@
 """Shared benchmark infrastructure: one mapper sweep over the 58-GEMM
-Tab. IV suite x 9 array configs, memoised and reused by every
-table/figure module."""
+Tab. IV suite x 9 array configs, memoised (through the runtime's shared
+ProgramCache) and reused by every table/figure module."""
 
 from __future__ import annotations
 
@@ -9,7 +9,13 @@ import math
 import time
 
 from repro.configs.feather import SWEEP, feather_config
-from repro.core import mapper, workloads
+from repro.core import workloads
+from repro.runtime.cache import ProgramCache
+
+#: The sweep keeps its own unbounded cache instance: the 58 x 9 suite must
+#: stay fully resident across figure modules (the process default LRU is
+#: sized for serving-scale plans, not the full Tab. IV sweep).
+SWEEP_CACHE = ProgramCache(max_plans=1 << 30)
 
 
 @functools.lru_cache(maxsize=None)
@@ -21,7 +27,7 @@ def sweep_plans(configs: tuple = SWEEP) -> dict:
         cfg = feather_config(ah, aw)
         plans = {}
         for g in suite:
-            plans[g.name] = mapper.search(g, cfg)
+            plans[g.name] = SWEEP_CACHE.plan(g, cfg)
         out[(ah, aw)] = plans
     return out
 

@@ -32,7 +32,8 @@ def main() -> None:
 
     from benchmarks import (arch_plans, backend_compare, breakdown,
                             instr_traffic, isa_bitwidth, roofline, scaling,
-                            speedup, stall_table, tpu_gpu_compare)
+                            serve_runtime, speedup, stall_table,
+                            tpu_gpu_compare)
 
     rows = []
 
@@ -89,6 +90,18 @@ def main() -> None:
                      for key in ("us_interpreter", "us_pallas",
                                  "us_pallas_cold", "wallclock_speedup",
                                  "cycles_minisa", "macs")})
+    bench("serve_runtime",
+          lambda: serve_runtime.run(quick=args.quick),
+          lambda r: "tok_s_pallas=" + _fmt(r["pallas"]["tokens_per_sec"])
+          + " hit_rate=" + _fmt(r["pallas"]["cache_hit_rate"]),
+          lambda r: {f"{name}.{key}": row[key]
+                     for name, row in r.items()
+                     for key in ("tokens_per_sec", "total_tokens",
+                                 "cache_hit_rate", "cache_searches",
+                                 "cache_compiles",
+                                 "minisa_bytes_per_request",
+                                 "micro_bytes_per_request",
+                                 "stall_minisa", "stall_micro")})
 
     print("\nname,us_per_call,derived")
     for name, us, derived, _ in rows:

@@ -1,0 +1,77 @@
+"""Serving-runtime benchmark: scheduler throughput + compile-cache reuse.
+
+    PYTHONPATH=src python -m benchmarks.serve_runtime [--quick]
+
+Runs the continuous-batching :class:`repro.runtime.Scheduler` over a
+reduced (arch x shape) serving cell on both execution backends.  For each
+backend the prefill/decode executables are compiled once through a shared
+ProgramCache and then serve several concurrent requests; reported per
+backend:
+
+  tokens_per_sec     wall-clock serving throughput (prefill + decode)
+  cache_hit_rate     ProgramCache hits / (hits + misses) across the
+                     whole build+serve (plans, lowerings, compiles)
+  searches/compiles  real mapper searches and backend compiles performed
+                     (the second backend's build is expected to re-search
+                     nothing: plans are backend-independent)
+  minisa/micro bytes per-request instruction traffic from the same tile
+                     streams perf.simulate consumes, plus stall fractions
+
+``benchmarks/run.py`` merges these numbers into ``BENCH_results.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def run(quick: bool = False, arch: str = "gemma-7b",
+        n_requests: int = 4, decode_steps: int = 3,
+        max_concurrent: int = 2) -> dict[str, dict]:
+    from repro.configs.feather import feather_config
+    from repro.runtime import ModelExecutable, ProgramCache, Scheduler
+
+    if quick:
+        n_requests, decode_steps = 2, 2
+    cfg = feather_config(4, 16)
+    cache = ProgramCache()   # one cache across both backends
+    out: dict[str, dict] = {}
+    print(f"{'backend':>12} {'tok/s':>10} {'hit_rate':>9} {'searches':>9} "
+          f"{'compiles':>9} {'minisa_B/req':>13} {'instr_red':>10}")
+    for backend in ("interpreter", "pallas"):
+        before = cache.stats.snapshot()
+        prefill = ModelExecutable.for_cell(arch, "prefill_tiny", cfg,
+                                           cache=cache)
+        decode = ModelExecutable.for_cell(arch, "decode_tiny", cfg,
+                                          cache=cache)
+        sched = Scheduler(prefill, decode, backend=backend,
+                          max_concurrent=max_concurrent)
+        for _ in range(n_requests):
+            sched.submit(decode_steps=decode_steps)
+        report = sched.run()
+        s = report.summary()
+        s["cache_delta"] = cache.stats.delta(before)
+        s["arch"] = arch
+        s["decode_steps"] = decode_steps
+        out[backend] = s
+        print(f"{backend:>12} {s['tokens_per_sec']:10.1f} "
+              f"{s['cache_hit_rate']:9.2f} {s['cache_searches']:9d} "
+              f"{s['cache_compiles']:9d} "
+              f"{s['minisa_bytes_per_request']:13.0f} "
+              f"{s['micro_bytes_per_request'] / max(s['minisa_bytes_per_request'], 1e-9):10.0f}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI sizes")
+    ap.add_argument("--arch", default="gemma-7b")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--decode-steps", type=int, default=3)
+    args = ap.parse_args()
+    run(quick=args.quick, arch=args.arch, n_requests=args.requests,
+        decode_steps=args.decode_steps)
+
+
+if __name__ == "__main__":
+    main()

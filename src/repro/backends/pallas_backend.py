@@ -165,7 +165,7 @@ class PallasBackend(Backend):
     name = "pallas"
 
     def __init__(self, cfg: "FeatherConfig", *, interpret: bool | None = None,
-                 max_block: int = 2048):
+                 max_block: int = 2048, compile_cache=None):
         super().__init__(cfg)
         # interpret=None auto-detects: Python-interpret on CPU, Mosaic on TPU
         self.interpret = (interpret if interpret is not None
@@ -177,13 +177,29 @@ class PallasBackend(Backend):
         # us verify the hit.  Bounded so a long-lived backend cannot leak.
         self._cache: dict[int, tuple["Program", CompiledProgram]] = {}
         self._cache_limit = 128
+        # Optional shared artifact store (runtime.cache.ProgramCache):
+        # keyed *structurally*, so fresh-but-equivalent Program objects
+        # (a rebuilt executable, another backend instance) reuse compiled
+        # artifacts instead of recompiling.  n_compiles counts the real
+        # compile_program invocations this instance performed.
+        self.compile_cache = compile_cache
+        self.n_compiles = 0
 
     def compile(self, program: "Program") -> CompiledProgram:
         key = id(program)
         hit = self._cache.get(key)
         if hit is not None and hit[0] is program:
             return hit[1]
-        comp = compile_program(program, max_block=self.max_block)
+        comp = None
+        if self.compile_cache is not None:
+            comp = self.compile_cache.lookup_compiled(program,
+                                                      self.max_block)
+        if comp is None:
+            comp = compile_program(program, max_block=self.max_block)
+            self.n_compiles += 1
+            if self.compile_cache is not None:
+                self.compile_cache.store_compiled(program, self.max_block,
+                                                  comp)
         if len(self._cache) >= self._cache_limit:
             self._cache.pop(next(iter(self._cache)))
         self._cache[key] = (program, comp)

@@ -11,11 +11,12 @@ Public surface:
   core.perf         -- 5-engine analytical performance model
   core.mapper       -- mapping/layout co-search (paper §V)
   core.program      -- tiled Program IR (the single lowered artifact)
-  core.trace        -- DEPRECATED flat-trace wrappers over Program
   core.workloads    -- Tab. IV GEMM suite
   core.planner      -- LM model graph -> per-layer MINISA plans
 
-Execution backends (interpreter / Pallas) live in ``repro.backends``.
+Execution backends (interpreter / Pallas) live in ``repro.backends``;
+the model runtime (ProgramCache / ModelExecutable / Scheduler) lives in
+``repro.runtime``.
 """
 
 from repro.core.mapper import Gemm, MappingChoice, Plan, search  # noqa: F401

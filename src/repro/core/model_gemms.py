@@ -16,9 +16,10 @@ from repro.core.mapper import Gemm
 from repro.core.planner import GemmOp
 
 
-def _proj(name, m, k, n, count=1, chained=False, act="none"):
+def _proj(name, m, k, n, count=1, chained=False, act="none", dynamic=False):
     return GemmOp(gemm=Gemm(m=m, k=k, n=n, name=name, count=count),
-                  layer=name, chained=chained, activation=act)
+                  layer=name, chained=chained, activation=act,
+                  dynamic=dynamic)
 
 
 def _attn_gemms(cfg: ModelConfig, tokens: int, batch: int, s_q: int,
@@ -29,12 +30,13 @@ def _attn_gemms(cfg: ModelConfig, tokens: int, batch: int, s_q: int,
         _proj(f"{prefix}wq", tokens, d, h * hd, layers),
         _proj(f"{prefix}wk", tokens, d, kv * hd, layers),
         _proj(f"{prefix}wv", tokens, d, kv * hd, layers),
-        # scores: per (batch, head) GEMM  [s_q, hd] x [hd, s_kv]
+        # scores: per (batch, head) GEMM  [s_q, hd] x [hd, s_kv]; both
+        # operands arrive at runtime (FEATHER+'s dynamic-operand case)
         _proj(f"{prefix}qk", s_q, hd, s_kv, layers * batch * h,
-              chained=True, act="softmax"),
+              chained=True, act="softmax", dynamic=True),
         # values: [s_q, s_kv] x [s_kv, hd]
         _proj(f"{prefix}pv", s_q, s_kv, hd, layers * batch * h,
-              chained=True),
+              chained=True, dynamic=True),
         _proj(f"{prefix}wo", tokens, h * hd, d, layers, chained=True),
     ]
     return ops
@@ -52,8 +54,9 @@ def _mla_gemms(cfg: ModelConfig, tokens: int, batch: int, s_q: int,
         _proj("mla.wk_b", tokens, kvr, h * dn, layers, chained=True),
         _proj("mla.wv_b", tokens, kvr, h * dv, layers, chained=True),
         _proj("mla.qk", s_q, dn + dr, s_kv, layers * batch * h,
-              chained=True, act="softmax"),
-        _proj("mla.pv", s_q, s_kv, dv, layers * batch * h, chained=True),
+              chained=True, act="softmax", dynamic=True),
+        _proj("mla.pv", s_q, s_kv, dv, layers * batch * h, chained=True,
+              dynamic=True),
         _proj("mla.wo", tokens, h * dv, d, layers, chained=True),
     ]
 

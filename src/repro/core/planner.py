@@ -38,6 +38,9 @@ class GemmOp:
     layer: str = ""
     chained: bool = False   # consumes the previous op's output on-chip
     activation: str = "none"
+    dynamic: bool = False   # both operands arrive at runtime (attention
+                            # score/value GEMMs): the "weight" is request
+                            # state, not part of the cached weight set
 
 
 @dataclasses.dataclass
@@ -129,7 +132,16 @@ def cross_check(arch_plan: ArchPlan,
 
 
 def plan_model(arch: str, shape: str, ops: Sequence[GemmOp],
-               cfg: FeatherConfig) -> ArchPlan:
+               cfg: FeatherConfig, cache=None) -> ArchPlan:
+    """Plan a cell's GEMM stream.
+
+    Mapper searches are memoised through a
+    :class:`repro.runtime.cache.ProgramCache` (the process default unless
+    ``cache`` is given), so the planner, the benchmarks and the runtime
+    executables share one search/lowering memoisation; ``ArchPlan.plans``
+    remains this cell's view of the distinct shapes it used."""
+    from repro.runtime.cache import default_cache
+    cache = cache if cache is not None else default_cache()
     plans: dict[tuple, mapperlib.Plan] = {}
     elided_cache: dict[tuple, float] = {}
     out = ArchPlan(arch=arch, shape=shape, cfg=cfg, ops=list(ops),
@@ -138,7 +150,7 @@ def plan_model(arch: str, shape: str, ops: Sequence[GemmOp],
         g = op.gemm
         key = (g.m, g.k, g.n)
         if key not in plans:
-            plans[key] = mapperlib.search(g, cfg)
+            plans[key] = cache.plan(g, cfg)
         plan = plans[key]
         prog = plan.program
         count = g.count

@@ -645,7 +645,8 @@ def with_commit(program: Program, commit_to: str, commit_layout) -> Program:
                  elide_input=program.input_elided)
 
 
-def chain(programs: list[Program]) -> list[Program]:
+def chain(programs: list[Program], lower_fn: Callable = None
+          ) -> list[Program]:
     """Wire a layer chain: producer i commits on-chip and consumer i+1
     elides its input Load + SetIVNLayout, whenever the VN sizes match and
     the consumer's input is fully resident; incompatible neighbours fall
@@ -654,7 +655,13 @@ def chain(programs: list[Program]) -> list[Program]:
     Un-elided consumers have their input Loads retargeted to the producer's
     named output (the machine resolves tensor names against its committed
     outputs), so the fallback also executes correctly.  Input Programs are
-    never mutated; rewired layers are fresh objects."""
+    never mutated; rewired layers are fresh objects.
+
+    ``lower_fn`` (signature of :func:`lower`) lets callers inject a
+    memoising lowering -- the runtime's ProgramCache passes its own so a
+    rebuilt chain reuses Program objects (and their compiled artifacts)."""
+    if lower_fn is None:
+        lower_fn = lower
     out: list[Program] = []
     for i, prog in enumerate(programs):
         nxt = programs[i + 1] if i + 1 < len(programs) else None
@@ -680,11 +687,11 @@ def chain(programs: list[Program]) -> list[Program]:
         if elide or commit_to is not None:
             # single re-lower carrying both roles; retargeting (below) must
             # come last so a re-lower cannot undo it
-            cur = lower(prog.gemm, prog.choice, prog.cfg,
-                        activation=prog.activation,
-                        act_name=prog.act_name, out_name=prog.out_name,
-                        commit_to=commit_to, commit_layout=commit_lay,
-                        elide_input=elide)
+            cur = lower_fn(prog.gemm, prog.choice, prog.cfg,
+                           activation=prog.activation,
+                           act_name=prog.act_name, out_name=prog.out_name,
+                           commit_to=commit_to, commit_layout=commit_lay,
+                           elide_input=elide)
         if retarget is not None:
             cur = _retarget_input(cur, retarget)
         out.append(cur)

@@ -1,0 +1,30 @@
+"""MINISA model runtime: compiled-Program cache, whole-model executables
+and a batched serving scheduler.
+
+    configs -> model_gemms -> ProgramCache -> ModelExecutable
+                                                  -> Scheduler -> Backend
+
+  cache       ProgramCache -- one memoisation of mapper search ->
+              Program lowering -> backend compile, shared by the planner,
+              the benchmarks and the runtime (hit/miss/byte stats,
+              optional on-disk persistence)
+  executable  ModelExecutable -- an (arch x shape) cell's GEMM stream
+              lowered once into chained Programs and executed end-to-end
+              on any Backend against an einsum oracle of the same stream
+  scheduler   Scheduler -- continuous-batching serving loop over
+              prefill/decode executables with per-request MINISA vs
+              micro-instruction traffic and stall reporting
+"""
+
+from repro.runtime.cache import (CacheStats, ProgramCache,  # noqa: F401
+                                 default_cache, reset_default_cache)
+from repro.runtime.executable import (ACTIVATIONS, ModelExecutable,  # noqa: F401
+                                      RunResult, Step, TINY_SHAPES, adapt)
+from repro.runtime.scheduler import (Request, RequestReport,  # noqa: F401
+                                     Scheduler, SchedulerReport)
+
+__all__ = [
+    "CacheStats", "ProgramCache", "default_cache", "reset_default_cache",
+    "ACTIVATIONS", "ModelExecutable", "RunResult", "Step", "TINY_SHAPES",
+    "adapt", "Request", "RequestReport", "Scheduler", "SchedulerReport",
+]

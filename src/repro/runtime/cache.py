@@ -1,0 +1,294 @@
+"""ProgramCache: one memoisation for the whole compile pipeline.
+
+The expensive path from a GEMM shape to something executable is
+
+    mapper.search (candidate enumeration + shortlist lowering + layout)
+      -> program.lower (the winning Program, possibly re-lowered for
+         activation / chaining variants)
+        -> backend compile (CompiledProgram launch geometry for Pallas)
+
+Before this module every consumer memoised its own slice of that pipeline
+(the planner's per-``plan_model`` ``plans`` dict, ``benchmarks.common``'s
+``lru_cache`` sweep, the PallasBackend's per-instance ``id()`` cache).  The
+:class:`ProgramCache` replaces those with one three-tier cache:
+
+  plans      (m, k, n, FeatherConfig, search kwargs)      -> mapper.Plan
+  lowered    (shape, MappingChoice, cfg, lowering kwargs) -> Program
+  compiled   (structural program key, max_block)          -> CompiledProgram
+
+Keys are *structural*: two equal-by-value ``Gemm``/``FeatherConfig``
+instances hit the same entry regardless of object identity, and the
+compiled tier keys on what ``compile_program`` actually reads (shape,
+choice, cfg, activation, operand tensor names, commit flag) so a rebuilt
+chain of fresh Program objects still reuses its artifacts.  Hit/miss/byte
+stats are tracked per tier, and the plan tier optionally persists to disk
+(``save``/``load``) so a warmed cache survives process restarts.
+
+``core/planner.plan_model``, ``benchmarks/common.sweep_plans``, the
+runtime's :class:`~repro.runtime.executable.ModelExecutable` and the
+``PallasBackend`` (via its ``compile_cache`` hook) all share the process
+default returned by :func:`default_cache`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+from typing import TYPE_CHECKING, Any, Callable
+
+from repro.core import mapper as mapperlib
+from repro.core import program as programlib
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.backends.pallas_backend import CompiledProgram
+    from repro.configs.feather import FeatherConfig
+    from repro.core.mapper import Gemm, Plan
+    from repro.core.program import Program
+
+_PERSIST_VERSION = 1
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Per-tier hit/miss accounting (misses == real pipeline work done)."""
+    plan_hits: int = 0
+    plan_misses: int = 0          # == mapper searches performed
+    lowered_hits: int = 0
+    lowered_misses: int = 0       # == program.lower calls performed
+    compile_hits: int = 0
+    compile_misses: int = 0       # == backend compile_program calls
+    evictions: int = 0
+    loaded_from_disk: int = 0
+
+    @property
+    def searches(self) -> int:
+        return self.plan_misses
+
+    @property
+    def compiles(self) -> int:
+        return self.compile_misses
+
+    @property
+    def hits(self) -> int:
+        return self.plan_hits + self.lowered_hits + self.compile_hits
+
+    @property
+    def misses(self) -> int:
+        return self.plan_misses + self.lowered_misses + self.compile_misses
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def snapshot(self) -> "CacheStats":
+        return dataclasses.replace(self)
+
+    def delta(self, since: "CacheStats") -> dict[str, int]:
+        return {f.name: getattr(self, f.name) - getattr(since, f.name)
+                for f in dataclasses.fields(self)}
+
+    def summary(self) -> dict:
+        return {
+            "hits": self.hits, "misses": self.misses,
+            "hit_rate": self.hit_rate,
+            "searches": self.searches, "lowerings": self.lowered_misses,
+            "compiles": self.compiles, "evictions": self.evictions,
+            "loaded_from_disk": self.loaded_from_disk,
+        }
+
+
+def _act_token(activation: Callable | None, act_name: str) -> Any:
+    """Hashable identity of an activation binding.
+
+    Registry activations (``runtime.executable.ACTIVATIONS``) are
+    module-level callables, so ``id`` is stable for the process lifetime;
+    keying on the id (not just the name) keeps two same-named programs
+    bound to *different* callables from colliding."""
+    if activation is None:
+        return None
+    return (act_name, id(activation))
+
+
+def compiled_key(program: "Program", max_block: int) -> tuple:
+    """Structural key covering everything ``compile_program`` reads."""
+    from repro.backends.pallas_backend import _load_names
+    g = program.gemm
+    input_name, weight_name = _load_names(program)
+    commit = any(op.meta.get("commit_to") is not None
+                 for tile in program.tiles for op in tile.drains)
+    return (g.m, g.k, g.n, program.choice, program.cfg, program.out_name,
+            _act_token(program.activation, program.act_name),
+            input_name, weight_name, commit, program.input_elided,
+            max_block)
+
+
+class ProgramCache:
+    """Memoises mapper search -> Program lowering -> backend compile.
+
+    ``path`` enables on-disk persistence of the plan tier: an existing
+    file is loaded at construction and :meth:`save` writes the current
+    plans back (lowered/compiled tiers hold callables and are rebuilt,
+    cheaply, from the cached plans).  ``max_plans`` bounds the plan tier
+    with insertion-order eviction -- the variant and artifact tiers get
+    proportional bounds -- so a long-lived process cannot grow
+    unboundedly.
+    """
+
+    def __init__(self, path: str | os.PathLike | None = None,
+                 max_plans: int = 128):
+        self._plans: dict[tuple, "Plan"] = {}
+        self._lowered: dict[tuple, "Program"] = {}
+        self._compiled: dict[tuple, "CompiledProgram"] = {}
+        self.stats = CacheStats()
+        self.max_plans = max_plans
+        # variant/artifact tiers are bounded too (several lowering
+        # variants and compiled artifacts may hang off one plan)
+        self.max_lowered = 8 * max_plans
+        self.max_compiled = 16 * max_plans
+        self.path = os.fspath(path) if path is not None else None
+        if self.path and os.path.exists(self.path):
+            self.load(self.path)
+
+    def _evict_over(self, table: dict, bound: int) -> None:
+        while len(table) >= bound:
+            table.pop(next(iter(table)))
+            self.stats.evictions += 1
+
+    # -- tier 1: mapper search ------------------------------------------------
+    @staticmethod
+    def plan_key(gemm: "Gemm", cfg: "FeatherConfig",
+                 **search_kwargs) -> tuple:
+        """Shape + config + search-mode key.  ``name``/``count`` are
+        display/aggregation metadata and deliberately excluded: equal
+        shapes share one mapping-search problem."""
+        return (gemm.m, gemm.k, gemm.n, cfg,
+                tuple(sorted(search_kwargs.items())))
+
+    def plan(self, gemm: "Gemm", cfg: "FeatherConfig",
+             **search_kwargs) -> "Plan":
+        key = self.plan_key(gemm, cfg, **search_kwargs)
+        hit = self._plans.get(key)
+        if hit is not None:
+            self.stats.plan_hits += 1
+            # LRU touch
+            self._plans[key] = self._plans.pop(key)
+            return hit
+        self.stats.plan_misses += 1
+        plan = mapperlib.search(gemm, cfg, **search_kwargs)
+        self._evict_over(self._plans, self.max_plans)
+        self._plans[key] = plan
+        return plan
+
+    # -- tier 2: lowering variants (activation / chaining rewires) ------------
+    def lower(self, gemm, choice, cfg: "FeatherConfig", *,
+              activation: Callable | None = None, act_name: str = "none",
+              out_name: str = "O", commit_to: str | None = None,
+              commit_layout=None, elide_input: bool = False) -> "Program":
+        """Memoising drop-in for ``program.lower`` (``chain``'s
+        ``lower_fn``): a rebuilt executable reuses Program objects, which
+        in turn keeps the compiled tier and the backends' ``id`` caches
+        warm."""
+        key = (gemm.m, gemm.k, gemm.n, choice, cfg,
+               _act_token(activation, act_name), act_name, out_name,
+               commit_to, commit_layout, elide_input)
+        hit = self._lowered.get(key)
+        if hit is not None:
+            self.stats.lowered_hits += 1
+            return hit
+        self.stats.lowered_misses += 1
+        prog = programlib.lower(gemm, choice, cfg, activation=activation,
+                                act_name=act_name, out_name=out_name,
+                                commit_to=commit_to,
+                                commit_layout=commit_layout,
+                                elide_input=elide_input)
+        self._evict_over(self._lowered, self.max_lowered)
+        self._lowered[key] = prog
+        return prog
+
+    # -- tier 3: backend compile artifacts (PallasBackend hook) ---------------
+    def lookup_compiled(self, program: "Program",
+                        max_block: int) -> "CompiledProgram | None":
+        comp = self._compiled.get(compiled_key(program, max_block))
+        if comp is not None:
+            self.stats.compile_hits += 1
+        return comp
+
+    def store_compiled(self, program: "Program", max_block: int,
+                       comp: "CompiledProgram") -> None:
+        self.stats.compile_misses += 1
+        self._evict_over(self._compiled, self.max_compiled)
+        self._compiled[compiled_key(program, max_block)] = comp
+
+    # -- stats / persistence --------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._plans) + len(self._lowered) + len(self._compiled)
+
+    def size_bytes(self) -> int:
+        """Pickled payload size of the plan tier (computed on demand --
+        the byte figure for the ``bytes`` stat, not a live counter)."""
+        total = 0
+        for plan in self._plans.values():
+            try:
+                total += len(pickle.dumps(plan,
+                                          protocol=pickle.HIGHEST_PROTOCOL))
+            except Exception:  # pragma: no cover - unpicklable plan
+                total += int(plan.program.minisa_bytes())
+        return total
+
+    def summary(self) -> dict:
+        return {
+            "entries": {"plans": len(self._plans),
+                        "lowered": len(self._lowered),
+                        "compiled": len(self._compiled)},
+            "bytes": self.size_bytes(),
+            **self.stats.summary(),
+        }
+
+    def save(self, path: str | os.PathLike | None = None) -> str:
+        """Persist the plan tier (search results never hold callables, so
+        they pickle cleanly; variant/compiled tiers are re-derived)."""
+        path = os.fspath(path or self.path)
+        if not path:
+            raise ValueError("no persistence path configured")
+        payload = {"version": _PERSIST_VERSION, "plans": self._plans}
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+        os.replace(tmp, path)
+        return path
+
+    def load(self, path: str | os.PathLike) -> int:
+        with open(os.fspath(path), "rb") as f:
+            payload = pickle.load(f)
+        if payload.get("version") != _PERSIST_VERSION:
+            raise ValueError(
+                f"cache file version {payload.get('version')!r} != "
+                f"{_PERSIST_VERSION}")
+        plans = payload["plans"]
+        loaded = 0
+        for key, plan in plans.items():
+            if key not in self._plans:
+                self._evict_over(self._plans, self.max_plans)
+                loaded += 1
+            self._plans[key] = plan
+        self.stats.loaded_from_disk += loaded
+        return loaded
+
+
+_DEFAULT: ProgramCache | None = None
+
+
+def default_cache() -> ProgramCache:
+    """Process-wide shared cache (planner, benchmarks and runtime all
+    memoise through this unless handed an explicit instance)."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = ProgramCache()
+    return _DEFAULT
+
+
+def reset_default_cache() -> None:
+    global _DEFAULT
+    _DEFAULT = None

@@ -1,0 +1,394 @@
+"""ModelExecutable: a whole model's GEMM stream, lowered once, runnable.
+
+``core/planner.py`` *plans* an (architecture x shape) cell analytically;
+this module makes the same cell *run*: the cell's ``GemmOp`` stream
+(``core/model_gemms.gemm_workloads``) is lowered once -- through the shared
+:class:`~repro.runtime.cache.ProgramCache` -- into a chained sequence of
+Programs, and executed end-to-end with real numerics on any ``Backend``,
+cross-checked step by step against an einsum oracle of the identical
+stream.
+
+Stream semantics
+----------------
+Each ``GemmOp`` becomes one :class:`Step` (repeated layers execute one
+representative instance; ``reps`` carries the multiplicity into the
+traffic accounting, exactly like the planner's analytic aggregates).  A
+step's input operand comes from one of three sources:
+
+  wired   the op is ``chained`` and the producer's output shape equals
+          the consumer's input shape: the pair joins one
+          ``program.chain`` segment (paper §IV-G on-chip commit + input
+          elision / named-output retarget) -- no host round trip.
+  adapt   the op is ``chained`` but the shapes differ (the model's
+          head-split/reshape between projections and attention): the
+          producer's *numbers* still feed the consumer, through the
+          deterministic host glue :func:`adapt` that the oracle replays.
+  fresh   not chained: a seeded host tensor.
+
+Weight operands are host tensors per step -- except ops flagged
+``dynamic`` (the attention score/value GEMMs, FEATHER+'s headline
+runtime-layout case), whose "weights" (K^T / V) are runtime tensors
+supplied per request by the serving scheduler, not part of the cached
+weight set.
+
+Activations run inside the Program (Activation drain, fused by the
+Pallas backend where elementwise) whenever that is semantics-preserving:
+elementwise always; row-wise (softmax/norms) only under WO-S with full
+output rows per tile.  Anything else is applied host-side between
+Programs, which also breaks the chain there (the oracle mirrors both
+paths).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.core import isa, perf
+from repro.core import program as programlib
+from repro.core.planner import GemmOp
+from repro.runtime.cache import ProgramCache, default_cache
+
+
+# ---------------------------------------------------------------------------
+# Activation registry (numeric twins of the ISA's Activation functions)
+# ---------------------------------------------------------------------------
+
+def _jnp_act(fn):
+    return lambda x: np.asarray(fn(jnp.asarray(x, jnp.float32)))
+
+
+def _softmax(x):
+    x = np.asarray(x, np.float32)
+    z = x - x.max(axis=-1, keepdims=True)
+    e = np.exp(z)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def _rmsnorm(x):
+    x = np.asarray(x, np.float32)
+    return x / np.sqrt((x * x).mean(axis=-1, keepdims=True) + 1e-6)
+
+
+def _layernorm(x):
+    x = np.asarray(x, np.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mu) / np.sqrt(var + 1e-6)
+
+
+#: act_name -> callable.  The elementwise entries match the Pallas
+#: backend's fused ``kernels.nest_gemm.ACT_FNS`` numerics; the gated
+#: activations (swiglu/geglu) are approximated by their ungated halves --
+#: the GEMM stream carries no gate operand (DESIGN.md arch-applicability).
+ACTIVATIONS: dict[str, Callable | None] = {
+    "none": None,
+    "relu": _jnp_act(lambda x: jnp.maximum(x, 0.0)),
+    "gelu": _jnp_act(jax.nn.gelu),
+    "silu": _jnp_act(jax.nn.silu),
+    "swiglu": _jnp_act(jax.nn.silu),
+    "geglu": _jnp_act(jax.nn.gelu),
+    "softmax": _softmax,
+    "rmsnorm": _rmsnorm,
+    "layernorm": _layernorm,
+}
+
+
+def adapt(x: np.ndarray, m: int, k: int) -> np.ndarray:
+    """Deterministic host glue between shape-incompatible chained layers
+    (the reshape/head-split the GEMM-stream abstraction elides): flatten,
+    cycle-extend, reshape to the consumer's [m, k]."""
+    flat = np.asarray(x, np.float32).ravel()
+    need = m * k
+    if flat.size == 0:
+        return np.zeros((m, k), np.float32)
+    if flat.size < need:
+        flat = np.tile(flat, -(-need // flat.size))
+    return np.ascontiguousarray(flat[:need].reshape(m, k))
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Step:
+    """One executable GEMM of the stream (one representative instance)."""
+    index: int
+    op: GemmOp
+    program: programlib.Program     # executed (possibly chain-rewired)
+    input_mode: str                 # 'wired' | 'adapt' | 'fresh'
+    host_act: Callable | None       # applied host-side after the Program
+    reps: int                       # multiplicity for traffic accounting
+
+    @property
+    def weight_name(self) -> str:
+        return f"W{self.index}"
+
+    @property
+    def input_name(self) -> str:
+        return f"I{self.index}"
+
+
+@dataclasses.dataclass
+class RunResult:
+    outputs: list[np.ndarray]       # per-step outputs (post host_act)
+    final: np.ndarray
+    checked: bool = False
+
+
+#: Reduced shapes sized for functional end-to-end execution (the SHAPES
+#: cells target analytic planning; running decode_32k numerically is not
+#: the point of a CPU correctness spine).
+TINY_SHAPES = {
+    "prefill_tiny": ShapeConfig("prefill_tiny", seq_len=16, global_batch=2,
+                                kind="prefill"),
+    "decode_tiny": ShapeConfig("decode_tiny", seq_len=16, global_batch=1,
+                               kind="decode"),
+}
+
+
+class ModelExecutable:
+    """A cell's GEMM stream compiled (through the shared cache) into
+    chained Programs, executable on any backend against the oracle."""
+
+    def __init__(self, ops: list[GemmOp], cfg, *,
+                 cache: ProgramCache | None = None, name: str = "model"):
+        self.cfg = cfg
+        self.cache = cache if cache is not None else default_cache()
+        self.name = name
+        self.ops = list(ops)
+        self.tokens: int | None = None   # set by for_cell
+        self.steps = self._build()
+        self._perf_cache: dict[int, tuple] = {}
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def for_cell(cls, arch: str, shape: str | ShapeConfig, cfg, *,
+                 cache: ProgramCache | None = None,
+                 reduce_model: bool = True, layers: int = 2,
+                 d_model: int = 64, vocab: int = 256) -> "ModelExecutable":
+        """Build the executable for an (architecture x shape) cell.
+
+        ``reduce_model`` shrinks the architecture family-preservingly
+        (``configs.base.reduced``) so the stream executes functionally on
+        CPU; ``shape`` accepts the planning SHAPES, the TINY_SHAPES
+        serving cells, or an explicit ShapeConfig."""
+        from repro.configs.base import reduced
+        from repro.configs.registry import get_config
+        from repro.core.model_gemms import gemm_workloads
+
+        mcfg = get_config(arch)
+        if reduce_model:
+            mcfg = reduced(mcfg, layers=layers, d_model=d_model, vocab=vocab)
+        if isinstance(shape, ShapeConfig):
+            scfg = shape
+        else:
+            scfg = {**SHAPES, **TINY_SHAPES}[shape]
+        ex = cls(gemm_workloads(mcfg, scfg), cfg, cache=cache,
+                 name=f"{arch}/{scfg.name}")
+        ex.tokens = (scfg.global_batch if scfg.kind == "decode"
+                     else scfg.tokens)
+        return ex
+
+    def _build(self) -> list[Step]:
+        cache = self.cache
+        base: list[tuple[GemmOp, Any, programlib.Program,
+                         Callable | None]] = []
+        for i, op in enumerate(self.ops):
+            plan = cache.plan(op.gemm, self.cfg)
+            act_name = op.activation or "none"
+            fn = ACTIVATIONS.get(act_name)
+            in_program = fn is not None and (
+                act_name not in programlib.ROW_WISE_ACTIVATIONS
+                or (plan.choice.df == isa.Dataflow.WOS
+                    and plan.program.n_n == 1))
+            prog = cache.lower(
+                plan.gemm, plan.choice, self.cfg,
+                activation=fn if in_program else None,
+                act_name=act_name if in_program else "none",
+                out_name=f"O{i}")
+            base.append((op, plan, prog,
+                         None if in_program else fn))
+
+        steps: list[Step] = []
+        segment: list[tuple] = []
+        modes: list[str] = []
+
+        def flush():
+            if not segment:
+                return
+            progs = [e[2] for e in segment]
+            if len(progs) > 1:
+                progs = programlib.chain(progs, lower_fn=cache.lower)
+            for (op, _, _, host_act), prog, mode in zip(segment, progs,
+                                                        modes):
+                steps.append(Step(index=len(steps), op=op, program=prog,
+                                  input_mode=mode, host_act=host_act,
+                                  reps=max(1, op.gemm.count)))
+            segment.clear()
+            modes.clear()
+
+        prev: tuple[GemmOp, Callable | None] | None = None
+        for entry in base:
+            op, _, _, host_act = entry
+            g = op.gemm
+            wired = (prev is not None and op.chained
+                     and prev[1] is None       # host act breaks the chain
+                     and (prev[0].gemm.m, prev[0].gemm.n) == (g.m, g.k))
+            if not wired:
+                flush()
+            segment.append(entry)
+            modes.append("wired" if wired
+                         else "adapt" if (op.chained and prev is not None)
+                         else "fresh")
+            prev = (op, host_act)
+        flush()
+        return steps
+
+    # -- tensor environment ---------------------------------------------------
+    def tensor_specs(self) -> dict[str, tuple[tuple[int, int], str]]:
+        """name -> (shape, kind); kind in {'weight', 'dynamic', 'input'}.
+        ``dynamic`` marks runtime-supplied operands (attention K^T / V)."""
+        specs: dict[str, tuple[tuple[int, int], str]] = {}
+        for s in self.steps:
+            g = s.op.gemm
+            specs[s.weight_name] = ((g.k, g.n),
+                                    "dynamic" if s.op.dynamic else "weight")
+            if s.input_mode == "fresh":
+                specs[s.input_name] = ((g.m, g.k), "input")
+        return specs
+
+    def make_tensors(self, seed: int = 0,
+                     kinds: tuple[str, ...] = ("weight", "dynamic", "input")
+                     ) -> dict[str, np.ndarray]:
+        """Seeded host tensors; weights scaled 1/sqrt(k) so chained layer
+        magnitudes stay O(1) across the stream."""
+        rng = np.random.default_rng(seed)
+        out: dict[str, np.ndarray] = {}
+        for name, (shape, kind) in self.tensor_specs().items():
+            arr = rng.standard_normal(shape).astype(np.float32)
+            if kind != "input":
+                arr /= np.sqrt(shape[0])
+            if kind in kinds:
+                out[name] = arr
+        return out
+
+    def inputs_from(self, x: np.ndarray) -> dict[str, np.ndarray]:
+        """Fresh-input tensors derived from a carrier array (the serving
+        scheduler feeds each decode step from the previous step's
+        output)."""
+        return {s.input_name: adapt(x, s.op.gemm.m, s.op.gemm.k)
+                for s in self.steps if s.input_mode == "fresh"}
+
+    # -- execution ------------------------------------------------------------
+    def make_backend(self, backend):
+        from repro import backends as backendlib
+        kwargs = {}
+        if backend == "pallas":
+            kwargs["compile_cache"] = self.cache
+        return backendlib.get_backend(backend, self.cfg, **kwargs)
+
+    def run(self, backend="interpreter", *,
+            tensors: dict[str, np.ndarray] | None = None, seed: int = 0,
+            check: bool = False, rtol: float = 2e-3,
+            atol: float = 2e-3) -> RunResult:
+        """Execute the stream end-to-end.
+
+        ``backend`` is a registry name or a live ``Backend`` instance (the
+        scheduler reuses one across requests).  ``tensors`` supplies any
+        subset of :meth:`tensor_specs`; missing entries are seeded.
+        ``check=True`` asserts every step against the einsum-oracle replay
+        of the identical stream."""
+        be = backend if not isinstance(backend, str) \
+            else self.make_backend(backend)
+        env = dict(tensors) if tensors else {}
+        for name, arr in self.make_tensors(seed).items():
+            env.setdefault(name, arr)
+
+        prev: np.ndarray | None = None
+        ref_prev: np.ndarray | None = None
+        outputs: list[np.ndarray] = []
+        for s in self.steps:
+            g = s.op.gemm
+            w = env[s.weight_name]
+            t: dict[str, np.ndarray] = {"W": w}
+            if s.input_mode == "fresh":
+                t["I"] = env[s.input_name]
+            elif s.input_mode == "adapt":
+                t["I"] = adapt(prev, g.m, g.k)
+            out = np.asarray(
+                be.run_program(s.program, t)[s.program.out_name])
+            if s.host_act is not None:
+                out = np.asarray(s.host_act(out))
+            if check:
+                if s.input_mode == "fresh":
+                    ref_x = env[s.input_name]
+                elif s.input_mode == "adapt":
+                    ref_x = adapt(ref_prev, g.m, g.k)
+                else:
+                    ref_x = ref_prev
+                ref = ref_x.astype(np.float32) @ w
+                if s.program.activation is not None:
+                    ref = np.asarray(s.program.activation(ref))
+                if s.host_act is not None:
+                    ref = np.asarray(s.host_act(ref))
+                np.testing.assert_allclose(
+                    out, ref, rtol=rtol, atol=atol + rtol * g.k,
+                    err_msg=(f"step {s.index} ({g.name or g}) diverged "
+                             f"from the stream oracle"))
+                ref_prev = ref
+            outputs.append(out)
+            prev = out
+        return RunResult(outputs=outputs, final=prev, checked=check)
+
+    # -- accounting (the same tile streams perf.simulate consumes) ------------
+    def perf_stats(self) -> dict[str, float]:
+        """Aggregate MINISA vs micro traffic + stall fractions over the
+        stream, ``reps``-weighted; simulated once per unique Program."""
+        tot = {"minisa_bytes": 0.0, "micro_bytes": 0.0,
+               "cycles_minisa": 0.0, "cycles_micro": 0.0,
+               "stall_cycles_minisa": 0.0, "stall_cycles_micro": 0.0,
+               "macs": 0.0, "n_gemms": 0.0}
+        for s in self.steps:
+            key = id(s.program)
+            if key not in self._perf_cache:
+                pm = perf.simulate(s.program.tile_costs("minisa"), self.cfg)
+                pu = perf.simulate(s.program.tile_costs("micro"), self.cfg)
+                self._perf_cache[key] = (
+                    pm, pu, s.program.minisa_bytes(),
+                    s.program.micro_storage_bytes())
+            pm, pu, mb, ub = self._perf_cache[key]
+            r = s.reps
+            tot["minisa_bytes"] += mb * r
+            tot["micro_bytes"] += ub * r
+            tot["cycles_minisa"] += pm.cycles * r
+            tot["cycles_micro"] += pu.cycles * r
+            tot["stall_cycles_minisa"] += pm.stall_ifetch_frac * pm.cycles * r
+            tot["stall_cycles_micro"] += pu.stall_ifetch_frac * pu.cycles * r
+            tot["macs"] += s.op.gemm.macs * r
+            tot["n_gemms"] += r
+        tot["stall_minisa"] = (tot["stall_cycles_minisa"]
+                               / max(tot["cycles_minisa"], 1e-9))
+        tot["stall_micro"] = (tot["stall_cycles_micro"]
+                              / max(tot["cycles_micro"], 1e-9))
+        tot["instr_reduction"] = (tot["micro_bytes"]
+                                  / max(tot["minisa_bytes"], 1e-9))
+        return tot
+
+    def describe(self) -> dict:
+        return {
+            "name": self.name,
+            "n_steps": len(self.steps),
+            "n_gemms": int(sum(s.reps for s in self.steps)),
+            "n_dynamic": sum(1 for s in self.steps if s.op.dynamic),
+            "n_wired": sum(1 for s in self.steps
+                           if s.input_mode == "wired"),
+            "n_elided": sum(1 for s in self.steps
+                            if s.program.input_elided),
+        }

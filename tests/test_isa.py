@@ -1,12 +1,14 @@
 """ISA encoding, bitwidths (Tab. V) and layout addressing properties."""
 
 import math
+import random
 
 import numpy as np
 import pytest
 
 from repro.configs.feather import SWEEP, feather_config
 from repro.core import isa, layout as layoutlib
+from tests._hypothesis_compat import given, settings, st
 
 
 def test_opcodes_are_3bit_unique():
@@ -57,6 +59,44 @@ def test_instruction_encode_roundtrip_widths():
         # re-derived by hand
         assert type(inst).decode(word, cfg) == inst
         assert isa.decode(word, inst.bitwidth(cfg), cfg) == inst
+
+
+def _random_instruction(cls, cfg, rng: random.Random) -> isa.Instruction:
+    """Draw every field uniformly over its *encodable* range, derived from
+    the class's own spec: raw in [0, 2^width), value = raw + bias."""
+    kwargs = {}
+    for name, width, bias in cls.spec(cfg):
+        if name == "opcode":
+            continue
+        raw = rng.randrange(1 << width) if width else 0
+        value = raw + bias
+        kwargs[name] = isa._FIELD_CASTS.get(name, int)(value)
+    return cls(**kwargs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       sweep_idx=st.integers(min_value=0, max_value=len(SWEEP) - 1))
+def test_decode_inverts_encode_randomized(seed, sweep_idx):
+    """Property: for every instruction class and every sweep config,
+    decode(encode(inst)) == inst over randomized in-range fields -- both
+    via the class decoder and the opcode-dispatching ``isa.decode``."""
+    cfg = feather_config(*SWEEP[sweep_idx])
+    rng = random.Random(seed)
+    for cls in isa.OPCODE_TO_CLASS.values():
+        inst = _random_instruction(cls, cfg, rng)
+        nbits = inst.bitwidth(cfg)
+        word = inst.encode(cfg)
+        assert 0 <= word < (1 << nbits)
+        assert cls.decode(word, cfg) == inst
+        assert isa.decode(word, nbits, cfg) == inst
+
+
+def test_decode_rejects_wrong_opcode():
+    cfg = feather_config(4, 4)
+    word = isa.Load(hbm_addr=1, length=2).encode(cfg)
+    with pytest.raises(ValueError, match="opcode mismatch"):
+        isa.Write.decode(word, cfg)
 
 
 def test_load_write_share_encoding():

@@ -1,0 +1,182 @@
+"""Runtime equivalence: ModelExecutable end-to-end == einsum oracle of
+the same GEMM stream on both backends (including the dynamic-operand
+attention GEMMs), compile-once semantics, and the continuous-batching
+scheduler."""
+
+import numpy as np
+import pytest
+
+from repro.configs.feather import feather_config
+from repro.runtime import (ModelExecutable, ProgramCache, Scheduler,
+                           TINY_SHAPES)
+
+CFG = feather_config(4, 16)
+
+#: Two (arch x shape) serving cells: GQA dense decode + MoE prefill.
+CELLS = [("gemma-7b", "decode_tiny"), ("granite-moe-3b-a800m",
+                                       "prefill_tiny")]
+
+
+@pytest.fixture(scope="module")
+def cache():
+    return ProgramCache()
+
+
+@pytest.fixture(scope="module")
+def executables(cache):
+    return {cell: ModelExecutable.for_cell(cell[0], cell[1], CFG,
+                                           cache=cache)
+            for cell in CELLS}
+
+
+@pytest.mark.parametrize("cell", CELLS, ids=lambda c: f"{c[0]}-{c[1]}")
+@pytest.mark.parametrize("backend", ["interpreter", "pallas"])
+def test_executable_matches_stream_oracle(executables, cell, backend):
+    """Acceptance: whole-cell execution equals the oracle replay of the
+    identical stream, per step, on both backends."""
+    ex = executables[cell]
+    res = ex.run(backend, check=True)
+    assert res.checked and res.final is not None
+    assert len(res.outputs) == len(ex.steps)
+
+
+@pytest.mark.parametrize("cell", CELLS, ids=lambda c: f"{c[0]}-{c[1]}")
+def test_stream_contains_dynamic_attention(executables, cell):
+    """FEATHER+'s headline case is actually executed: the score/value
+    GEMMs are in the stream, flagged dynamic, and the score GEMM chains
+    into the value GEMM."""
+    ex = executables[cell]
+    dyn = [s for s in ex.steps if s.op.dynamic]
+    assert len(dyn) == 2
+    qk, pv = dyn
+    assert "qk" in qk.op.gemm.name and "pv" in pv.op.gemm.name
+    assert pv.input_mode == "wired"   # scores feed values on-chip
+
+
+def test_second_execution_zero_searches_zero_compiles(cache, executables):
+    """Acceptance: re-building and re-running an already-served cell does
+    no mapper searches and no backend compiles (cache stats prove it)."""
+    arch, shape = CELLS[0]
+    ex1 = executables[CELLS[0]]
+    be = ex1.make_backend("pallas")
+    ex1.run(be)               # warm the compiled tier
+    snap = cache.stats.snapshot()
+    ex2 = ModelExecutable.for_cell(arch, shape, CFG, cache=cache)
+    ex2.run(ex2.make_backend("pallas"))
+    ex2.run("interpreter")
+    delta = cache.stats.delta(snap)
+    assert delta["plan_misses"] == 0, delta
+    assert delta["lowered_misses"] == 0, delta
+    assert delta["compile_misses"] == 0, delta
+    assert delta["plan_hits"] > 0 and delta["compile_hits"] > 0
+
+
+def test_interpreter_and_pallas_agree(executables):
+    """Same tensors through both backends: outputs agree step by step."""
+    ex = executables[CELLS[0]]
+    env = ex.make_tensors(seed=3)
+    a = ex.run("interpreter", tensors=env)
+    b = ex.run("pallas", tensors=env)
+    for i, (x, y) in enumerate(zip(a.outputs, b.outputs)):
+        np.testing.assert_allclose(x, y, rtol=2e-4,
+                                   atol=2e-4 + 2e-4 * ex.steps[i].op.gemm.k,
+                                   err_msg=f"step {i}")
+
+
+def test_perf_stats_reps_weighted(executables):
+    """Traffic accounting multiplies by layer/head multiplicity and the
+    MINISA:micro ratio is the paper's direction (large reduction)."""
+    ex = executables[CELLS[0]]
+    stats = ex.perf_stats()
+    assert stats["n_gemms"] == sum(s.reps for s in ex.steps) > len(ex.steps)
+    assert stats["minisa_bytes"] > 0
+    assert stats["instr_reduction"] > 10
+    assert 0.0 <= stats["stall_minisa"] <= 1.0
+    assert 0.0 <= stats["stall_micro"] <= 1.0
+
+
+def test_tensor_specs_mark_dynamic_weights(executables):
+    ex = executables[CELLS[0]]
+    kinds = {k for _, k in ex.tensor_specs().values()}
+    assert kinds == {"weight", "dynamic", "input"}
+    dyn = [n for n, (_, k) in ex.tensor_specs().items() if k == "dynamic"]
+    assert len(dyn) == 2
+    # dynamic tensors are excluded from the static weight set
+    weights = ex.make_tensors(kinds=("weight",))
+    assert not any(n in weights for n in dyn)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sched_report(cache):
+    prefill = ModelExecutable.for_cell("gemma-7b", "prefill_tiny", CFG,
+                                       cache=cache)
+    decode = ModelExecutable.for_cell("gemma-7b", "decode_tiny", CFG,
+                                      cache=cache)
+    sched = Scheduler(prefill, decode, backend="interpreter",
+                      max_concurrent=2)
+    for _ in range(3):
+        sched.submit(decode_steps=2)
+    return sched.run()
+
+
+def test_scheduler_completes_all_requests(sched_report):
+    rep = sched_report
+    assert len(rep.requests) == 3
+    assert all(r.decode_tokens == 2 for r in rep.requests)
+    prefill_tokens = TINY_SHAPES["prefill_tiny"].tokens
+    assert all(r.prefill_tokens == prefill_tokens for r in rep.requests)
+    assert rep.total_tokens == 3 * (prefill_tokens + 2)
+    assert rep.tokens_per_sec > 0
+    # continuous batching: 3 requests through 2 slots needs > 2 ticks
+    assert rep.ticks >= 2
+
+
+def test_scheduler_per_request_traffic(sched_report):
+    for r in sched_report.requests:
+        assert r.minisa_bytes > 0
+        assert r.instr_reduction > 10          # MINISA vs micro traffic
+        assert 0.0 <= r.stall_minisa <= 1.0
+        assert 0.0 <= r.stall_micro <= 1.0
+        assert r.wall_s > 0
+
+
+def test_scheduler_shares_weight_residency(cache):
+    """All requests are served from one static weight set and one cached
+    Program set: serving N requests does zero extra searches/compiles."""
+    prefill = ModelExecutable.for_cell("gemma-7b", "prefill_tiny", CFG,
+                                       cache=cache)
+    decode = ModelExecutable.for_cell("gemma-7b", "decode_tiny", CFG,
+                                      cache=cache)
+    sched = Scheduler(prefill, decode, backend="interpreter")
+    snap = cache.stats.snapshot()
+    sched.submit(decode_steps=1)
+    sched.submit(decode_steps=1)
+    sched.run()
+    delta = cache.stats.delta(snap)
+    assert delta["plan_misses"] == 0 and delta["compile_misses"] == 0
+
+
+def test_scheduler_decode_is_a_recurrence(cache):
+    """Decode steps feed on their own outputs and per-request KV state:
+    two requests with different seeds produce different final tokensets,
+    the same seed reproduces exactly."""
+    prefill = ModelExecutable.for_cell("gemma-7b", "prefill_tiny", CFG,
+                                       cache=cache)
+    decode = ModelExecutable.for_cell("gemma-7b", "decode_tiny", CFG,
+                                      cache=cache)
+
+    def final_for(seed):
+        sched = Scheduler(prefill, decode, backend="interpreter")
+        sched.submit(decode_steps=2, seed=seed)
+        a = sched._admit(sched._pending.popleft())
+        sched._decode_step(a)
+        sched._decode_step(a)
+        return a.carry
+
+    f0, f0b, f1 = final_for(0), final_for(0), final_for(1)
+    np.testing.assert_array_equal(f0, f0b)
+    assert not np.allclose(f0, f1)

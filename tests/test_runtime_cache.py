@@ -1,0 +1,137 @@
+"""ProgramCache: hit/miss accounting, structural key stability, disk
+round-trip, and cached-Plan execution equivalence."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.feather import feather_config
+from repro.core import mapper, program
+from repro.runtime.cache import ProgramCache, compiled_key
+
+CFG = feather_config(4, 16)
+G = mapper.Gemm(m=24, k=20, n=16, name="cache-gemm")
+
+
+def _tensors(g, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"I": rng.standard_normal((g.m, g.k)).astype(np.float32),
+            "W": rng.standard_normal((g.k, g.n)).astype(np.float32)}
+
+
+def test_plan_hit_miss_accounting():
+    cache = ProgramCache()
+    p1 = cache.plan(G, CFG)
+    assert (cache.stats.plan_misses, cache.stats.plan_hits) == (1, 0)
+    assert cache.stats.searches == 1
+    p2 = cache.plan(G, CFG)
+    assert p2 is p1
+    assert (cache.stats.plan_misses, cache.stats.plan_hits) == (1, 1)
+    assert cache.stats.hit_rate == 0.5
+    assert len(cache) == 1
+    assert cache.size_bytes() > 0
+
+
+def test_key_stable_across_equal_instances():
+    """Equal-by-value Gemm/FeatherConfig objects share one entry; name and
+    count are metadata, not part of the mapping-search problem."""
+    cache = ProgramCache()
+    cache.plan(G, CFG)
+    other_gemm = mapper.Gemm(m=G.m, k=G.k, n=G.n, name="other", count=7)
+    other_cfg = feather_config(4, 16)   # fresh but equal instance
+    assert other_cfg is not CFG and other_cfg == CFG
+    cache.plan(other_gemm, other_cfg)
+    assert cache.stats.searches == 1 and cache.stats.plan_hits == 1
+    # different search kwargs are a different problem
+    cache.plan(G, CFG, fixed_input_vn=4)
+    assert cache.stats.searches == 2
+
+
+def test_cached_plan_executes_identically(tmp_path):
+    """A cache-served Plan (memory hit and disk round-trip) produces
+    bit-identical outputs to a freshly searched one."""
+    path = tmp_path / "plans.pkl"
+    cache = ProgramCache(path=path)
+    plan = cache.plan(G, CFG)
+    t = _tensors(G)
+    fresh = mapper.search(G, CFG).execute(t)["O"]
+    np.testing.assert_array_equal(plan.execute(t)["O"], fresh)
+    cache.save()
+
+    reloaded = ProgramCache(path=path)
+    assert reloaded.stats.loaded_from_disk == 1
+    plan2 = reloaded.plan(G, CFG)
+    assert reloaded.stats.searches == 0 and reloaded.stats.plan_hits == 1
+    np.testing.assert_array_equal(plan2.execute(t)["O"], fresh)
+    np.testing.assert_array_equal(plan2.execute(t, backend="pallas")["O"],
+                                  plan.execute(t, backend="pallas")["O"])
+
+
+def test_disk_version_guard(tmp_path):
+    import pickle
+    path = tmp_path / "bad.pkl"
+    with open(path, "wb") as f:
+        pickle.dump({"version": -1, "plans": {}}, f)
+    with pytest.raises(ValueError, match="version"):
+        ProgramCache(path=path)
+
+
+def test_lower_tier_memoises_variants():
+    cache = ProgramCache()
+    plan = cache.plan(G, CFG)
+    a = cache.lower(plan.gemm, plan.choice, CFG, out_name="O0")
+    b = cache.lower(plan.gemm, plan.choice, CFG, out_name="O0")
+    c = cache.lower(plan.gemm, plan.choice, CFG, out_name="O1")
+    assert a is b and a is not c
+    assert cache.stats.lowered_misses == 2
+    assert cache.stats.lowered_hits == 1
+
+
+def test_lru_eviction_bounds_plan_tier():
+    cache = ProgramCache(max_plans=2)
+    for n in (8, 12, 16):
+        cache.plan(mapper.Gemm(m=8, k=8, n=n), CFG)
+    assert cache.stats.evictions == 1
+    # evicted entry (n=8, oldest) re-searches; resident ones hit
+    cache.plan(mapper.Gemm(m=8, k=8, n=16), CFG)
+    assert cache.stats.plan_hits == 1
+    cache.plan(mapper.Gemm(m=8, k=8, n=8), CFG)
+    assert cache.stats.searches == 4
+
+
+def test_compiled_tier_structural_key():
+    """Two equivalent-but-distinct Program objects share one compiled
+    artifact; the PallasBackend hook routes through the shared tier."""
+    from repro import backends
+
+    cache = ProgramCache()
+    plan = cache.plan(G, CFG)
+    p1 = program.lower(G, plan.choice, CFG, out_name="O")
+    p2 = program.lower(G, plan.choice, CFG, out_name="O")
+    assert p1 is not p2
+    assert compiled_key(p1, 2048) == compiled_key(p2, 2048)
+
+    be1 = backends.PallasBackend(CFG, compile_cache=cache)
+    be2 = backends.PallasBackend(CFG, compile_cache=cache)
+    comp1 = be1.compile(p1)
+    comp2 = be2.compile(p2)   # fresh object, fresh backend: shared hit
+    assert comp2 is comp1
+    assert be1.n_compiles == 1 and be2.n_compiles == 0
+    assert cache.stats.compile_misses == 1
+    assert cache.stats.compile_hits == 1
+    # numbers are unaffected by cache routing
+    t = _tensors(G)
+    out = be2.run_program(p2, t)["O"]
+    np.testing.assert_allclose(out, t["I"] @ t["W"], rtol=2e-4,
+                               atol=2e-4 + 2e-4 * G.k)
+
+
+def test_stats_snapshot_delta():
+    cache = ProgramCache()
+    cache.plan(G, CFG)
+    snap = cache.stats.snapshot()
+    cache.plan(G, CFG)
+    cache.plan(dataclasses.replace(G, n=G.n * 2), CFG)
+    d = cache.stats.delta(snap)
+    assert d["plan_hits"] == 1 and d["plan_misses"] == 1
