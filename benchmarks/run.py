@@ -75,7 +75,14 @@ def main() -> None:
     bench("sec6d_scaling", scaling.run,
           lambda r: "aw64to256_speedup=" + _fmt(
               r[("AW", 64)]["geomean_cycles"]
-              / r[("AW", 256)]["geomean_cycles"]))
+              / r[("AW", 256)]["geomean_cycles"])
+          + " mesh8_speedup=" + _fmt(r[("mesh", 8)]["speedup"]),
+          lambda r: {f"mesh{n}.{key}": r[("mesh", n)][key]
+                     for n in (1, 2, 4, 8)
+                     for key in ("traffic_ratio", "speedup",
+                                 "load_imbalance", "tokens_per_sec",
+                                 "per_array_minisa_bytes")
+                     if key in r[("mesh", n)]})
     bench("arch_plans_16x256", arch_plans.run,
           lambda r: "n_cells=" + str(len(r)))
     bench("roofline_from_dryrun", roofline.run,

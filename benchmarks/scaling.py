@@ -1,11 +1,94 @@
 """§VI-D scalability ablations: AW scaling (near-linear speedup, stable
-utilization) and AH scaling (2.6-4x with granularity sensitivity)."""
+utilization) and AH scaling (2.6-4x with granularity sensitivity), plus
+the scale-OUT sweep: mesh sizes {1, 2, 4, 8} FEATHER+ arrays with
+per-array MINISA traffic (conserved within tiling overhead), parallel
+speedup, load imbalance, and serving tokens/sec from a tiny scheduler
+run per mesh size."""
 
 from benchmarks.common import geomean
 from repro.configs.feather import feather_config
-from repro.core import mapper, workloads
+from repro.core import mapper, perf, program as programlib, workloads
+from repro.dist import ArrayMesh
 
 SUITE = [g for g in workloads.suite()][::6]   # every 6th workload
+
+#: Mesh sweep inputs: one representative per Tab. IV family at full
+#: extents (traffic/cycles are analytic -- no functional execution).
+MESH_SUITE = [
+    mapper.Gemm(m=65536, k=40, n=88, name="fhe-bconv-40x88"),
+    mapper.Gemm(m=256, k=4096, n=4096, name="fhe-ntt-256x4096"),
+    mapper.Gemm(m=2048, k=2880, n=4096, name="gpt-oss-2880x4096"),
+]
+
+MESH_SIZES = (1, 2, 4, 8)
+
+
+def run_mesh(verbose: bool = True, serve: bool = True) -> dict:
+    """Scale-out ablation over ArrayMesh sizes.
+
+    Per (workload, mesh size): shard the lowered Program, report the
+    chosen axis, summed per-array instruction bytes vs the single-array
+    total (conservation), the parallel-makespan speedup and the load
+    imbalance.  ``serve`` adds a tokens/sec row per mesh size from a
+    2-request scheduler run on the interpreter backend (tiny serving
+    cell; the executables/cache rebuild per mesh but share all plans).
+    """
+    cfg = feather_config(16, 64)
+    rows: dict = {}
+    plans = {g.name: mapper.search(g, cfg) for g in MESH_SUITE}
+    for n_arrays in MESH_SIZES:
+        mesh = ArrayMesh(n_arrays)
+        ratios, speedups, imbalances = [], [], []
+        per_array_bytes = [0.0] * n_arrays
+        for g in MESH_SUITE:
+            plan = plans[g.name]
+            base_bytes = plan.program.minisa_bytes()
+            base_cycles = plan.perf_minisa.cycles
+            sh = programlib.shard_program(plan.program, mesh)
+            mp = perf.simulate_sharded(sh, cfg)
+            ratios.append(sh.minisa_bytes() / base_bytes)
+            speedups.append(base_cycles / max(mp.cycles, 1e-9))
+            imbalances.append(mp.load_imbalance)
+            for i, b in enumerate(sh.per_array_minisa_bytes()):
+                per_array_bytes[i] += b
+        rows[("mesh", n_arrays)] = {
+            "traffic_ratio": geomean(ratios),
+            "speedup": geomean(speedups),
+            "load_imbalance": max(imbalances),
+            "per_array_minisa_bytes": per_array_bytes,
+        }
+    if serve:
+        from repro.configs.feather import feather_config as fc
+        from repro.runtime import ModelExecutable, ProgramCache, Scheduler
+        serve_cfg = fc(4, 16)
+        cache = ProgramCache()
+        for n_arrays in MESH_SIZES:
+            mesh = ArrayMesh(n_arrays) if n_arrays > 1 else None
+            prefill = ModelExecutable.for_cell(
+                "gemma-7b", "prefill_tiny", serve_cfg, cache=cache,
+                mesh=mesh)
+            decode = ModelExecutable.for_cell(
+                "gemma-7b", "decode_tiny", serve_cfg, cache=cache,
+                mesh=mesh)
+            sched = Scheduler(prefill, decode, backend="interpreter",
+                              max_concurrent=2)
+            for _ in range(2):
+                sched.submit(decode_steps=1)
+            rep = sched.run()
+            rows[("mesh", n_arrays)]["tokens_per_sec"] = rep.tokens_per_sec
+            rows[("mesh", n_arrays)]["serve_load_imbalance"] = \
+                rep.load_imbalance
+    if verbose:
+        print("\n[scale-out] ArrayMesh sweep "
+              "(traffic ratio = sum-over-arrays / single-array)")
+        for n_arrays in MESH_SIZES:
+            r = rows[("mesh", n_arrays)]
+            tok = r.get("tokens_per_sec")
+            print(f"  arrays={n_arrays:<2} traffic x{r['traffic_ratio']:5.2f} "
+                  f"speedup {r['speedup']:5.2f}x "
+                  f"imbalance {r['load_imbalance']:4.2f}"
+                  + (f" tok/s {tok:8.1f}" if tok is not None else ""))
+    return rows
 
 
 def run(verbose: bool = True) -> dict:
@@ -34,4 +117,5 @@ def run(verbose: bool = True) -> dict:
             base = base_aw if kind == "AW" else base_ah
             print(f"  {kind}={v:<4} speedup-vs-base {base / r['geomean_cycles']:5.2f}x "
                   f"util {r['mean_util']:6.1%}")
+    rows.update(run_mesh(verbose=verbose))
     return rows

@@ -32,6 +32,7 @@ if TYPE_CHECKING:  # pragma: no cover
 __all__ = [
     "Backend", "InterpreterBackend", "PallasBackend", "CompiledProgram",
     "compile_program", "BACKENDS", "get_backend", "run", "cross_check",
+    "run_sharded",
 ]
 
 BACKENDS: dict[str, type[Backend]] = {
@@ -61,12 +62,28 @@ def run(program: "Program", tensors: dict[str, np.ndarray],
     return be.run_program(program, tensors)
 
 
+def run_sharded(program: "Program", tensors: dict[str, np.ndarray], mesh,
+                backend: str | Backend = "interpreter", axis: str | None = None,
+                **backend_kwargs) -> dict[str, np.ndarray]:
+    """One-shot sharded execution: partition ``program`` over ``mesh``'s
+    arrays (``core/program.shard_program``) and run on a fresh backend."""
+    from repro.core import program as programlib
+    sharded = programlib.shard_program(program, mesh, axis=axis)
+    be = get_backend(backend, program.cfg, **backend_kwargs)
+    return be.run_sharded(sharded, tensors)
+
+
 def cross_check(program: "Program", tensors: dict[str, np.ndarray],
                 backends: tuple[str, ...] = ("interpreter", "pallas"),
-                rtol: float = 2e-4, atol: float = 2e-4) -> dict[str, float]:
+                rtol: float = 2e-4, atol: float = 2e-4,
+                mesh=None, axis: str | None = None) -> dict[str, float]:
     """Run ``program`` on every named backend and compare each output to
     the einsum oracle (fp32-accumulate tolerance); returns the max abs
-    error per backend and raises on mismatch."""
+    error per backend and raises on mismatch.
+
+    With ``mesh`` (a ``dist.ArrayMesh``), each backend executes the
+    Program *sharded* across the mesh's arrays instead -- the oracle is
+    unchanged, which is exactly the sharded-equivalence contract."""
     g = program.gemm
     i = np.asarray(tensors["I"], np.float32)
     w = np.asarray(tensors["W"], np.float32)
@@ -75,7 +92,11 @@ def cross_check(program: "Program", tensors: dict[str, np.ndarray],
         oracle = np.asarray(program.activation(oracle))
     errs: dict[str, float] = {}
     for name in backends:
-        out = run(program, tensors, backend=name)[program.out_name]
+        if mesh is not None:
+            out = run_sharded(program, tensors, mesh, backend=name,
+                              axis=axis)[program.out_name]
+        else:
+            out = run(program, tensors, backend=name)[program.out_name]
         np.testing.assert_allclose(out, oracle, rtol=rtol,
                                    atol=atol + rtol * g.k,
                                    err_msg=f"backend {name!r} diverged from "

@@ -15,6 +15,17 @@ Backends are stateful across ``run_program`` calls within one instance:
 chained Programs (paper §IV-G) resolve their elided/retargeted inputs
 against the backend's committed outputs, exactly like the machine's
 on-chip commit.  ``reset()`` clears that state.
+
+Multi-array execution: ``run_program`` also accepts a
+:class:`~repro.core.program.ShardedProgram` (dispatching to
+:meth:`run_sharded`).  The base implementation keeps one sub-backend per
+logical array -- each array is its own machine with its own buffers and
+committed state -- runs every shard on its array's executor, and
+assembles the host output (concatenation along the split rank, or an
+explicit reduction for K-partitioned shards) before applying any hoisted
+epilogue activation.  Subclasses may override ``run_sharded`` with a
+genuinely parallel path (the Pallas backend shard_maps one kernel over a
+JAX device mesh when available).
 """
 
 from __future__ import annotations
@@ -23,6 +34,8 @@ import abc
 from typing import TYPE_CHECKING
 
 import numpy as np
+
+from repro.core.program import ShardedProgram
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.configs.feather import FeatherConfig
@@ -38,6 +51,8 @@ class Backend(abc.ABC):
     def __init__(self, cfg: "FeatherConfig"):
         self.cfg = cfg
         self.outputs: dict[str, np.ndarray] = {}
+        # one executor per logical array, created on first sharded run
+        self._shard_subs: dict[int, "Backend"] = {}
 
     @abc.abstractmethod
     def run_program(self, program: "Program",
@@ -49,10 +64,55 @@ class Backend(abc.ABC):
         ``run_program`` call per layer on the same backend instance,
         passing each layer's own tensors (the default lowering names every
         layer's weight Load 'W', so a single shared dict would silently
-        reuse layer 0's weights)."""
+        reuse layer 0's weights).
+
+        A :class:`ShardedProgram` argument dispatches to
+        :meth:`run_sharded`."""
+
+    # -- multi-array execution ----------------------------------------------
+    def _make_shard_backend(self) -> "Backend":
+        """A fresh executor for one logical array (subclasses thread their
+        construction kwargs through)."""
+        return type(self)(self.cfg)
+
+    def _shard_backend(self, array: int) -> "Backend":
+        be = self._shard_subs.get(array)
+        if be is None:
+            be = self._make_shard_backend()
+            self._shard_subs[array] = be
+        return be
+
+    def run_sharded(self, sharded: ShardedProgram,
+                    tensors: dict[str, np.ndarray] | None = None
+                    ) -> dict[str, np.ndarray]:
+        """Execute every shard on its array's executor and assemble.
+
+        M/N shards write disjoint output slices; K shards produce
+        partial sums combined by an explicit reduction -- the functional
+        twin of the mesh all-reduce.  The hoisted epilogue activation
+        (see ``program.shard_program``) runs on the assembled output.
+        """
+        g = sharded.base.gemm
+        acc = np.zeros((g.m, g.n), np.float32)
+        for shard in sharded.shards:
+            sub = self._shard_backend(shard.array)
+            out = np.asarray(
+                sub.run_program(shard.program,
+                                shard.slice_tensors(tensors))
+                [sharded.out_name])
+            if sharded.reduce:
+                acc += out
+            else:
+                acc[shard.m0:shard.m1, shard.n0:shard.n1] = out
+        if sharded.epilogue_act is not None:
+            acc = np.asarray(sharded.epilogue_act(acc))
+        self.outputs[sharded.out_name] = acc
+        return self.outputs
 
     def reset(self) -> None:
         self.outputs = {}
+        for sub in self._shard_subs.values():
+            sub.reset()
 
     def __repr__(self) -> str:  # pragma: no cover
         return (f"{type(self).__name__}(ah={self.cfg.ah}, "

@@ -34,7 +34,12 @@ class InterpreterBackend(Backend):
 
     def __init__(self, cfg: "FeatherConfig", max_depth: int | None = None):
         super().__init__(cfg)
+        self.max_depth = max_depth
         self.machine = FeatherMachine(cfg, max_depth=max_depth)
+
+    def _make_shard_backend(self) -> "InterpreterBackend":
+        # one functional machine per logical array
+        return InterpreterBackend(self.cfg, max_depth=self.max_depth)
 
     def run_trace(self, ops: Iterable["TraceOp"],
                   tensors: dict[str, np.ndarray] | None = None
@@ -50,6 +55,9 @@ class InterpreterBackend(Backend):
     def run_program(self, program: "Program",
                     tensors: dict[str, np.ndarray] | None = None
                     ) -> dict[str, np.ndarray]:
+        from repro.core.program import ShardedProgram
+        if isinstance(program, ShardedProgram):
+            return self.run_sharded(program, tensors)
         return self.run_trace(program.trace_ops(), tensors)
 
     def reset(self) -> None:

@@ -326,8 +326,8 @@ class Plan:
     def speedup(self) -> float:
         return self.perf_micro.cycles / max(self.perf_minisa.cycles, 1e-9)
 
-    def execute(self, tensors: dict, backend="interpreter",
-                **backend_kwargs) -> dict:
+    def execute(self, tensors: dict, backend="interpreter", mesh=None,
+                shard_axis: str | None = None, **backend_kwargs) -> dict:
         """Run the winning Program on an execution backend.
 
         ``backend`` is a registry name ('interpreter' drives the FEATHER+
@@ -335,9 +335,18 @@ class Plan:
         tiling to one ``pl.pallas_call``) or a ``backends.Backend``
         instance for stateful multi-layer runs.  Returns the named output
         tensors ({self.program.out_name: ...}).
+
+        ``mesh`` (a ``dist.ArrayMesh`` with ``n_arrays > 1``) executes
+        the Program sharded across the mesh's arrays instead
+        (``program.shard_program``; ``shard_axis`` overrides the axis
+        policy).
         """
         from repro import backends as backendlib
         be = backendlib.get_backend(backend, self.cfg, **backend_kwargs)
+        if mesh is not None and mesh.n_arrays > 1:
+            sharded = programlib.shard_program(self.program, mesh,
+                                               axis=shard_axis)
+            return be.run_sharded(sharded, tensors)
         return be.run_program(self.program, tensors)
 
     def summary(self) -> dict:

@@ -101,3 +101,77 @@ def simulate(tiles: Sequence[TileCost], cfg) -> PerfResult:
                       peak_macs_per_cycle=cfg.peak_macs_per_cycle,
                       busy=busy, stall_ifetch_frac=stall,
                       cycles_no_fetch=no_fetch)
+
+
+# ---------------------------------------------------------------------------
+# Multi-array (mesh) view: one engine simulation per array
+# ---------------------------------------------------------------------------
+
+def load_imbalance(per_array_values) -> float:
+    """Max-over-mean across the arrays that did any work (1.0 = perfectly
+    balanced or idle) -- the one imbalance definition every mesh report
+    shares."""
+    active = [v for v in per_array_values if v > 0]
+    if not active:
+        return 1.0
+    return max(active) / (sum(active) / len(active))
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPerfResult:
+    """Per-array PerfResults of a ShardedProgram, arrays run in parallel.
+
+    Makespan is the slowest array (plus the reduction epilogue for
+    K-partitioned shards); traffic and MACs sum; ``load_imbalance`` is
+    max-over-mean busy cycles across the arrays that did any work.
+    """
+    per_array: tuple[PerfResult, ...]
+    reduce_cycles: float = 0.0      # K-split epilogue (psum over arrays)
+
+    @property
+    def cycles(self) -> float:
+        busiest = max((r.cycles for r in self.per_array), default=0.0)
+        return busiest + self.reduce_cycles
+
+    @property
+    def macs(self) -> float:
+        return sum(r.macs for r in self.per_array)
+
+    @property
+    def stall_ifetch_frac(self) -> float:
+        total = sum(r.cycles for r in self.per_array)
+        if total <= 0:
+            return 0.0
+        return sum(r.stall_ifetch_frac * r.cycles
+                   for r in self.per_array) / total
+
+    @property
+    def load_imbalance(self) -> float:
+        return load_imbalance([r.cycles for r in self.per_array])
+
+    @property
+    def utilization(self) -> float:
+        if self.cycles <= 0 or not self.per_array:
+            return 0.0
+        peak = self.per_array[0].peak_macs_per_cycle * len(self.per_array)
+        return self.macs / (peak * self.cycles)
+
+
+def simulate_sharded(sharded, cfg, control: str = "minisa"
+                     ) -> MeshPerfResult:
+    """Run the 5-engine model independently per array of a
+    :class:`~repro.core.program.ShardedProgram` (each array has its own
+    fetch/load/compute/store engines; they share nothing but the host).
+
+    The K-split reduction epilogue is modelled as one pass over the
+    output at the commit rate (AW elements/cycle) per combining array --
+    the same cost shape as out2stream.
+    """
+    results = [simulate(costs, cfg)
+               for costs in sharded.per_array_tile_costs(control)]
+    reduce_cycles = 0.0
+    if sharded.reduce and sharded.n_shards > 1:
+        g = sharded.base.gemm
+        reduce_cycles = (sharded.n_shards - 1) * (g.m * g.n) / cfg.aw
+    return MeshPerfResult(per_array=tuple(results),
+                          reduce_cycles=reduce_cycles)

@@ -23,18 +23,28 @@ architectures (see configs/<arch>.py:gemm_workloads).  The planner:
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Any, Sequence
 
 from repro.configs.feather import FeatherConfig
 from repro.core import mapper as mapperlib
+from repro.core import perf as perflib
 from repro.core import program as programlib
 from repro.core.mapper import Gemm
 
 
+def as_gemm(op_shape) -> Gemm:
+    """Normalise a workload shape to the GEMM the spine maps: ``Gemm``
+    passes through, anything with ``to_gemm`` (``core.conv.Conv2D``)
+    lowers via im2col (paper Fig. 1's "conv. -> MatMul")."""
+    if hasattr(op_shape, "to_gemm"):
+        return op_shape.to_gemm()
+    return op_shape
+
+
 @dataclasses.dataclass(frozen=True)
 class GemmOp:
-    """One GEMM in the model graph."""
-    gemm: Gemm
+    """One GEMM (or im2col-able Conv2D) in the model graph."""
+    gemm: Any               # mapper.Gemm | core.conv.Conv2D
     layer: str = ""
     chained: bool = False   # consumes the previous op's output on-chip
     activation: str = "none"
@@ -59,6 +69,15 @@ class ArchPlan:
     micro_bytes: float = 0.0
     data_bytes: float = 0.0
     elided_bytes: float = 0.0
+
+    # multi-array serving (mesh-aware planning)
+    n_arrays: int = 1
+    per_array_bytes: list = dataclasses.field(default_factory=list)
+    per_array_cycles: list = dataclasses.field(default_factory=list)
+
+    @property
+    def load_imbalance(self) -> float:
+        return perflib.load_imbalance(self.per_array_cycles)
 
     @property
     def speedup(self) -> float:
@@ -85,7 +104,7 @@ class ArchPlan:
         return {
             "arch": self.arch, "shape": self.shape,
             "array": f"{self.cfg.ah}x{self.cfg.aw}",
-            "n_gemms": sum(op.gemm.count for op in self.ops),
+            "n_gemms": sum(getattr(op.gemm, "count", 1) for op in self.ops),
             "n_unique": len(self.plans),
             "macs": self.total_macs,
             "cycles_minisa": self.cycles_minisa,
@@ -98,6 +117,8 @@ class ArchPlan:
             "instr_to_data_minisa": self.instr_to_data_minisa,
             "instr_to_data_micro": self.instr_to_data_micro,
             "elided_bytes": self.elided_bytes,
+            "n_arrays": self.n_arrays,
+            "load_imbalance": self.load_imbalance,
         }
 
 
@@ -132,40 +153,68 @@ def cross_check(arch_plan: ArchPlan,
 
 
 def plan_model(arch: str, shape: str, ops: Sequence[GemmOp],
-               cfg: FeatherConfig, cache=None) -> ArchPlan:
+               cfg: FeatherConfig, cache=None, mesh=None) -> ArchPlan:
     """Plan a cell's GEMM stream.
 
     Mapper searches are memoised through a
     :class:`repro.runtime.cache.ProgramCache` (the process default unless
     ``cache`` is given), so the planner, the benchmarks and the runtime
     executables share one search/lowering memoisation; ``ArchPlan.plans``
-    remains this cell's view of the distinct shapes it used."""
+    remains this cell's view of the distinct shapes it used.
+
+    ``mesh`` (a ``dist.ArrayMesh``) plans the cell for multi-array
+    serving: every Program is sharded across the mesh, per-GEMM cycles
+    are the slowest array's (arrays run in parallel), instruction bytes
+    sum over arrays, and the per-array aggregates / load imbalance land
+    in the ArchPlan.  Inter-layer elision is per-array machine state and
+    does not cross the mesh boundary, so chained ops stop eliding."""
     from repro.runtime.cache import default_cache
     cache = cache if cache is not None else default_cache()
     plans: dict[tuple, mapperlib.Plan] = {}
     elided_cache: dict[tuple, float] = {}
+    mesh_cache: dict[tuple, tuple] = {}
+    n_arrays = mesh.n_arrays if mesh is not None else 1
     out = ArchPlan(arch=arch, shape=shape, cfg=cfg, ops=list(ops),
-                   plans=plans)
+                   plans=plans, n_arrays=n_arrays,
+                   per_array_bytes=[0.0] * n_arrays,
+                   per_array_cycles=[0.0] * n_arrays)
     for op in ops:
-        g = op.gemm
+        g = as_gemm(op.gemm)
         key = (g.m, g.k, g.n)
         if key not in plans:
             plans[key] = cache.plan(g, cfg)
         plan = plans[key]
         prog = plan.program
-        count = g.count
+        count = getattr(g, "count", 1)
         out.total_macs += g.macs * count
-        out.cycles_minisa += plan.perf_minisa.cycles * count
-        out.cycles_micro += plan.perf_micro.cycles * count
-        minisa_b = prog.minisa_bytes()
-        if op.chained:
-            if key not in elided_cache:
-                chained_prog = programlib.elide_input(prog)
-                elided_cache[key] = chained_prog.minisa_bytes()
-            chained_b = elided_cache[key]
-            out.elided_bytes += max(0.0, minisa_b - chained_b) * count
-            minisa_b = chained_b
-        out.minisa_bytes += minisa_b * count
+        if n_arrays > 1:
+            if key not in mesh_cache:
+                sharded = cache.sharded(prog, mesh)
+                mesh_cache[key] = (
+                    sharded,
+                    perflib.simulate_sharded(sharded, cfg, "minisa"),
+                    perflib.simulate_sharded(sharded, cfg, "micro"))
+            sharded, mesh_minisa, mesh_micro = mesh_cache[key]
+            out.cycles_minisa += mesh_minisa.cycles * count
+            out.cycles_micro += mesh_micro.cycles * count
+            bytes_per = sharded.per_array_minisa_bytes()
+            for i, (b, r) in enumerate(zip(bytes_per,
+                                           mesh_minisa.per_array)):
+                out.per_array_bytes[i] += b * count
+                out.per_array_cycles[i] += r.cycles * count
+            out.minisa_bytes += sum(bytes_per) * count
+        else:
+            out.cycles_minisa += plan.perf_minisa.cycles * count
+            out.cycles_micro += plan.perf_micro.cycles * count
+            minisa_b = prog.minisa_bytes()
+            if op.chained:
+                if key not in elided_cache:
+                    chained_prog = programlib.elide_input(prog)
+                    elided_cache[key] = chained_prog.minisa_bytes()
+                chained_b = elided_cache[key]
+                out.elided_bytes += max(0.0, minisa_b - chained_b) * count
+                minisa_b = chained_b
+            out.minisa_bytes += minisa_b * count
         out.micro_bytes += prog.micro_storage_bytes() * count
         out.data_bytes += g.data_bytes * count
     return out

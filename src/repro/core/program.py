@@ -17,6 +17,11 @@ One lowering produces everything downstream:
 so what we *count* is by construction what we *execute* -- there is no
 separate closed-form instruction/byte model.
 
+Scale-out: :func:`shard_program` partitions a Program across a
+``dist.ArrayMesh`` of FEATHER+ arrays (M/N output splits, or K with a
+reduction epilogue) into a :class:`ShardedProgram` whose per-array
+sub-Programs keep all of the above exact per array.
+
 Tiling & residency
 ------------------
 The loop nest is n-outer, m-mid, k-inner in the mapper's search
@@ -696,6 +701,212 @@ def chain(programs: list[Program], lower_fn: Callable = None
             cur = _retarget_input(cur, retarget)
         out.append(cur)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Multi-array sharding (Program -> ShardedProgram over an ArrayMesh)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Shard:
+    """One array's slice of a sharded GEMM, with its own lowered Program.
+
+    Slice bounds are host-orientation element ranges of the *unsharded*
+    problem: the shard computes ``O[m0:m1, n0:n1]`` (a partial sum over
+    ``k0:k1`` when the split axis is K) from ``I[m0:m1, k0:k1]`` and
+    ``W[k0:k1, n0:n1]``.
+    """
+    array: int                   # logical array index on the mesh
+    program: Program
+    m0: int
+    m1: int
+    n0: int
+    n1: int
+    k0: int
+    k1: int
+
+    def slice_tensors(self, tensors: dict | None) -> dict:
+        """This shard's view of the host operand dict ('I' / 'W')."""
+        out = dict(tensors) if tensors else {}
+        if "I" in out:
+            out["I"] = out["I"][self.m0:self.m1, self.k0:self.k1]
+        if "W" in out:
+            out["W"] = out["W"][self.k0:self.k1, self.n0:self.n1]
+        return out
+
+
+@dataclasses.dataclass
+class ShardedProgram:
+    """A Program split across the arrays of an ``dist.ArrayMesh``.
+
+    The tile space is partitioned along one host GEMM rank: M or N
+    shards compute disjoint output slices with the other operand
+    replicated; a K split computes per-array partial sums that a
+    reduction epilogue combines (``reduce``).  Activations that are not
+    shard-local (any activation under a K split; row-wise ones under an
+    N split, which breaks output rows) are hoisted out of the per-shard
+    Programs into ``epilogue_act``, applied to the assembled output.
+
+    Per-array accounting is exact: each shard's Program carries its own
+    MINISA instruction stream, so ``per_array_minisa_bytes`` /
+    ``tile_costs`` feed ``perf.simulate`` per array and sum to (within
+    tiling overhead) the unsharded totals.
+    """
+    base: Program                # the unsharded lowering (reference/meta)
+    mesh: Any                    # dist.ArrayMesh
+    axis: str                    # 'm' | 'n' | 'k' (host orientation)
+    shards: tuple[Shard, ...]
+    epilogue_act: Callable | None = None
+    epilogue_act_name: str = "none"
+
+    @property
+    def cfg(self) -> FeatherConfig:
+        return self.base.cfg
+
+    @property
+    def out_name(self) -> str:
+        return self.base.out_name
+
+    @property
+    def reduce(self) -> bool:
+        return self.axis == "k"
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def n_arrays(self) -> int:
+        return self.mesh.n_arrays
+
+    @property
+    def uniform(self) -> bool:
+        """All shards cover equal extents (shard_map-able without host
+        raggedness)."""
+        spans = {(s.m1 - s.m0, s.n1 - s.n0, s.k1 - s.k0)
+                 for s in self.shards}
+        return len(spans) == 1
+
+    def per_array_minisa_bytes(self) -> list[float]:
+        """Instruction bytes per logical array (idle arrays report 0)."""
+        out = [0.0] * self.n_arrays
+        for s in self.shards:
+            out[s.array] += s.program.minisa_bytes()
+        return out
+
+    def minisa_bytes(self) -> float:
+        return sum(self.per_array_minisa_bytes())
+
+    def per_array_tile_costs(self, control: str = "minisa",
+                             max_tiles: int = 4096) -> list[list]:
+        """One ``perf.TileCost`` stream per logical array."""
+        out: list[list] = [[] for _ in range(self.n_arrays)]
+        for s in self.shards:
+            out[s.array].extend(s.program.tile_costs(control, max_tiles))
+        return out
+
+    @property
+    def macs(self) -> int:
+        return sum(s.program.macs for s in self.shards)
+
+    def summary(self) -> dict:
+        bytes_per = self.per_array_minisa_bytes()
+        return {
+            "axis": self.axis, "n_arrays": self.n_arrays,
+            "n_shards": self.n_shards, "reduce": self.reduce,
+            "minisa_bytes": sum(bytes_per),
+            "minisa_bytes_per_array": bytes_per,
+            "byte_imbalance": perf.load_imbalance(bytes_per),
+        }
+
+
+def _shard_ranges(dim: int, n: int) -> list[tuple[int, int]]:
+    """Ceil-div contiguous split of [0, dim) into <= n non-empty ranges."""
+    chunk = -(-dim // n)
+    out = []
+    for i in range(n):
+        lo = i * chunk
+        hi = min(lo + chunk, dim)
+        if lo >= hi:
+            break
+        out.append((lo, hi))
+    return out
+
+
+def shard_program(program: Program, mesh, axis: str | None = None,
+                  lower_fn: Callable = None) -> ShardedProgram:
+    """Partition a lowered Program across ``mesh``'s arrays.
+
+    ``axis`` forces the split rank; by default the ``dist.sharding``
+    GEMM-rank policy picks it (N-first tensor parallelism, then M, then
+    K-with-reduction).  Each shard re-lowers the same MappingChoice on
+    its sub-extents -- ``snap_tiling`` clips, so every feasible choice
+    stays feasible -- through ``lower_fn`` (defaults to :func:`lower`;
+    the runtime passes its memoising ``ProgramCache.lower``).
+
+    Chained Programs (elided input / on-chip commit) cannot be sharded:
+    their operand flow is per-array machine state, and the mesh boundary
+    is exactly where that state does not reach.
+    """
+    if lower_fn is None:
+        lower_fn = lower
+    if program.input_elided:
+        raise ValueError("cannot shard a chained Program with an elided "
+                         "input; shard the un-chained lowering instead")
+    if any(op.meta.get("commit_to") is not None
+           for tile in program.tiles for op in tile.drains):
+        raise ValueError("cannot shard a Program whose final Write commits "
+                         "on-chip; shard the un-chained lowering instead")
+    g = program.gemm
+    if axis is None:
+        from repro.dist import sharding as shardinglib
+        wos = program.choice.df == isa.Dataflow.WOS
+        tiles = {"m": program.n_m if wos else program.n_n,
+                 "n": program.n_n if wos else program.n_m,
+                 "k": program.n_k}
+        axis = shardinglib.gemm_shard_axis(g.m, g.k, g.n, mesh.n_arrays,
+                                           tiles=tiles)
+    if axis not in ("m", "n", "k"):
+        raise ValueError(f"shard axis must be 'm'|'n'|'k', got {axis!r}")
+
+    if mesh.n_arrays == 1:
+        return ShardedProgram(
+            base=program, mesh=mesh, axis=axis,
+            shards=(Shard(array=0, program=program, m0=0, m1=g.m,
+                          n0=0, n1=g.n, k0=0, k1=g.k),))
+
+    # Activations that are not shard-local move to the epilogue: any
+    # activation under a K split (partial sums are pre-activation), and
+    # row-wise ones whenever a shard would hold partial accumulator rows
+    # (rows are host-N under WO-S, so only a WO-S M split keeps them
+    # intact per shard).
+    wos = program.choice.df == isa.Dataflow.WOS
+    hoist = program.activation is not None and (
+        axis == "k"
+        or (program.act_name in ROW_WISE_ACTIVATIONS
+            and not (wos and axis == "m")))
+    act = None if hoist else program.activation
+    act_name = "none" if hoist else program.act_name
+
+    dim = {"m": g.m, "n": g.n, "k": g.k}[axis]
+    shards = []
+    for i, (lo, hi) in enumerate(_shard_ranges(dim, mesh.n_arrays)):
+        m0, m1 = (lo, hi) if axis == "m" else (0, g.m)
+        n0, n1 = (lo, hi) if axis == "n" else (0, g.n)
+        k0, k1 = (lo, hi) if axis == "k" else (0, g.k)
+        sub = dataclasses.replace(
+            g, m=m1 - m0, k=k1 - k0, n=n1 - n0,
+            name=f"{g.name or 'gemm'}@{axis}{i}")
+        shards.append(Shard(
+            array=i,
+            program=lower_fn(sub, program.choice, program.cfg,
+                             activation=act, act_name=act_name,
+                             out_name=program.out_name),
+            m0=m0, m1=m1, n0=n0, n1=n1, k0=k0, k1=k1))
+    return ShardedProgram(
+        base=program, mesh=mesh, axis=axis, shards=tuple(shards),
+        epilogue_act=program.activation if hoist else None,
+        epilogue_act_name=program.act_name if hoist else "none")
 
 
 def _retarget_input(program: Program, source_name: str) -> Program:

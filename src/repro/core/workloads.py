@@ -81,8 +81,17 @@ def by_domain() -> dict[str, list[Gemm]]:
     }
 
 
+def ci_conv():
+    """The conv workload of the CI suite (paper Fig. 1: conv -> MatMul
+    via im2col): a 3x3 conv whose im2col GEMM is 196 x 72 x 16."""
+    from repro.core.conv import Conv2D
+    return Conv2D(n=1, h=14, w=14, c_in=8, kh=3, kw=3, c_out=16,
+                  name="conv-3x3s1-8to16-ci")
+
+
 def ci_suite() -> list[Gemm]:
-    """The Tab. IV sweep at functionally-executable extents.
+    """The Tab. IV sweep at functionally-executable extents, plus one
+    conv (as its im2col GEMM) so the conv path rides the same spine.
 
     Same four families and the same relative geometry (tall-skinny BConv,
     square NTT, wide decode GEMMs), with the huge ranks scaled down so the
@@ -104,6 +113,7 @@ def ci_suite() -> list[Gemm]:
     out += [Gemm(m=64, k=max(g.k // 32, 8), n=min(max(g.n // 32, 8), 192),
                  name=g.name + "-ci")
             for g in _gpt_oss_shapes()]
+    out.append(ci_conv().to_gemm())
     seen: set[tuple[int, int, int]] = set()
     uniq: list[Gemm] = []
     for g in out:

@@ -1,7 +1,18 @@
-"""Distributed substrate: logical-axis sharding rules, gradient
-compression, and elastic checkpoint resume.
+"""Distributed substrate: logical-axis sharding rules, array meshes,
+gradient compression, and elastic checkpoint resume.
+
+Serves both worlds that need a scale-out axis:
 
   sharding     -- logical axis names -> PartitionSpecs / NamedShardings
+                  (the models/ world) and the GEMM-rank axis policy the
+                  Program spine's ``shard_program`` uses
+  mesh         -- ArrayMesh: N logical FEATHER+ arrays, optionally backed
+                  by JAX devices (shard_map execution on the Pallas
+                  backend, per-array accounting everywhere)
   compression  -- int8 fake-quantisation + compressed DP all-reduce
   elastic      -- restore a checkpoint onto a (possibly different) mesh
 """
+
+from repro.dist.mesh import ArrayMesh, host_device_flag
+
+__all__ = ["ArrayMesh", "host_device_flag"]

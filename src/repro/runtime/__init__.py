@@ -14,6 +14,11 @@ and a batched serving scheduler.
   scheduler   Scheduler -- continuous-batching serving loop over
               prefill/decode executables with per-request MINISA vs
               micro-instruction traffic and stall reporting
+
+Multi-array serving: build the executables with ``mesh=ArrayMesh(N)``
+(``repro.dist``) and every Program executes sharded across N FEATHER+
+arrays -- the cache keys carry the mesh shape, and the scheduler report
+adds per-array traffic, cycles and load imbalance.
 """
 
 from repro.runtime.cache import (CacheStats, ProgramCache,  # noqa: F401

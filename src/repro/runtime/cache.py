@@ -15,6 +15,11 @@ Before this module every consumer memoised its own slice of that pipeline
   plans      (m, k, n, FeatherConfig, search kwargs)      -> mapper.Plan
   lowered    (shape, MappingChoice, cfg, lowering kwargs) -> Program
   compiled   (structural program key, max_block)          -> CompiledProgram
+  sharded    (structural program key, mesh shape, axis)   -> ShardedProgram
+
+``plan`` also accepts a ``core.conv.Conv2D`` (anything with ``to_gemm``):
+the im2col GEMM shape is the search problem, so convs share the same
+memoisation as the GEMM stream.
 
 Keys are *structural*: two equal-by-value ``Gemm``/``FeatherConfig``
 instances hit the same entry regardless of object identity, and the
@@ -58,6 +63,8 @@ class CacheStats:
     lowered_misses: int = 0       # == program.lower calls performed
     compile_hits: int = 0
     compile_misses: int = 0       # == backend compile_program calls
+    sharded_hits: int = 0
+    sharded_misses: int = 0       # == shard_program partitionings
     evictions: int = 0
     loaded_from_disk: int = 0
 
@@ -71,11 +78,13 @@ class CacheStats:
 
     @property
     def hits(self) -> int:
-        return self.plan_hits + self.lowered_hits + self.compile_hits
+        return (self.plan_hits + self.lowered_hits + self.compile_hits
+                + self.sharded_hits)
 
     @property
     def misses(self) -> int:
-        return self.plan_misses + self.lowered_misses + self.compile_misses
+        return (self.plan_misses + self.lowered_misses
+                + self.compile_misses + self.sharded_misses)
 
     @property
     def hit_rate(self) -> float:
@@ -94,7 +103,8 @@ class CacheStats:
             "hits": self.hits, "misses": self.misses,
             "hit_rate": self.hit_rate,
             "searches": self.searches, "lowerings": self.lowered_misses,
-            "compiles": self.compiles, "evictions": self.evictions,
+            "compiles": self.compiles, "shardings": self.sharded_misses,
+            "evictions": self.evictions,
             "loaded_from_disk": self.loaded_from_disk,
         }
 
@@ -141,12 +151,14 @@ class ProgramCache:
         self._plans: dict[tuple, "Plan"] = {}
         self._lowered: dict[tuple, "Program"] = {}
         self._compiled: dict[tuple, "CompiledProgram"] = {}
+        self._sharded: dict[tuple, Any] = {}
         self.stats = CacheStats()
         self.max_plans = max_plans
         # variant/artifact tiers are bounded too (several lowering
         # variants and compiled artifacts may hang off one plan)
         self.max_lowered = 8 * max_plans
         self.max_compiled = 16 * max_plans
+        self.max_sharded = 8 * max_plans
         self.path = os.fspath(path) if path is not None else None
         if self.path and os.path.exists(self.path):
             self.load(self.path)
@@ -168,6 +180,8 @@ class ProgramCache:
 
     def plan(self, gemm: "Gemm", cfg: "FeatherConfig",
              **search_kwargs) -> "Plan":
+        if hasattr(gemm, "to_gemm"):       # Conv2D (or any im2col-able op)
+            gemm = gemm.to_gemm()
         key = self.plan_key(gemm, cfg, **search_kwargs)
         hit = self._plans.get(key)
         if hit is not None:
@@ -207,6 +221,29 @@ class ProgramCache:
         self._lowered[key] = prog
         return prog
 
+    # -- tier 4: mesh partitionings (ShardedProgram per mesh shape) -----------
+    def sharded(self, program: "Program", mesh, axis: str | None = None):
+        """Memoising drop-in for ``program.shard_program``: the mesh
+        shape joins the structural key, so the same Program served on
+        2- and 4-array meshes holds two entries, and every shard's
+        sub-Program lowering flows through :meth:`lower` (shared with
+        the unsharded variants)."""
+        g = program.gemm
+        key = (g.m, g.k, g.n, program.choice, program.cfg,
+               program.out_name,
+               _act_token(program.activation, program.act_name),
+               program.input_elided, mesh.shape, mesh.axis_name, axis)
+        hit = self._sharded.get(key)
+        if hit is not None:
+            self.stats.sharded_hits += 1
+            return hit
+        self.stats.sharded_misses += 1
+        sharded = programlib.shard_program(program, mesh, axis=axis,
+                                           lower_fn=self.lower)
+        self._evict_over(self._sharded, self.max_sharded)
+        self._sharded[key] = sharded
+        return sharded
+
     # -- tier 3: backend compile artifacts (PallasBackend hook) ---------------
     def lookup_compiled(self, program: "Program",
                         max_block: int) -> "CompiledProgram | None":
@@ -223,7 +260,8 @@ class ProgramCache:
 
     # -- stats / persistence --------------------------------------------------
     def __len__(self) -> int:
-        return len(self._plans) + len(self._lowered) + len(self._compiled)
+        return (len(self._plans) + len(self._lowered)
+                + len(self._compiled) + len(self._sharded))
 
     def size_bytes(self) -> int:
         """Pickled payload size of the plan tier (computed on demand --
@@ -241,7 +279,8 @@ class ProgramCache:
         return {
             "entries": {"plans": len(self._plans),
                         "lowered": len(self._lowered),
-                        "compiled": len(self._compiled)},
+                        "compiled": len(self._compiled),
+                        "sharded": len(self._sharded)},
             "bytes": self.size_bytes(),
             **self.stats.summary(),
         }

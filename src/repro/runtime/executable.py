@@ -37,6 +37,14 @@ elementwise always; row-wise (softmax/norms) only under WO-S with full
 output rows per tile.  Anything else is applied host-side between
 Programs, which also breaks the chain there (the oracle mirrors both
 paths).
+
+Multi-array serving: constructed with ``mesh=dist.ArrayMesh(N)``, every
+step's Program is sharded across the mesh (``ProgramCache.sharded``) and
+executed via the backends' sharded path.  On-chip chaining is per-array
+machine state and does not cross the mesh boundary, so sharded streams
+keep every layer's host round trip ('wired' steps feed the producer's
+output back explicitly); ``perf_stats`` then reports per-array traffic,
+cycles and load imbalance.
 """
 
 from __future__ import annotations
@@ -51,7 +59,7 @@ import numpy as np
 from repro.configs.base import SHAPES, ShapeConfig
 from repro.core import isa, perf
 from repro.core import program as programlib
-from repro.core.planner import GemmOp
+from repro.core.planner import GemmOp, as_gemm
 from repro.runtime.cache import ProgramCache, default_cache
 
 
@@ -125,6 +133,7 @@ class Step:
     input_mode: str                 # 'wired' | 'adapt' | 'fresh'
     host_act: Callable | None       # applied host-side after the Program
     reps: int                       # multiplicity for traffic accounting
+    sharded: programlib.ShardedProgram | None = None   # multi-array form
 
     @property
     def weight_name(self) -> str:
@@ -158,12 +167,20 @@ class ModelExecutable:
     chained Programs, executable on any backend against the oracle."""
 
     def __init__(self, ops: list[GemmOp], cfg, *,
-                 cache: ProgramCache | None = None, name: str = "model"):
+                 cache: ProgramCache | None = None, name: str = "model",
+                 mesh=None):
         self.cfg = cfg
         self.cache = cache if cache is not None else default_cache()
         self.name = name
-        self.ops = list(ops)
+        # normalise Conv2D (or any to_gemm-able) ops: the whole stream
+        # machinery (tensor specs, wiring, oracle) speaks GEMM shapes
+        self.ops = [dataclasses.replace(op, gemm=as_gemm(op.gemm))
+                    if hasattr(op.gemm, "to_gemm") else op
+                    for op in ops]
         self.tokens: int | None = None   # set by for_cell
+        # multi-array serving: a dist.ArrayMesh shards every step across
+        # the arrays (None / 1 array == the single-array pipeline)
+        self.mesh = mesh if mesh is not None and mesh.n_arrays > 1 else None
         self.steps = self._build()
         self._perf_cache: dict[int, tuple] = {}
 
@@ -172,7 +189,8 @@ class ModelExecutable:
     def for_cell(cls, arch: str, shape: str | ShapeConfig, cfg, *,
                  cache: ProgramCache | None = None,
                  reduce_model: bool = True, layers: int = 2,
-                 d_model: int = 64, vocab: int = 256) -> "ModelExecutable":
+                 d_model: int = 64, vocab: int = 256,
+                 mesh=None) -> "ModelExecutable":
         """Build the executable for an (architecture x shape) cell.
 
         ``reduce_model`` shrinks the architecture family-preservingly
@@ -191,7 +209,7 @@ class ModelExecutable:
         else:
             scfg = {**SHAPES, **TINY_SHAPES}[shape]
         ex = cls(gemm_workloads(mcfg, scfg), cfg, cache=cache,
-                 name=f"{arch}/{scfg.name}")
+                 name=f"{arch}/{scfg.name}", mesh=mesh)
         ex.tokens = (scfg.global_batch if scfg.kind == "decode"
                      else scfg.tokens)
         return ex
@@ -224,13 +242,19 @@ class ModelExecutable:
             if not segment:
                 return
             progs = [e[2] for e in segment]
-            if len(progs) > 1:
+            # on-chip commit / input elision is per-array machine state;
+            # a mesh-sharded stream keeps every layer's host round trip
+            # ('wired' steps feed the producer's output back as 'I')
+            if len(progs) > 1 and self.mesh is None:
                 progs = programlib.chain(progs, lower_fn=cache.lower)
             for (op, _, _, host_act), prog, mode in zip(segment, progs,
                                                         modes):
+                sharded = (self.cache.sharded(prog, self.mesh)
+                           if self.mesh is not None else None)
                 steps.append(Step(index=len(steps), op=op, program=prog,
                                   input_mode=mode, host_act=host_act,
-                                  reps=max(1, op.gemm.count)))
+                                  reps=max(1, getattr(op.gemm, "count", 1)),
+                                  sharded=sharded))
             segment.clear()
             modes.clear()
 
@@ -322,8 +346,13 @@ class ModelExecutable:
                 t["I"] = env[s.input_name]
             elif s.input_mode == "adapt":
                 t["I"] = adapt(prev, g.m, g.k)
+            elif s.input_mode == "wired" and s.sharded is not None:
+                # sharded streams do not chain on-chip: the producer's
+                # output crosses the host boundary explicitly
+                t["I"] = prev
             out = np.asarray(
-                be.run_program(s.program, t)[s.program.out_name])
+                be.run_program(s.sharded if s.sharded is not None
+                               else s.program, t)[s.program.out_name])
             if s.host_act is not None:
                 out = np.asarray(s.host_act(out))
             if check:
@@ -348,22 +377,47 @@ class ModelExecutable:
         return RunResult(outputs=outputs, final=prev, checked=check)
 
     # -- accounting (the same tile streams perf.simulate consumes) ------------
+    @property
+    def n_arrays(self) -> int:
+        return self.mesh.n_arrays if self.mesh is not None else 1
+
     def perf_stats(self) -> dict[str, float]:
         """Aggregate MINISA vs micro traffic + stall fractions over the
-        stream, ``reps``-weighted; simulated once per unique Program."""
+        stream, ``reps``-weighted; simulated once per unique Program.
+
+        On a mesh, per-GEMM cycles are the slowest array's (arrays run
+        in parallel), instruction bytes sum over arrays, and the
+        per-array breakdowns plus ``load_imbalance`` join the dict."""
+        n_arrays = self.n_arrays
         tot = {"minisa_bytes": 0.0, "micro_bytes": 0.0,
                "cycles_minisa": 0.0, "cycles_micro": 0.0,
                "stall_cycles_minisa": 0.0, "stall_cycles_micro": 0.0,
                "macs": 0.0, "n_gemms": 0.0}
+        per_bytes = [0.0] * n_arrays
+        per_cycles = [0.0] * n_arrays
         for s in self.steps:
-            key = id(s.program)
+            key = id(s.sharded if s.sharded is not None else s.program)
             if key not in self._perf_cache:
-                pm = perf.simulate(s.program.tile_costs("minisa"), self.cfg)
-                pu = perf.simulate(s.program.tile_costs("micro"), self.cfg)
+                if s.sharded is not None:
+                    pm = perf.simulate_sharded(s.sharded, self.cfg,
+                                               "minisa")
+                    pu = perf.simulate_sharded(s.sharded, self.cfg,
+                                               "micro")
+                    mb = s.sharded.minisa_bytes()
+                    arr_b = s.sharded.per_array_minisa_bytes()
+                    arr_c = [r.cycles for r in pm.per_array]
+                else:
+                    pm = perf.simulate(s.program.tile_costs("minisa"),
+                                       self.cfg)
+                    pu = perf.simulate(s.program.tile_costs("micro"),
+                                       self.cfg)
+                    mb = s.program.minisa_bytes()
+                    arr_b = [mb]
+                    arr_c = [pm.cycles]
                 self._perf_cache[key] = (
-                    pm, pu, s.program.minisa_bytes(),
-                    s.program.micro_storage_bytes())
-            pm, pu, mb, ub = self._perf_cache[key]
+                    pm, pu, mb, s.program.micro_storage_bytes(),
+                    arr_b, arr_c)
+            pm, pu, mb, ub, arr_b, arr_c = self._perf_cache[key]
             r = s.reps
             tot["minisa_bytes"] += mb * r
             tot["micro_bytes"] += ub * r
@@ -373,12 +427,19 @@ class ModelExecutable:
             tot["stall_cycles_micro"] += pu.stall_ifetch_frac * pu.cycles * r
             tot["macs"] += s.op.gemm.macs * r
             tot["n_gemms"] += r
+            for i in range(min(len(arr_b), n_arrays)):
+                per_bytes[i] += arr_b[i] * r
+                per_cycles[i] += arr_c[i] * r
         tot["stall_minisa"] = (tot["stall_cycles_minisa"]
                                / max(tot["cycles_minisa"], 1e-9))
         tot["stall_micro"] = (tot["stall_cycles_micro"]
                               / max(tot["cycles_micro"], 1e-9))
         tot["instr_reduction"] = (tot["micro_bytes"]
                                   / max(tot["minisa_bytes"], 1e-9))
+        tot["n_arrays"] = n_arrays
+        tot["per_array_minisa_bytes"] = per_bytes
+        tot["per_array_cycles_minisa"] = per_cycles
+        tot["load_imbalance"] = perf.load_imbalance(per_cycles)
         return tot
 
     def describe(self) -> dict:
@@ -391,4 +452,7 @@ class ModelExecutable:
                            if s.input_mode == "wired"),
             "n_elided": sum(1 for s in self.steps
                             if s.program.input_elided),
+            "n_arrays": self.n_arrays,
+            "n_sharded": sum(1 for s in self.steps
+                             if s.sharded is not None),
         }

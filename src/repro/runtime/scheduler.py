@@ -27,17 +27,35 @@ requests retire immediately, freeing their slot mid-batch.
 Per-request accounting reuses the exact tile streams ``perf.simulate``
 consumes (via ``ModelExecutable.perf_stats``): MINISA vs micro-instruction
 traffic bytes, modelled cycles and instruction-fetch stall fractions.
+With mesh-sharded executables the report additionally carries per-array
+traffic/cycles and the load-imbalance factor, and seeded runs are
+bit-reproducible across backends (quantised recurrence feedback; see
+``_stabilize``).
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
 import time
 
 import numpy as np
 
+from repro.core import perf
 from repro.runtime.executable import ModelExecutable
+
+#: The serving recurrence feeds backend outputs back into request state
+#: (KV commits, the next step's input carrier).  Quantising that feedback
+#: to this many decimals makes a seeded run *bit*-reproducible across
+#: backends: fp32 kernel-order differences between the interpreter and
+#: the Pallas kernels (~1e-6 at serving extents) vanish under the
+#: quantum, so both backends walk the identical state trajectory.
+_STATE_DECIMALS = 3
+
+
+def _stabilize(x: np.ndarray) -> np.ndarray:
+    return np.round(np.asarray(x, np.float32), _STATE_DECIMALS)
 
 
 @dataclasses.dataclass
@@ -59,6 +77,10 @@ class RequestReport:
     cycles_micro: float
     stall_minisa: float
     stall_micro: float
+    #: sha1 over the request's final quantised KV state + carrier --
+    #: equal across backends / re-runs for equal seeds (determinism
+    #: regression surface)
+    state_checksum: str = ""
 
     @property
     def tokens(self) -> int:
@@ -79,6 +101,7 @@ class RequestReport:
             "instr_reduction": self.instr_reduction,
             "stall_minisa": self.stall_minisa,
             "stall_micro": self.stall_micro,
+            "state_checksum": self.state_checksum,
         }
 
 
@@ -90,6 +113,10 @@ class SchedulerReport:
     ticks: int
     max_concurrent: int
     cache: dict
+    # multi-array serving (all zeros / ones on a single array)
+    n_arrays: int = 1
+    per_array_minisa_bytes: list = dataclasses.field(default_factory=list)
+    per_array_cycles: list = dataclasses.field(default_factory=list)
 
     @property
     def total_tokens(self) -> int:
@@ -98,6 +125,10 @@ class SchedulerReport:
     @property
     def tokens_per_sec(self) -> float:
         return self.total_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def load_imbalance(self) -> float:
+        return perf.load_imbalance(self.per_array_cycles)
 
     def summary(self) -> dict:
         return {
@@ -108,6 +139,10 @@ class SchedulerReport:
             "wall_s": self.wall_s,
             "ticks": self.ticks,
             "max_concurrent": self.max_concurrent,
+            "n_arrays": self.n_arrays,
+            "per_array_minisa_bytes": list(self.per_array_minisa_bytes),
+            "per_array_cycles": list(self.per_array_cycles),
+            "load_imbalance": self.load_imbalance,
             "cache_hit_rate": self.cache.get("hit_rate", 0.0),
             "cache_searches": self.cache.get("searches", 0),
             "cache_compiles": self.cache.get("compiles", 0),
@@ -138,8 +173,10 @@ class _Active:
 def _commit_kv(dynamics: dict[str, np.ndarray], out: np.ndarray,
                pos: int) -> None:
     """Deterministic bounded KV append: fold the step output into one
-    slot of each dynamic operand along its time-like (longer) axis."""
-    vec = np.tanh(np.asarray(out, np.float32).ravel())
+    slot of each dynamic operand along its time-like (longer) axis.
+    Quantised (see ``_stabilize``) so the committed state is identical
+    across backends."""
+    vec = _stabilize(np.tanh(np.asarray(out, np.float32).ravel()))
     if vec.size == 0:
         return
     for arr in dynamics.values():
@@ -149,23 +186,50 @@ def _commit_kv(dynamics: dict[str, np.ndarray], out: np.ndarray,
             arr[pos % arr.shape[0], :] = np.resize(vec, arr.shape[1])
 
 
+def _state_checksum(dynamics: dict[str, np.ndarray],
+                    carry: np.ndarray) -> str:
+    h = hashlib.sha1()
+    for name in sorted(dynamics):
+        h.update(name.encode())
+        h.update(np.ascontiguousarray(dynamics[name]).tobytes())
+    h.update(_stabilize(carry).tobytes())
+    return h.hexdigest()
+
+
 class Scheduler:
-    """Continuous-batching serving loop over prefill/decode executables."""
+    """Continuous-batching serving loop over prefill/decode executables.
+
+    Seeding is fully explicit: every request's tensors derive from
+    ``(self.seed, request seed)`` only -- never from admission order or
+    leftover generator state -- and all recurrence feedback is quantised
+    (``_stabilize``), so a run with the same submissions is
+    bit-reproducible run-to-run *and* across backends
+    (``RequestReport.state_checksum`` is the regression surface).
+
+    When the executables carry an ``ArrayMesh``, every Program executes
+    sharded and the report adds per-array instruction traffic, modelled
+    cycles and the load-imbalance factor -- the multi-array serving
+    simulator view.
+    """
 
     def __init__(self, prefill: ModelExecutable, decode: ModelExecutable,
                  *, backend: str = "interpreter", max_concurrent: int = 4,
-                 weight_seed: int = 0):
+                 weight_seed: int = 0, seed: int = 0):
         if prefill.cfg != decode.cfg:
             raise ValueError("prefill/decode executables must share one "
                              "FeatherConfig")
         if prefill.cache is not decode.cache:
             raise ValueError("prefill/decode executables must share one "
                              "ProgramCache")
+        if prefill.n_arrays != decode.n_arrays:
+            raise ValueError("prefill/decode executables must share one "
+                             "ArrayMesh shape")
         self.prefill = prefill
         self.decode = decode
         self.backend_name = backend
         self.backend = prefill.make_backend(backend)
         self.max_concurrent = max_concurrent
+        self.seed = seed
         # weight residency: one static weight set serves every request
         self.prefill_weights = prefill.make_tensors(weight_seed,
                                                     kinds=("weight",))
@@ -175,14 +239,20 @@ class Scheduler:
         self._next_rid = 0
 
     def submit(self, decode_steps: int, seed: int | None = None) -> Request:
+        """Queue a request.  The default per-request seed derives from
+        the scheduler seed and the rid alone, so a submission sequence
+        reproduces exactly regardless of wall-clock or interleaving."""
+        if seed is None:
+            seed = self.seed * 1_000_003 + self._next_rid
         req = Request(rid=self._next_rid, decode_steps=decode_steps,
-                      seed=self._next_rid if seed is None else seed)
+                      seed=seed)
         self._next_rid += 1
         self._pending.append(req)
         return req
 
     # -- one request's phases -------------------------------------------------
     def _admit(self, req: Request) -> _Active:
+        t_start = time.perf_counter()   # request wall time includes prefill
         env = dict(self.prefill_weights)
         env.update(self.prefill.make_tensors(req.seed,
                                              kinds=("dynamic", "input")))
@@ -190,20 +260,19 @@ class Scheduler:
         dynamics = self.decode.make_tensors(req.seed, kinds=("dynamic",))
         _commit_kv(dynamics, res.final, 0)   # prefill output seeds the KV
         return _Active(req=req, dynamics=dynamics, carry=res.final,
-                       t_start=time.perf_counter())
+                       t_start=t_start)
 
     def _decode_step(self, a: _Active) -> None:
         env = dict(self.decode_weights)
         env.update(a.dynamics)
-        env.update(self.decode.inputs_from(a.carry))
+        # quantised carrier: both backends feed identical step inputs
+        env.update(self.decode.inputs_from(_stabilize(a.carry)))
         res = self.decode.run(self.backend, tensors=env)
         a.decoded += 1
         a.carry = res.final
         _commit_kv(a.dynamics, res.final, a.decoded)
 
-    def _report(self, a: _Active) -> RequestReport:
-        pre = self.prefill.perf_stats()
-        dec = self.decode.perf_stats()
+    def _report(self, a: _Active, pre: dict, dec: dict) -> RequestReport:
         n = a.decoded
         return RequestReport(
             rid=a.req.rid,
@@ -220,11 +289,15 @@ class Scheduler:
             stall_micro=(pre["stall_cycles_micro"]
                          + n * dec["stall_cycles_micro"])
             / max(pre["cycles_micro"] + n * dec["cycles_micro"], 1e-9),
+            state_checksum=_state_checksum(a.dynamics, a.carry),
         )
 
     # -- the serving loop -----------------------------------------------------
     def run(self) -> SchedulerReport:
         t0 = time.perf_counter()
+        n_arrays = self.prefill.n_arrays
+        per_bytes = [0.0] * n_arrays
+        per_cycles = [0.0] * n_arrays
         active: list[_Active] = []
         done: list[RequestReport] = []
         ticks = 0
@@ -236,11 +309,23 @@ class Scheduler:
                     self._decode_step(a)
                 if a.decoded >= a.req.decode_steps:
                     active.remove(a)
-                    done.append(self._report(a))
+                    pre = self.prefill.perf_stats()
+                    dec = self.decode.perf_stats()
+                    done.append(self._report(a, pre, dec))
+                    for i in range(n_arrays):
+                        per_bytes[i] += (
+                            pre["per_array_minisa_bytes"][i]
+                            + a.decoded * dec["per_array_minisa_bytes"][i])
+                        per_cycles[i] += (
+                            pre["per_array_cycles_minisa"][i]
+                            + a.decoded * dec["per_array_cycles_minisa"][i])
             ticks += 1
         done.sort(key=lambda r: r.rid)
         return SchedulerReport(
             backend=self.backend_name, requests=done,
             wall_s=time.perf_counter() - t0, ticks=ticks,
             max_concurrent=self.max_concurrent,
-            cache=self.prefill.cache.stats.summary())
+            cache=self.prefill.cache.stats.summary(),
+            n_arrays=n_arrays,
+            per_array_minisa_bytes=per_bytes,
+            per_array_cycles=per_cycles)

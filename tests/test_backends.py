@@ -45,12 +45,16 @@ def test_backend_equivalence_workload_sweep(gemm):
 
 def test_ci_suite_covers_the_paper_sweep():
     suite = workloads.ci_suite()
-    assert len(suite) == len(workloads.suite())
+    # the Tab. IV families plus the one conv (im2col) workload
+    assert len(suite) == len(workloads.suite()) + 1
     # pairwise distinct: every entry is its own mapping-search problem
     assert len({(g.m, g.k, g.n) for g in suite}) == len(suite) >= 50
     assert max(max(g.m, g.k, g.n) for g in suite) <= 256
     domains = {g.name.split("-")[0] for g in suite}
-    assert domains == {"fhe", "zkp", "gpt"}
+    assert domains == {"fhe", "zkp", "gpt", "conv"}
+    conv_gemm = workloads.ci_conv().to_gemm()
+    assert any((g.m, g.k, g.n) == (conv_gemm.m, conv_gemm.k, conv_gemm.n)
+               for g in suite)
 
 
 # ---------------------------------------------------------------------------

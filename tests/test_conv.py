@@ -45,6 +45,71 @@ def test_conv_through_feather_machine(conv):
         np.testing.assert_allclose(expect, direct, rtol=1e-5, atol=1e-5)
 
 
+def test_conv_im2col_oracle_on_both_backends():
+    """The ci_suite conv workload: the planned Program's execution on
+    both backends equals the im2col GEMM oracle AND the direct conv
+    reference (the satellite's conv-through-the-spine contract)."""
+    from repro.core import workloads
+
+    conv = workloads.ci_conv()
+    x = RNG.standard_normal((conv.n, conv.h, conv.w, conv.c_in)) \
+        .astype(np.float32)
+    kern = RNG.standard_normal((conv.kh, conv.kw, conv.c_in, conv.c_out)) \
+        .astype(np.float32)
+    patches = im2col(x, conv)
+    wmat = kern.reshape(-1, conv.c_out)
+    expect = conv2d_ref(x, kern, conv)
+    oh, ow = conv.out_hw
+    cfg = feather_config(4, 16)
+    plan = mapper.search(conv.to_gemm(), cfg)
+    for backend in ("interpreter", "pallas"):
+        out = plan.execute({"I": patches, "W": wmat}, backend=backend)["O"]
+        got = out.reshape(conv.n, oh, ow, conv.c_out)
+        np.testing.assert_allclose(got, expect, rtol=2e-4,
+                                   atol=2e-4 + 2e-4 * conv.to_gemm().k,
+                                   err_msg=backend)
+
+
+def test_planner_accepts_conv2d_directly():
+    """GemmOp may carry a Conv2D: the planner (and the ProgramCache
+    underneath) lowers it via to_gemm() and plans the im2col GEMM."""
+    from repro.core.planner import GemmOp, plan_model
+    from repro.core.workloads import ci_conv
+    from repro.runtime import ProgramCache
+
+    cfg = feather_config(4, 16)
+    cache = ProgramCache()
+    conv = ci_conv()
+    g = conv.to_gemm()
+    ap = plan_model("convnet", "ci", [GemmOp(gemm=conv, layer="conv")],
+                    cfg, cache=cache)
+    assert (g.m, g.k, g.n) in ap.plans
+    assert ap.total_macs == g.macs
+    assert ap.minisa_bytes > 0
+    # the cache normalises too: planning the Conv2D and its GEMM is one
+    # search problem
+    snap = cache.stats.snapshot()
+    assert cache.plan(conv, cfg) is cache.plan(g, cfg)
+    assert cache.stats.delta(snap)["plan_misses"] == 0
+
+
+def test_executable_accepts_conv2d_op():
+    """A Conv2D-carrying GemmOp runs through the ModelExecutable (ops
+    are normalised to their im2col GEMMs at construction)."""
+    from repro.core.planner import GemmOp
+    from repro.core.workloads import ci_conv
+    from repro.runtime import ModelExecutable, ProgramCache
+
+    cfg = feather_config(4, 16)
+    conv = ci_conv()
+    ex = ModelExecutable([GemmOp(gemm=conv, layer="conv")], cfg,
+                         cache=ProgramCache())
+    g = conv.to_gemm()
+    assert ex.tensor_specs()[ex.steps[0].weight_name][0] == (g.k, g.n)
+    res = ex.run("interpreter", check=True)
+    assert res.checked and res.final.shape == (g.m, g.n)
+
+
 def test_layout_constrained_search():
     """Artifact item 6: constrain the input layout (VN size + order) --
     the constrained plan respects it and still beats micro-instructions."""
