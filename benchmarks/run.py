@@ -108,7 +108,35 @@ def main() -> None:
                                  "cache_compiles",
                                  "minisa_bytes_per_request",
                                  "micro_bytes_per_request",
-                                 "stall_minisa", "stall_micro")})
+                                 "stall_minisa", "stall_micro",
+                                 "decode_fused",
+                                 "decode_fused_segments",
+                                 "decode_hbm_elided_bytes")})
+    # fused-vs-per-layer kernels/serving live in benchmarks.fusion_compare;
+    # CI runs it as its own perf-smoke step and --merges the results into
+    # the BENCH_results.json written here (measuring it twice per CI run
+    # would only duplicate the slowest serving benchmarks)
+
+    def mapper_walltime():
+        """Mapper-search wall clock, scalar vs vectorized prescore."""
+        from repro.configs.feather import feather_config
+        from repro.core import mapper, workloads
+        cfg = feather_config(16, 256)
+        suite = workloads.small_suite()
+        if not args.quick:
+            suite = suite + workloads.ci_suite()[:12]
+        out = {}
+        for mode, vec in (("scalar", False), ("vectorized", True)):
+            t0 = time.time()
+            for g in suite:
+                mapper.search(g, cfg, vectorized=vec)
+            out[f"us_{mode}"] = (time.time() - t0) / len(suite) * 1e6
+        out["speedup"] = out["us_scalar"] / max(out["us_vectorized"], 1e-9)
+        return out
+
+    bench("mapper_search", mapper_walltime,
+          lambda r: "prescore_speedup=" + _fmt(r["speedup"]),
+          lambda r: dict(r))
 
     print("\nname,us_per_call,derived")
     for name, us, derived, _ in rows:

@@ -22,8 +22,9 @@ import numpy as np
 
 from repro.backends.base import Backend
 from repro.backends.interpreter import InterpreterBackend
-from repro.backends.pallas_backend import (CompiledProgram, PallasBackend,
-                                           compile_program)
+from repro.backends.pallas_backend import (CompiledProgram, CompiledSegment,
+                                           PallasBackend, compile_program,
+                                           compile_segment)
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.configs.feather import FeatherConfig
@@ -31,8 +32,8 @@ if TYPE_CHECKING:  # pragma: no cover
 
 __all__ = [
     "Backend", "InterpreterBackend", "PallasBackend", "CompiledProgram",
-    "compile_program", "BACKENDS", "get_backend", "run", "cross_check",
-    "run_sharded",
+    "CompiledSegment", "compile_program", "compile_segment", "BACKENDS",
+    "get_backend", "run", "cross_check", "run_sharded",
 ]
 
 BACKENDS: dict[str, type[Backend]] = {

@@ -69,6 +69,26 @@ class Backend(abc.ABC):
         A :class:`ShardedProgram` argument dispatches to
         :meth:`run_sharded`."""
 
+    # -- chained-segment execution -------------------------------------------
+    def run_segment(self, segment, tensors: dict[str, np.ndarray] | None
+                    = None) -> dict[str, np.ndarray]:
+        """Execute a :class:`~repro.core.program.FusedSegment`.
+
+        ``tensors`` carries the segment input as ``'I'`` and layer l's
+        weight as ``'W{l}'``.  The base implementation replays the
+        chained per-layer Programs on this backend (the chain semantics
+        -- on-chip commit, elided/retargeted inputs -- come from the
+        Programs themselves); subclasses with a genuinely fused path
+        (the Pallas backend's one-launch megakernel) override it.
+        """
+        tensors = tensors or {}
+        for layer, prog in enumerate(segment.programs):
+            t = {"W": tensors[f"W{layer}"]}
+            if layer == 0 and "I" in tensors:
+                t["I"] = tensors["I"]
+            self.run_program(prog, t)
+        return self.outputs
+
     # -- multi-array execution ----------------------------------------------
     def _make_shard_backend(self) -> "Backend":
         """A fresh executor for one logical array (subclasses thread their

@@ -37,6 +37,15 @@ On CPU the kernel runs in Pallas interpret mode (semantics-exact); on TPU
 the identical call sites lower to Mosaic.  Chained Programs resolve their
 elided/retargeted inputs against the backend's previous outputs, mirroring
 the machine's on-chip commit.
+
+Fused segments: ``run_segment`` compiles a whole ``program.chain``-ed
+segment (a :class:`~repro.core.program.FusedSegment`) to ONE
+``pallas_call`` -- the chained activation stays resident in VMEM scratch
+across layers, each layer's weight streams in host-K tiles against it,
+and each layer's Activation drain fuses at its final-K store
+(``kernels.fused_chain``).  One fused compile replaces one compile per
+GEMM, and the intermediate HBM round trips the per-layer path pays
+vanish structurally.
 """
 
 from __future__ import annotations
@@ -90,6 +99,50 @@ class CompiledProgram:
             "fused_act": self.fused_act,
             "residency": dict(self.residency),
         }
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledSegment:
+    """Fused-segment artifact: ONE kernel launch for a chained segment.
+
+    Mirrors the :class:`~repro.core.program.FusedSegment` geometry with
+    the backend's ``max_block`` clamp applied; ``dims`` are the per-layer
+    host (K, N) weight shapes the launch binds.
+    """
+    bm: int                         # resident-activation rows per grid step
+    layer_bks: tuple[int, ...]      # per-layer weight K-streaming tile
+    acts: tuple[str | None, ...]    # per-layer in-kernel activation
+    dims: tuple[tuple[int, int], ...]
+    out_name: str
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.dims)
+
+    def describe(self) -> dict:
+        return {
+            "n_layers": self.n_layers,
+            "bm": self.bm,
+            "layer_bks": self.layer_bks,
+            "acts": self.acts,
+            "dims": self.dims,
+        }
+
+
+def compile_segment(segment, *, max_block: int = 2048) -> CompiledSegment:
+    """Clamp the FusedSegment launch geometry to the backend's working-set
+    bound.  One call == one fused compile (vs one per layer unfused)."""
+    from repro.kernels.fused_chain import FUSED_ACT_FNS
+    for act in segment.acts:
+        if act is not None and act not in FUSED_ACT_FNS:
+            raise ValueError(f"activation {act!r} has no fused kernel")
+    return CompiledSegment(
+        bm=max(1, min(segment.bm, max_block)),
+        layer_bks=tuple(max(1, min(bk, max_block))
+                        for bk in segment.layer_bks),
+        acts=tuple(segment.acts),
+        dims=tuple((p.gemm.k, p.gemm.n) for p in segment.programs),
+        out_name=segment.out_name)
 
 
 def _load_names(program: "Program") -> tuple[str | None, str]:
@@ -176,6 +229,7 @@ class PallasBackend(Backend):
         # its id reused; keeping the Program alongside pins the id and lets
         # us verify the hit.  Bounded so a long-lived backend cannot leak.
         self._cache: dict[int, tuple["Program", CompiledProgram]] = {}
+        self._fused_cache: dict[int, tuple[Any, CompiledSegment]] = {}
         self._cache_limit = 128
         # Optional shared artifact store (runtime.cache.ProgramCache):
         # keyed *structurally*, so fresh-but-equivalent Program objects
@@ -204,6 +258,49 @@ class PallasBackend(Backend):
             self._cache.pop(next(iter(self._cache)))
         self._cache[key] = (program, comp)
         return comp
+
+    def compile_fused(self, segment) -> CompiledSegment:
+        """Fused-tier compile: one artifact per segment (structural key
+        via the shared ProgramCache when attached), so serving a
+        multi-layer cell costs ONE compile where the per-layer path pays
+        one per GEMM."""
+        key = id(segment)
+        hit = self._fused_cache.get(key)
+        if hit is not None and hit[0] is segment:
+            return hit[1]
+        comp = None
+        if self.compile_cache is not None:
+            comp = self.compile_cache.lookup_fused(segment, self.max_block)
+        if comp is None:
+            comp = compile_segment(segment, max_block=self.max_block)
+            self.n_compiles += 1
+            if self.compile_cache is not None:
+                self.compile_cache.store_fused(segment, self.max_block,
+                                               comp)
+        if len(self._fused_cache) >= self._cache_limit:
+            self._fused_cache.pop(next(iter(self._fused_cache)))
+        self._fused_cache[key] = (segment, comp)
+        return comp
+
+    def run_segment(self, segment, tensors=None):
+        """ONE ``pallas_call`` for the whole chained segment: the
+        resident activation slab flows through every layer in VMEM
+        scratch; only the segment input and the final output cross HBM.
+        """
+        comp = self.compile_fused(segment)
+        tensors = tensors or {}
+        x = self._resolve("I", tensors, False)
+        ws = [jax.numpy.asarray(
+                  self._resolve(f"W{layer}", tensors, False),
+                  jax.numpy.float32)
+              for layer in range(comp.n_layers)]
+        out = kernel_ops.fused_chain(
+            jax.numpy.asarray(x, jax.numpy.float32), ws,
+            bm=comp.bm, bks=comp.layer_bks, acts=comp.acts,
+            interpret=self.interpret, out_dtype=jax.numpy.float32)
+        out = np.asarray(out)
+        self.outputs[comp.out_name] = out
+        return self.outputs
 
     def _resolve(self, name: str | None, tensors, elided: bool):
         if name is None:
@@ -328,3 +425,4 @@ class PallasBackend(Backend):
         super().reset()
         self._committed = None
         self._cache = {}
+        self._fused_cache = {}

@@ -41,7 +41,6 @@ import numpy as np
 
 from repro.configs.feather import FeatherConfig
 from repro.core import isa
-from repro.core import vn as vnlib
 from repro.core.layout import VNLayout
 from repro.core.program import Program, TraceOp  # noqa: F401 (re-export)
 
@@ -138,6 +137,45 @@ def _address_tables(lay: VNLayout, red: int, free: int):
     return jnp.asarray(first_row, jnp.int32), jnp.asarray(col, jnp.int32)
 
 
+#: Device-side activation twins, keyed by the Activation drain's registry
+#: name.  Numerics mirror ``runtime.executable.ACTIVATIONS`` (same eps,
+#: same max-subtraction), so a chained drain can apply its activation
+#: without pulling the output block to the host.
+def _jnp_softmax(x):
+    z = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+_JNP_ACTS = {
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "swiglu": jax.nn.silu,
+    "geglu": jax.nn.gelu,
+    "softmax": _jnp_softmax,
+    "rmsnorm": lambda x: x / jnp.sqrt(
+        jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6),
+    "layernorm": lambda x: (x - jnp.mean(x, axis=-1, keepdims=True))
+    / jnp.sqrt(jnp.var(x, axis=-1, keepdims=True) + 1e-6),
+}
+
+
+def _to_vns(src, operand: str, vn: int):
+    """Device twin of ``vn.to_weight_vns`` / ``to_input_vns``: VN-ify the
+    reduction rank with zero padding, without leaving the device."""
+    src = jnp.asarray(src, jnp.float32)
+    if operand == "W":                      # [K, N] -> [rows, N, vn]
+        k, n = src.shape
+        rows = -(-k // vn)
+        sp = jnp.pad(src, ((0, rows * vn - k), (0, 0)))
+        return jnp.transpose(sp.reshape(rows, vn, n), (0, 2, 1))
+    m, k = src.shape                        # [M, K] -> [rows, M, vn]
+    rows = -(-k // vn)
+    sp = jnp.pad(src, ((0, 0), (0, rows * vn - k)))
+    return jnp.transpose(sp.reshape(m, rows, vn), (1, 0, 2))
+
+
 def _next_pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
 
@@ -158,15 +196,17 @@ class FeatherMachine:
         self.reset()
 
     def reset(self):
-        self._bufs: dict[str, np.ndarray | None] = {"stationary": None,
-                                                    "streaming": None}
-        self._buf_dev: dict[str, tuple[int, Any]] = {}
+        # operand buffers are DEVICE arrays: Loads scatter host slices in,
+        # on-chip commits place straight from the device accumulator, so a
+        # chained segment never round-trips through the host between layers
+        self._bufs: dict[str, Any | None] = {"stationary": None,
+                                             "streaming": None}
         self._buf_ver = {"stationary": 0, "streaming": 0}
         self.layouts: dict[str, VNLayout] = {}
         self.layout_extents: dict[str, tuple[int, int]] = {}
         self.o_acc = None
         self.o_extents: tuple[int, int] | None = None
-        self._assembled: np.ndarray | None = None
+        self._assembled = None              # device array (drained tiles)
         self.em: isa.ExecuteMapping | None = None
         self.df = isa.Dataflow.WOS
         self.outputs: dict[str, np.ndarray] = {}
@@ -186,11 +226,7 @@ class FeatherMachine:
                 else "streaming")
 
     def _buf_device(self, role: str):
-        ver, arr = self._buf_dev.get(role, (-1, None))
-        if ver != self._buf_ver[role]:
-            arr = jnp.asarray(self._bufs[role])
-            self._buf_dev[role] = (self._buf_ver[role], arr)
-        return arr
+        return self._bufs[role]            # already device-resident
 
     # -- instruction semantics -----------------------------------------------
     def step(self, op: TraceOp, tensors):
@@ -210,42 +246,44 @@ class FeatherMachine:
             n_ext = op.meta["n_extent"]
             self.o_acc = jnp.zeros((m_ext, n_ext), dtype=jnp.float32)
             self.o_extents = (m_ext, n_ext)
-            self._assembled = np.zeros((m_ext, n_ext), dtype=np.float32)
+            self._assembled = jnp.zeros((m_ext, n_ext), dtype=jnp.float32)
             self.layouts["O"] = op.meta.get("layout")
         elif isinstance(inst, isa.Load):
             self._load(op, tensors)
         elif isinstance(inst, isa.Activation):
-            self._pending_activation = op.meta.get("fn")
+            self._pending_activation = (op.meta.get("fn"),
+                                        op.meta.get("name"))
         elif isinstance(inst, isa.Write):
             self._write(op)
         else:
             raise NotImplementedError(type(inst))
 
     # -- VN placement shared by Load and on-chip commit ----------------------
-    def _place(self, src: np.ndarray, operand: str, lay: VNLayout,
+    def _place(self, src, operand: str, lay: VNLayout,
                role: str, *, vn_row0: int = 0, col0: int = 0,
                reset: bool = True) -> tuple[int, int]:
         """VN-ify ``src`` and write it into ``role``'s buffer through
         ``lay`` at the given VN-array offset; returns the placed extents.
 
-        The stationary tensor is VN-ified along its reduction rank as a
+        ``src`` may be a host tensor (Load) or a device array (on-chip
+        commit -- the whole placement stays on the device, so a chained
+        segment reuses the accumulator without a host round trip).  The
+        stationary tensor is VN-ified along its reduction rank as a
         [K, free] matrix regardless of dataflow; operand kind selects the
         grouping convention.
         """
-        if operand == "W":
-            vns = vnlib.to_weight_vns(src, lay.vn_size)
-        else:
-            vns = vnlib.to_input_vns(src, lay.vn_size)
+        vns = _to_vns(src, "W" if operand == "W" else "I", lay.vn_size)
         depth = self._depth(lay.rows_needed)
         buf = self._bufs[role]
         if reset or buf is None or buf.shape != (depth, lay.aw):
-            buf = np.zeros((depth, lay.aw), dtype=np.float32)
+            buf = jnp.zeros((depth, lay.aw), dtype=jnp.float32)
         red, free = vns.shape[0], vns.shape[1]
         r_idx, c_idx = np.meshgrid(np.arange(red), np.arange(free),
                                    indexing="ij")
         first_row, col = lay.address(r_idx + vn_row0, c_idx + col0)
-        for e in range(lay.vn_size):
-            buf[first_row + e, col] = vns[:, :, e]
+        rows = first_row[..., None] + np.arange(lay.vn_size)
+        cols = np.broadcast_to(col[..., None], rows.shape)
+        buf = buf.at[rows, cols].set(vns)
         self._bufs[role] = buf
         self._buf_ver[role] += 1
         return red, free
@@ -259,7 +297,6 @@ class FeatherMachine:
             src = self.outputs.get(name)
         if src is None:
             raise KeyError(f"Load refers to unknown tensor {name!r}")
-        src = np.asarray(src)
         sl = meta.get("slice")
         if sl is not None:
             r0, r1, c0, c1 = sl
@@ -337,13 +374,21 @@ class FeatherMachine:
         meta = op.meta
         ms, ns = self.o_extents
         m0, m1, n0, n1 = meta.get("slice") or (0, ms, 0, ns)
-        block = np.asarray(self.o_acc[m0:m1, n0:n1])
+        block = self.o_acc[m0:m1, n0:n1]        # device slice, no host pull
         if self._pending_activation is not None:
             # applied per drained tile: exact for elementwise activations;
-            # row-wise ones (softmax/norms) need full-row tiles (n_n == 1)
-            block = np.asarray(self._pending_activation(block))
+            # row-wise ones (softmax/norms) need full-row tiles (n_n == 1).
+            # Registry activations run their device twin; an unknown
+            # callable is the one case that round-trips through the host.
+            fn, name = self._pending_activation
+            jfn = _JNP_ACTS.get(name)
+            if jfn is not None:
+                block = jfn(block)
+            else:
+                block = jnp.asarray(np.asarray(fn(np.asarray(block))),
+                                    jnp.float32)
             self._pending_activation = None
-        self._assembled[m0:m1, n0:n1] = block
+        self._assembled = self._assembled.at[m0:m1, n0:n1].set(block)
         out = self._assembled
         if meta.get("transpose"):
             out = out.T
@@ -352,10 +397,10 @@ class FeatherMachine:
             # paper §IV-G: layer i's OB commits on-chip to the next operand
             # buffer (IO-S: stationary, WO-S: streaming); the output becomes
             # layer i+1's input without an off-chip round trip, and layer
-            # i+1's SetIVNLayout/Load are elided.
+            # i+1's SetIVNLayout/Load are elided.  ``out`` is a device
+            # array, so the commit placement stays on the device end to end.
             lay = meta["layout"]
-            red, free = self._place(np.asarray(out), "I", lay,
-                                    meta["commit_to"])
+            red, free = self._place(out, "I", lay, meta["commit_to"])
             self.layouts["I"] = lay
             self.layout_extents["I"] = (red, free)
 

@@ -390,10 +390,79 @@ def _prescore(gemm: Gemm, dims: Tiling, cfg: FeatherConfig) -> float:
                instr / cfg.instr_bw)
 
 
+def _prescore_batch(gemm: Gemm, cfg: FeatherConfig,
+                    choices: list[MappingChoice]
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorised twin of ``tiling()`` feasibility + ``_prescore()`` over
+    ALL enumerated candidates at once (one numpy pass instead of a
+    per-candidate Python loop).  Returns ``(scores, feasible)``; the
+    formulas replicate the scalar pair exactly, so the shortlist ranking
+    is bit-identical to the loop it replaces (asserted in tests)."""
+    ah, aw = cfg.ah, cfg.aw
+    wos = np.fromiter((c.df == isa.Dataflow.WOS for c in choices),
+                      dtype=bool, count=len(choices))
+    as_i64 = lambda attr: np.fromiter(  # noqa: E731
+        (getattr(c, attr) for c in choices), dtype=np.int64,
+        count=len(choices))
+    vn = as_i64("vn")
+    m_t, k_t, n_t = as_i64("m_t"), as_i64("k_t"), as_i64("n_t")
+    n_kg, n_nb, dup = as_i64("n_kg"), as_i64("n_nb"), as_i64("dup")
+
+    ms = np.where(wos, gemm.m, gemm.n)
+    ks = np.full_like(vn, gemm.k)
+    ns = np.where(wos, gemm.n, gemm.m)
+
+    feas = (vn >= 1) & (vn <= ah)
+    vn_s = np.maximum(vn, 1)                  # div-safe; masked by feas
+    # snap_tiling: clip to the problem, snap k_t to a VN multiple
+    m_t = np.minimum(m_t, ms)
+    k_t = np.minimum(k_t, ks)
+    n_t = np.minimum(n_t, ns)
+    feas &= (m_t >= 1) & (k_t >= 1) & (n_t >= 1)
+    k_t = np.where(k_t < ks, np.maximum(vn_s, (k_t // vn_s) * vn_s), k_t)
+    # capacity + shape feasibility (tiling())
+    feas &= n_kg * n_nb * dup <= aw
+    feas &= m_t * k_t <= cfg.str_bytes
+    feas &= k_t * n_t <= cfg.sta_bytes
+    feas &= m_t * n_t * cfg.acc_bytes <= cfg.ob_bytes
+
+    m_ts = np.maximum(m_t, 1)
+    k_ts = np.maximum(k_t, 1)
+    n_ts = np.maximum(n_t, 1)
+    n_m = -(-ms // m_ts)
+    n_n = -(-ns // n_ts)
+    n_k = -(-ks // k_ts)
+    n_tiles = n_m * n_n * n_k
+    kg_tiles = -(-k_t // vn_s)
+    nb_tiles = -(-n_t // vn_s)
+    invocations = ((-(-kg_tiles // np.maximum(n_kg, 1)))
+                   * (-(-nb_tiles // np.maximum(n_nb, 1))))
+    t_steps = -(-m_t // np.maximum(dup, 1))
+    cycles_per_inv = (np.maximum(t_steps * vn, vn * vn)
+                      + vn + cfg.birrd_stages + 2)
+
+    compute = (n_tiles * invocations * cycles_per_inv).astype(np.float64)
+    elem = cfg.elem_bytes
+    i_bytes = ms * ks * elem
+    w_bytes = ks * ns * elem
+    loads = (i_bytes * np.where(i_bytes <= cfg.str_bytes, 1, n_n)
+             + w_bytes * np.where(ks * n_t <= cfg.sta_bytes, 1, n_m))
+    store = ms * ns * elem
+    es_per_inv = -(-t_steps // max(cfg.vn_slots_per_col, 1))
+    instr = n_tiles * invocations * (
+        cfg.bits_execute_mapping()
+        + cfg.bits_execute_streaming() * es_per_inv) / 8.0
+    score = np.maximum.reduce([
+        compute, loads / cfg.in_bw, store / cfg.out_bw,
+        instr / cfg.instr_bw])
+    return score, feas
+
+
 def search(gemm: Gemm, cfg: FeatherConfig, top_k: int = 8,
            shortlist: int = 10,
            fixed_input_vn: int | None = None,
-           fixed_input_order: int | None = None) -> Plan:
+           fixed_input_order: int | None = None,
+           vectorized: bool = True) -> Plan:
     """Mapping-first, layout-second co-search returning the best Plan.
 
     ``fixed_input_vn`` / ``fixed_input_order`` implement the paper's
@@ -401,8 +470,14 @@ def search(gemm: Gemm, cfg: FeatherConfig, top_k: int = 8,
     compatibility): when layer i's output layout is already committed,
     layer i+1 may only consider mappings whose input VN size matches and
     whose input layout order equals the committed one.
+
+    ``vectorized`` prescores ALL enumerated candidates in one numpy batch
+    (``_prescore_batch``) and materialises ``Tiling`` objects only for
+    the shortlist; ``False`` keeps the per-candidate Python loop (same
+    ranking -- retained as the reference and for the before/after
+    benchmark in ``benchmarks/run.py``).
     """
-    candidates: list[tuple[float, MappingChoice, Tiling]] = []
+    pool: list[MappingChoice] = []
     seen = set()
     for choice in enumerate_choices(gemm, cfg):
         if fixed_input_vn is not None and choice.vn != fixed_input_vn:
@@ -414,14 +489,27 @@ def search(gemm: Gemm, cfg: FeatherConfig, top_k: int = 8,
         if key in seen:
             continue
         seen.add(key)
-        dims = tiling(gemm, choice, cfg)
-        if dims is None:
-            continue
-        candidates.append((_prescore(gemm, dims, cfg), choice, dims))
+        pool.append(choice)
+
+    candidates: list[tuple[float, MappingChoice, Tiling]] = []
+    if vectorized and pool:
+        scores, feas = _prescore_batch(gemm, cfg, pool)
+        order = np.flatnonzero(feas)
+        order = order[np.argsort(scores[order], kind="stable")]
+        for i in order[:shortlist]:
+            dims = tiling(gemm, pool[i], cfg)   # exact, shortlist-only
+            if dims is not None:                # always true: same maths
+                candidates.append((float(scores[i]), pool[i], dims))
+    else:
+        for choice in pool:
+            dims = tiling(gemm, choice, cfg)
+            if dims is None:
+                continue
+            candidates.append((_prescore(gemm, dims, cfg), choice, dims))
+        candidates.sort(key=lambda x: x[0])
     if not candidates:
         raise ValueError(f"no feasible mapping for {gemm} on "
                          f"{cfg.ah}x{cfg.aw}")
-    candidates.sort(key=lambda x: x[0])
     # shortlist: lower to real Programs and score the actual tile streams.
     # Lowering is O(tiles), so huge candidate programs draw down a shared
     # tile budget -- at least 4 candidates are always fully lowered.

@@ -88,6 +88,18 @@ def _simulate(tiles: Sequence[TileCost], instr_bw: float, in_bw: float,
     return makespan, busy
 
 
+def hbm_traffic(tiles: Sequence[TileCost]) -> dict[str, float]:
+    """Off-chip byte totals of a tile stream (the quantities fused-segment
+    execution elides: a chained commit moves store bytes into out2stream
+    cycles, an elided input Load vanishes -- see Program.tile_costs)."""
+    return {
+        "load_bytes": sum(t.load_bytes for t in tiles),
+        "store_bytes": sum(t.store_bytes for t in tiles),
+        "fetch_bytes": sum(t.fetch_bytes for t in tiles),
+        "data_bytes": sum(t.load_bytes + t.store_bytes for t in tiles),
+    }
+
+
 def simulate(tiles: Sequence[TileCost], cfg) -> PerfResult:
     """cfg: FeatherConfig."""
     total, busy = _simulate(tiles, cfg.instr_bw, cfg.in_bw, cfg.out_bw)

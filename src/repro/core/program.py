@@ -22,6 +22,12 @@ Scale-out: :func:`shard_program` partitions a Program across a
 reduction epilogue) into a :class:`ShardedProgram` whose per-array
 sub-Programs keep all of the above exact per array.
 
+Fusion: :func:`fuse_segment` turns a ``chain()``-ed segment into a
+:class:`FusedSegment` -- the launch geometry for ONE compiled kernel
+covering the whole chain, with every interior activation resident
+on-chip (the kernel-level analog of the §IV-G commit) and the traffic
+accounting elided to match.
+
 Tiling & residency
 ------------------
 The loop nest is n-outer, m-mid, k-inner in the mapper's search
@@ -78,7 +84,9 @@ class TraceOp:
                        n1) in search orientation), final (bool), commit_to
                        (None | 'streaming' | 'stationary'), layout (commit
                        re-bind layout)
-      Activation:      fn (callable) applied to the drained output slice
+      Activation:      fn (callable) applied to the drained output slice,
+                       name (act registry key -- lets the machine apply a
+                       device-side twin without leaving the accelerator)
     """
     inst: isa.Instruction
     meta: dict[str, Any] = dataclasses.field(default_factory=dict)
@@ -239,6 +247,21 @@ class Program:
     activation: Callable | None = None
     act_name: str = "none"
     input_elided: bool = False
+    #: per-Program memo of trace-derived aggregates (tile-cost streams,
+    #: instruction bits): ``perf.simulate`` and the MINISA byte accounting
+    #: consume the same stream several times per Program (minisa vs micro
+    #: control, mapper scoring, runtime perf_stats), so regenerating it
+    #: each call is pure waste.  Keyed by the derivation arguments; never
+    #: part of equality/pickling semantics.
+    _memo: dict = dataclasses.field(default_factory=dict, repr=False,
+                                    compare=False)
+
+    def __getstate__(self):
+        # the memo is derivable state: keep pickles (ProgramCache disk
+        # persistence) lean and deterministic
+        state = self.__dict__.copy()
+        state["_memo"] = {}
+        return state
 
     # -- structure -----------------------------------------------------------
     @property
@@ -264,6 +287,9 @@ class Program:
 
     # -- byte accounting (exact: equals trace_bits of the flat stream) -------
     def minisa_bits(self) -> int:
+        hit = self._memo.get("minisa_bits")
+        if hit is not None:
+            return hit
         cfg = self.cfg
         bits = sum(op.inst.bitwidth(cfg) for op in self.prologue)
         block_bits: dict[int, int] = {}
@@ -272,6 +298,7 @@ class Program:
             if key not in block_bits:
                 block_bits[key] = tile.exec_block.bits(cfg)
             bits += block_bits[key] + _fixed_bits(tile, cfg)
+        self._memo["minisa_bits"] = bits
         return bits
 
     def minisa_bytes(self) -> float:
@@ -302,14 +329,34 @@ class Program:
 
     # -- perf-model tile stream (THE tile stream, not a re-derivation) -------
     def tile_costs(self, control: str = "minisa",
-                   max_tiles: int = 4096) -> list[perf.TileCost]:
+                   max_tiles: int = 4096, *,
+                   elide_input_loads: bool = False,
+                   on_chip_store: bool = False) -> list[perf.TileCost]:
         """control in {'minisa', 'micro'} selects the fetch stream.
+
+        A Write whose meta marks an on-chip commit (``commit_to``, paper
+        §IV-G) never crosses HBM: it is costed as OB->operand-buffer
+        commit cycles (out2stream) instead of store bytes, so the data
+        traffic the model charges is the traffic the chain actually
+        ships.  ``elide_input_loads`` / ``on_chip_store`` extend the same
+        accounting to fused-segment execution, where *every* interior
+        activation stays in VMEM: input-operand Loads (the consumer side
+        of the chain) and all output Writes (the producer side) are kept
+        on-chip.
 
         Streams longer than ``max_tiles`` are run-length merged (k
         consecutive tiles -> one cost with summed fields); the engine
         recurrence is linear over uniform runs, so merging preserves the
         makespan to within one tile's skew.
+
+        Results are memoised per (control, max_tiles, flags) -- see
+        ``_memo``.
         """
+        memo_key = ("tile_costs", control, max_tiles, elide_input_loads,
+                    on_chip_store)
+        hit = self._memo.get(memo_key)
+        if hit is not None:
+            return hit
         cfg = self.cfg
         micro = MicroModel(cfg) if control == "micro" else None
         elem = cfg.elem_bytes
@@ -329,15 +376,27 @@ class Program:
             else:
                 fetch = (blk_bits + fixed_bits
                          + (prologue_bits if i == 0 else 0)) / 8.0
-            load_bytes = sum(op.inst.length for op in tile.loads) * elem
-            store = sum(op.inst.length for op in tile.drains
-                        if isinstance(op.inst, isa.Write)) * elem
+            load_bytes = sum(
+                op.inst.length for op in tile.loads
+                if not (elide_input_loads
+                        and op.meta.get("operand") == "I")) * elem
+            store = 0
+            commit_elems = 0
+            for op in tile.drains:
+                if not isinstance(op.inst, isa.Write):
+                    continue
+                if on_chip_store or op.meta.get("commit_to") is not None:
+                    commit_elems += op.inst.length
+                else:
+                    store += op.inst.length
             o2s = (tile.m_ext * tile.n_ext) / cfg.aw if tile.last_k else 0.0
+            o2s += commit_elems / cfg.aw
             out.append(perf.TileCost(
                 fetch_bytes=fetch, load_bytes=load_bytes,
                 compute_cycles=blk_cycles, out2stream_cycles=o2s,
-                store_bytes=float(store), macs=float(tile.macs)))
+                store_bytes=float(store * elem), macs=float(tile.macs)))
         if len(out) <= max_tiles:
+            self._memo[memo_key] = out
             return out
         merged: list[perf.TileCost] = []
         base, rem = divmod(len(out), max_tiles)
@@ -353,6 +412,7 @@ class Program:
                 out2stream_cycles=sum(t.out2stream_cycles for t in run),
                 store_bytes=sum(t.store_bytes for t in run),
                 macs=sum(t.macs for t in run)))
+        self._memo[memo_key] = merged
         return merged
 
 
@@ -587,7 +647,7 @@ def lower(gemm, choice, cfg: FeatherConfig, *,
                                     act_name, 0),
                                 length=m_ext * n_ext,
                                 target=isa.BufferTarget.STREAMING),
-                            {"fn": activation}))
+                            {"fn": activation, "name": act_name}))
                     final = (i_n == n_n - 1 and im == n_m - 1)
                     wmeta: dict[str, Any] = {
                         "tensor": out_name, "transpose": not wos,
@@ -701,6 +761,240 @@ def chain(programs: list[Program], lower_fn: Callable = None
             cur = _retarget_input(cur, retarget)
         out.append(cur)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Fused segments (chained-layer elision compiled to ONE kernel launch)
+# ---------------------------------------------------------------------------
+
+#: Elementwise activations the fused kernel applies at a layer's final-K
+#: store.  Mirrors ``kernels.nest_gemm.ACT_FNS`` (asserted in tests); kept
+#: as names here so the core IR stays JAX-free.
+FUSED_ELEMENTWISE_ACTS = frozenset({"relu", "gelu", "silu"})
+
+#: The GEMM stream carries no gate operand, so the runtime's ACTIVATIONS
+#: registry maps the gated activations to their ungated halves; the fused
+#: kernel follows the identical convention.
+FUSED_ACT_ALIASES = {"swiglu": "silu", "geglu": "gelu"}
+
+#: Default VMEM working-set budget for one fused segment, in elements
+#: (weights + per-boundary activation scratch).  4M fp32 elements == 16 MB,
+#: one TPU core's VMEM; segments over budget fall back to per-layer
+#: launches rather than silently thrash.
+FUSED_VMEM_BUDGET = 4 << 20
+
+
+def fusion_illegal_reason(programs: list["Program"], *,
+                          vmem_budget: int = FUSED_VMEM_BUDGET
+                          ) -> str | None:
+    """Why this chain cannot execute as one fused kernel (None == legal).
+
+    Legal segments are shape-compatible ``wired`` chains: layer i's host
+    output [m, n_i] is exactly layer i+1's host input [m, k_{i+1}].
+    Activations must be applicable inside the kernel: elementwise
+    (``FUSED_ELEMENTWISE_ACTS``) anywhere; row-wise ones only when the
+    layer's accumulator holds full host rows (WO-S -- the same condition
+    under which the lowering admits them in-Program).  Sharded segments
+    fall back: on-chip residency is per-array state and does not cross
+    the mesh boundary.
+    """
+    if len(programs) < 2:
+        return "segment has fewer than 2 layers"
+    for i, prog in enumerate(programs):
+        if isinstance(prog, ShardedProgram):
+            return f"layer {i} is mesh-sharded"
+        if i > 0:
+            prev = programs[i - 1].gemm
+            g = prog.gemm
+            if (prev.m, prev.n) != (g.m, g.k):
+                return (f"layer {i - 1} output {(prev.m, prev.n)} != "
+                        f"layer {i} input {(g.m, g.k)}")
+        act = FUSED_ACT_ALIASES.get(prog.act_name, prog.act_name)
+        if prog.activation is not None and act == "none":
+            return (f"layer {i} carries an anonymous activation callable "
+                    f"the kernel cannot reproduce by name")
+        if act != "none" and act not in FUSED_ELEMENTWISE_ACTS:
+            if act not in ROW_WISE_ACTIVATIONS:
+                return f"layer {i} activation {act!r} is not fusable"
+            if prog.choice.df != isa.Dataflow.WOS:
+                return (f"layer {i} row-wise activation {act!r} needs the "
+                        f"host-row accumulator orientation (WO-S)")
+    # necessary condition only: the weights are resident regardless of the
+    # M tile.  fuse_segment() additionally bounds the bm-dependent slabs
+    # (input + interior scratch), shrinking bm before falling back.
+    elems = sum(p.gemm.k * p.gemm.n for p in programs)
+    if elems > vmem_budget:
+        return (f"segment weight working set {elems} elements exceeds the "
+                f"fused VMEM budget {vmem_budget}")
+    return None
+
+
+def fusable(programs: list["Program"], *,
+            vmem_budget: int = FUSED_VMEM_BUDGET) -> bool:
+    return fusion_illegal_reason(programs, vmem_budget=vmem_budget) is None
+
+
+@dataclasses.dataclass
+class FusedSegment:
+    """A chained segment compiled as ONE kernel launch (paper §IV-G at
+    kernel granularity).
+
+    The per-layer Programs stay the source of truth for instruction
+    accounting and the fallback path; the segment adds the *fused launch
+    geometry*: every layer's tiling snapped to one common host-M tile
+    (``bm`` rows of the chained activation stay resident in VMEM scratch
+    across all layers) and a per-layer host-K tile (``layer_bks``) that
+    streams each layer's weight against the resident activation.
+
+    Data-traffic accounting (:meth:`tile_costs`) keeps every interior
+    boundary on-chip -- interior Writes are costed as OB-commit cycles
+    and interior input Loads vanish -- so ``perf.simulate`` over the
+    fused stream charges exactly the HBM bytes the fused kernel ships.
+    """
+    programs: list[Program]
+    bm: int                       # common host-M tile (resident rows)
+    layer_bks: tuple[int, ...]    # per-layer host-K weight-streaming tile
+    acts: tuple[str | None, ...]  # per-layer in-kernel activation name
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.programs)
+
+    @property
+    def cfg(self) -> FeatherConfig:
+        return self.programs[0].cfg
+
+    @property
+    def out_name(self) -> str:
+        return self.programs[-1].out_name
+
+    @property
+    def m(self) -> int:
+        return self.programs[0].gemm.m
+
+    @property
+    def k_in(self) -> int:
+        return self.programs[0].gemm.k
+
+    @property
+    def widths(self) -> tuple[int, ...]:
+        """Per-layer output widths (interior ones live in VMEM scratch)."""
+        return tuple(p.gemm.n for p in self.programs)
+
+    @property
+    def macs(self) -> int:
+        return sum(p.macs for p in self.programs)
+
+    # -- instruction accounting (the chained stream is unchanged) ------------
+    def minisa_bits(self) -> int:
+        return sum(p.minisa_bits() for p in self.programs)
+
+    def minisa_bytes(self) -> float:
+        return self.minisa_bits() / 8.0
+
+    # -- data-traffic accounting ---------------------------------------------
+    def layer_tile_costs(self, layer: int, control: str = "minisa",
+                         max_tiles: int = 4096) -> list:
+        """Layer ``layer``'s tile stream under fused execution: interior
+        stores stay on-chip, non-first layers read their input from the
+        resident activation (no HBM Load)."""
+        return self.programs[layer].tile_costs(
+            control, max_tiles,
+            elide_input_loads=layer > 0,
+            on_chip_store=layer < self.n_layers - 1)
+
+    def tile_costs(self, control: str = "minisa",
+                   max_tiles: int = 4096) -> list:
+        out = []
+        for layer in range(self.n_layers):
+            out.extend(self.layer_tile_costs(layer, control, max_tiles))
+        return out
+
+    def hbm_bytes(self) -> float:
+        """Off-chip data bytes of the fused *machine-model* tile stream
+        (loads + stores after interior elision)."""
+        return sum(t.load_bytes + t.store_bytes for t in self.tile_costs())
+
+    # -- kernel-launch traffic (what the compiled backend actually ships) ----
+    def kernel_hbm_bytes(self) -> float:
+        """Bytes the ONE fused launch moves across HBM: the segment input,
+        every layer's weight, the final output -- nothing else."""
+        elem = self.cfg.elem_bytes
+        m = self.m
+        return elem * (m * self.k_in
+                       + sum(p.gemm.k * p.gemm.n for p in self.programs)
+                       + m * self.programs[-1].gemm.n)
+
+    def per_layer_kernel_hbm_bytes(self) -> float:
+        """Bytes L separate per-layer launches move: each launch reads
+        its input from HBM and writes its output back, so every interior
+        activation round-trips."""
+        elem = self.cfg.elem_bytes
+        m = self.m
+        return elem * sum(m * p.gemm.k + p.gemm.k * p.gemm.n
+                          + m * p.gemm.n for p in self.programs)
+
+    def elided_hbm_bytes(self) -> float:
+        """Intermediate traffic fusion keeps on-chip: one Write + one
+        (re-)Load of every interior activation."""
+        return self.per_layer_kernel_hbm_bytes() - self.kernel_hbm_bytes()
+
+    def describe(self) -> dict:
+        return {
+            "n_layers": self.n_layers,
+            "m": self.m,
+            "widths": (self.k_in,) + self.widths,
+            "bm": self.bm,
+            "layer_bks": self.layer_bks,
+            "acts": self.acts,
+            "hbm_bytes_fused": self.kernel_hbm_bytes(),
+            "hbm_bytes_per_layer": self.per_layer_kernel_hbm_bytes(),
+            "hbm_bytes_elided": self.elided_hbm_bytes(),
+        }
+
+
+def fuse_segment(programs: list["Program"], *,
+                 vmem_budget: int = FUSED_VMEM_BUDGET
+                 ) -> FusedSegment | None:
+    """Build the fused launch geometry for a chained segment, or None
+    when the segment must fall back to per-layer execution.
+
+    The common M tile is the tightest of the layers' snapped host-M
+    tiles (every layer's mapping stays honoured -- a coarser layer just
+    sees its tile revisited); each layer's host-K tile becomes its
+    weight-streaming granularity against the resident activation.  The
+    full VMEM working set -- resident weights plus the bm-row input and
+    interior-scratch slabs -- must fit ``vmem_budget``: bm shrinks to
+    fit, and only when even one row cannot fit does the segment fall
+    back to per-layer launches.
+    """
+    if fusion_illegal_reason(programs, vmem_budget=vmem_budget) is not None:
+        return None
+    m = programs[0].gemm.m
+    bm = m
+    bks = []
+    for prog in programs:
+        snapped = snap_tiling(prog.gemm, prog.choice, prog.cfg)
+        if snapped is None:       # lower() would have raised already
+            return None
+        m_t, k_t, n_t = snapped
+        wos = prog.choice.df == isa.Dataflow.WOS
+        bm = min(bm, m_t if wos else n_t)
+        bks.append(max(1, min(k_t, prog.gemm.k)))
+    weight_elems = sum(p.gemm.k * p.gemm.n for p in programs)
+    # bm-row slabs: input block, every interior scratch, the output block
+    row_elems = programs[0].gemm.k + sum(p.gemm.n for p in programs)
+    bm_fit = (vmem_budget - weight_elems) // max(row_elems, 1)
+    if bm_fit < 1:
+        return None               # not even one resident row fits
+    bm = min(bm, bm_fit)
+    acts = tuple(
+        None if p.act_name == "none"
+        else FUSED_ACT_ALIASES.get(p.act_name, p.act_name)
+        for p in programs)
+    return FusedSegment(
+        programs=list(programs), bm=max(1, min(bm, m)),
+        layer_bks=tuple(bks), acts=acts)
 
 
 # ---------------------------------------------------------------------------
@@ -922,4 +1216,6 @@ def _retarget_input(program: Program, source_name: str) -> Program:
         if any(a is not b for a, b in zip(loads, tile.loads)):
             tile = dataclasses.replace(tile, loads=loads)
         new_tiles.append(tile)
-    return dataclasses.replace(program, tiles=new_tiles)
+    # fresh memo: the rewired copy must not share trace-derived caches
+    # with (or leak them into) the source Program
+    return dataclasses.replace(program, tiles=new_tiles, _memo={})

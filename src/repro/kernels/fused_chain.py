@@ -1,0 +1,136 @@
+"""Fused chained-GEMM megakernel: one ``pl.pallas_call`` for a whole
+MINISA chained segment (paper §IV-G at kernel granularity).
+
+The per-layer NEST kernel (``nest_gemm.py``) launches once per GEMM, so
+every chained activation round-trips through HBM between launches even
+though the Program IR commits it on-chip.  This kernel is the compiled
+twin of that commit: the grid walks host-M blocks, and within one grid
+step a ``bm``-row slab of the activation flows through *all* layers of
+the segment without leaving VMEM --
+
+  layer l:  acc = sum_k  h[:, k:k+bk_l] @ W_l[k:k+bk_l, :]
+            (the layer's weight streamed in host-K tiles against the
+             resident activation slab, fp32 accumulate)
+            acc = act_l(acc)      at the final-K store -- the Activation
+                                  drain, fused exactly where the
+                                  interpreter applies it
+            h   = scratch_l <- acc   interior commit: the chained
+                                     activation lives in VMEM scratch,
+                                     never in HBM
+
+Only the segment input (one HBM read) and the last layer's output (one
+HBM write) cross the chip boundary; ``core/program.FusedSegment``'s
+traffic accounting charges exactly that.
+
+Row-wise activations (softmax / rmsnorm / layernorm) are legal here even
+though the per-layer kernel must defer them to the host: each layer's
+accumulator block spans the layer's FULL output width (weights are VMEM-
+resident per grid step), so a block holds complete host rows.  Their
+numerics mirror ``runtime.executable.ACTIVATIONS`` (same eps, same
+max-subtraction).
+
+On CPU the kernel runs in Pallas interpret mode; on TPU the identical
+call site lowers to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.nest_gemm import ACT_FNS
+
+
+def _softmax(x):
+    z = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _rmsnorm(x):
+    return x / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _layernorm(x):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) * (x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-6)
+
+
+#: Activations applicable inside the fused kernel: the elementwise set
+#: shared with the per-layer kernel, plus the row-wise ones (legal here
+#: because a fused block holds full output rows).
+FUSED_ACT_FNS = {
+    **ACT_FNS,
+    "softmax": _softmax,
+    "rmsnorm": _rmsnorm,
+    "layernorm": _layernorm,
+}
+
+
+def _fused_kernel(x_ref, *refs, dims, bks, acts):
+    """One bm-row slab through every layer of the segment."""
+    n_layers = len(dims)
+    w_refs = refs[:n_layers]
+    o_ref = refs[n_layers]
+    h_refs = refs[n_layers + 1:]          # interior VMEM commits
+    h = x_ref[...].astype(jnp.float32)
+    for layer, (k_l, n_l) in enumerate(dims):
+        acc = jnp.zeros((h.shape[0], n_l), jnp.float32)
+        bk = bks[layer]
+        for k0 in range(0, k_l, bk):      # stream the weight's K tiles
+            k1 = min(k0 + bk, k_l)
+            acc += jnp.dot(h[:, k0:k1], w_refs[layer][k0:k1, :],
+                           preferred_element_type=jnp.float32)
+        if acts[layer] is not None:       # Activation drain, fused
+            acc = FUSED_ACT_FNS[acts[layer]](acc)
+        if layer < n_layers - 1:
+            h_refs[layer][...] = acc      # on-chip commit (stays in VMEM)
+            h = h_refs[layer][...]
+        else:
+            o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bks", "acts", "interpret",
+                                    "out_dtype"))
+def fused_chain(x: jax.Array, *ws: jax.Array, bm: int,
+                bks: tuple[int, ...], acts: tuple[str | None, ...],
+                interpret: bool = False, out_dtype=None) -> jax.Array:
+    """O = act_{L-1}(... act_0(X @ W_0) ... @ W_{L-1}); M % bm == 0
+    (``kernels.ops.fused_chain`` pads).
+
+    One kernel launch for the whole chain: grid (M/bm,), each weight
+    VMEM-resident per grid step, interior activations in VMEM scratch.
+    """
+    m, k0 = x.shape
+    assert ws, "fused_chain needs at least one weight"
+    assert m % bm == 0, f"M={m} not divisible by bm={bm}"
+    dims = tuple(w.shape for w in ws)
+    k_prev = k0
+    for k_l, n_l in dims:
+        assert k_l == k_prev, f"chain shape mismatch: {k_prev} -> {k_l}"
+        k_prev = n_l
+    assert len(bks) == len(ws) and len(acts) == len(ws)
+    assert all(a is None or a in FUSED_ACT_FNS for a in acts), acts
+    n_out = dims[-1][1]
+    out_dtype = out_dtype or x.dtype
+
+    in_specs = [pl.BlockSpec((bm, k0), lambda i: (i, 0))]
+    in_specs += [pl.BlockSpec(dim, lambda i: (0, 0)) for dim in dims]
+    scratch = [pltpu.VMEM((bm, n_l), jnp.float32)
+               for _, n_l in dims[:-1]]
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, dims=dims, bks=tuple(bks),
+                          acts=tuple(acts)),
+        grid=(m // bm,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n_out), out_dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(x, *ws)

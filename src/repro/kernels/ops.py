@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_chain as _fc
 from repro.kernels import mamba_scan as _ms
 from repro.kernels import nest_gemm as _ng
 
@@ -56,6 +57,32 @@ def _rnd(x):
     while p * 2 <= x:
         p *= 2
     return p
+
+
+def fused_chain(x, ws, *, bm=128, bks=None, acts=None, interpret=None,
+                out_dtype=None):
+    """Ragged-shape-safe fused chained GEMM: ONE kernel launch for
+    ``act_{L-1}(... act_0(x @ ws[0]) ...) @ ws[-1]`` with every interior
+    activation resident in VMEM (zero-pads M to the block multiple, the
+    paper's implicit zero-padding semantics).
+
+    ``bks`` streams each layer's weight in host-K tiles against the
+    resident activation; ``acts`` names per-layer activations from
+    :data:`fused_chain.FUSED_ACT_FNS` (None entries skip).
+    """
+    interpret = _auto_interpret(interpret)
+    m = x.shape[0]
+    n_layers = len(ws)
+    if bks is None:
+        bks = (128,) * n_layers
+    if acts is None:
+        acts = (None,) * n_layers
+    bm_ = min(bm, _rnd(m))
+    bks_ = tuple(max(1, min(bk, w.shape[0])) for bk, w in zip(bks, ws))
+    x, _ = _pad_to(x, 0, bm_)
+    o = _fc.fused_chain(x, *ws, bm=bm_, bks=bks_, acts=tuple(acts),
+                        interpret=interpret, out_dtype=out_dtype)
+    return o[:m]
 
 
 def flash_attention(q, k, v, *, causal=True, bq=128, bkv=128,

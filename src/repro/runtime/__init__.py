@@ -24,12 +24,14 @@ adds per-array traffic, cycles and load imbalance.
 from repro.runtime.cache import (CacheStats, ProgramCache,  # noqa: F401
                                  default_cache, reset_default_cache)
 from repro.runtime.executable import (ACTIVATIONS, ModelExecutable,  # noqa: F401
-                                      RunResult, Step, TINY_SHAPES, adapt)
+                                      RunResult, Segment, Step, TINY_SHAPES,
+                                      adapt)
 from repro.runtime.scheduler import (Request, RequestReport,  # noqa: F401
                                      Scheduler, SchedulerReport)
 
 __all__ = [
     "CacheStats", "ProgramCache", "default_cache", "reset_default_cache",
-    "ACTIVATIONS", "ModelExecutable", "RunResult", "Step", "TINY_SHAPES",
-    "adapt", "Request", "RequestReport", "Scheduler", "SchedulerReport",
+    "ACTIVATIONS", "ModelExecutable", "RunResult", "Segment", "Step",
+    "TINY_SHAPES", "adapt", "Request", "RequestReport", "Scheduler",
+    "SchedulerReport",
 ]

@@ -16,6 +16,7 @@ Before this module every consumer memoised its own slice of that pipeline
   lowered    (shape, MappingChoice, cfg, lowering kwargs) -> Program
   compiled   (structural program key, max_block)          -> CompiledProgram
   sharded    (structural program key, mesh shape, axis)   -> ShardedProgram
+  fused      (per-layer compiled keys, segment geometry)  -> CompiledSegment
 
 ``plan`` also accepts a ``core.conv.Conv2D`` (anything with ``to_gemm``):
 the im2col GEMM shape is the search problem, so convs share the same
@@ -65,6 +66,8 @@ class CacheStats:
     compile_misses: int = 0       # == backend compile_program calls
     sharded_hits: int = 0
     sharded_misses: int = 0       # == shard_program partitionings
+    fused_hits: int = 0
+    fused_misses: int = 0         # == fused-segment compiles
     evictions: int = 0
     loaded_from_disk: int = 0
 
@@ -79,12 +82,13 @@ class CacheStats:
     @property
     def hits(self) -> int:
         return (self.plan_hits + self.lowered_hits + self.compile_hits
-                + self.sharded_hits)
+                + self.sharded_hits + self.fused_hits)
 
     @property
     def misses(self) -> int:
         return (self.plan_misses + self.lowered_misses
-                + self.compile_misses + self.sharded_misses)
+                + self.compile_misses + self.sharded_misses
+                + self.fused_misses)
 
     @property
     def hit_rate(self) -> float:
@@ -104,6 +108,8 @@ class CacheStats:
             "hit_rate": self.hit_rate,
             "searches": self.searches, "lowerings": self.lowered_misses,
             "compiles": self.compiles, "shardings": self.sharded_misses,
+            "fused_compiles": self.fused_misses,
+            "fused_hits": self.fused_hits,
             "evictions": self.evictions,
             "loaded_from_disk": self.loaded_from_disk,
         }
@@ -134,6 +140,14 @@ def compiled_key(program: "Program", max_block: int) -> tuple:
             max_block)
 
 
+def fused_key(segment, max_block: int) -> tuple:
+    """Structural key of a fused segment: the per-layer compiled keys
+    plus the segment launch geometry -- a rebuilt executable's fresh
+    FusedSegment objects hit the same artifact."""
+    return (tuple(compiled_key(p, max_block) for p in segment.programs),
+            segment.bm, segment.layer_bks, segment.acts, max_block)
+
+
 class ProgramCache:
     """Memoises mapper search -> Program lowering -> backend compile.
 
@@ -152,6 +166,7 @@ class ProgramCache:
         self._lowered: dict[tuple, "Program"] = {}
         self._compiled: dict[tuple, "CompiledProgram"] = {}
         self._sharded: dict[tuple, Any] = {}
+        self._fused: dict[tuple, Any] = {}
         self.stats = CacheStats()
         self.max_plans = max_plans
         # variant/artifact tiers are bounded too (several lowering
@@ -159,6 +174,7 @@ class ProgramCache:
         self.max_lowered = 8 * max_plans
         self.max_compiled = 16 * max_plans
         self.max_sharded = 8 * max_plans
+        self.max_fused = 8 * max_plans
         self.path = os.fspath(path) if path is not None else None
         if self.path and os.path.exists(self.path):
             self.load(self.path)
@@ -258,10 +274,23 @@ class ProgramCache:
         self._evict_over(self._compiled, self.max_compiled)
         self._compiled[compiled_key(program, max_block)] = comp
 
+    # -- tier 5: fused-segment artifacts (one compile per chained segment) ----
+    def lookup_fused(self, segment, max_block: int):
+        comp = self._fused.get(fused_key(segment, max_block))
+        if comp is not None:
+            self.stats.fused_hits += 1
+        return comp
+
+    def store_fused(self, segment, max_block: int, comp) -> None:
+        self.stats.fused_misses += 1
+        self._evict_over(self._fused, self.max_fused)
+        self._fused[fused_key(segment, max_block)] = comp
+
     # -- stats / persistence --------------------------------------------------
     def __len__(self) -> int:
         return (len(self._plans) + len(self._lowered)
-                + len(self._compiled) + len(self._sharded))
+                + len(self._compiled) + len(self._sharded)
+                + len(self._fused))
 
     def size_bytes(self) -> int:
         """Pickled payload size of the plan tier (computed on demand --
@@ -280,7 +309,8 @@ class ProgramCache:
             "entries": {"plans": len(self._plans),
                         "lowered": len(self._lowered),
                         "compiled": len(self._compiled),
-                        "sharded": len(self._sharded)},
+                        "sharded": len(self._sharded),
+                        "fused": len(self._fused)},
             "bytes": self.size_bytes(),
             **self.stats.summary(),
         }

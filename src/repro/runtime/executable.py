@@ -31,6 +31,13 @@ runtime-layout case), whose "weights" (K^T / V) are runtime tensors
 supplied per request by the serving scheduler, not part of the cached
 weight set.
 
+Fused segments: consecutive ``wired`` steps form a :class:`Segment`;
+when the whole chain is fusion-legal (``program.fuse_segment``) the
+segment carries a ``FusedSegment`` and ``run(fused=True)`` executes it
+as ONE backend kernel launch -- interior activations never leave the
+chip, the serving scheduler's decode fast path runs on this, and
+``fusion_stats`` reports the elided HBM traffic.
+
 Activations run inside the Program (Activation drain, fused by the
 Pallas backend where elementwise) whenever that is semantics-preserving:
 elementwise always; row-wise (softmax/norms) only under WO-S with full
@@ -145,10 +152,32 @@ class Step:
 
 
 @dataclasses.dataclass
+class Segment:
+    """A maximal chained run of steps (one ``program.chain`` group).
+
+    ``fused`` carries the one-kernel-launch geometry when the whole
+    segment is fusion-legal (``program.fuse_segment``): shape-compatible
+    ``wired`` chains with kernel-applicable activations.  ``adapt``
+    boundaries start a new segment by construction, and mesh-sharded
+    streams never fuse (on-chip residency is per-array state), so those
+    cases fall back to the per-Program path automatically.
+    """
+    indices: list[int]                            # step indices, in order
+    fused: programlib.FusedSegment | None = None
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.indices)
+
+
+@dataclasses.dataclass
 class RunResult:
-    outputs: list[np.ndarray]       # per-step outputs (post host_act)
+    outputs: list[np.ndarray]       # per-step outputs (post host_act);
+                                    # interior steps of a fused segment
+                                    # stay on-chip and report None
     final: np.ndarray
     checked: bool = False
+    fused_segments: int = 0         # segments executed as one kernel
 
 
 #: Reduced shapes sized for functional end-to-end execution (the SHAPES
@@ -181,8 +210,10 @@ class ModelExecutable:
         # multi-array serving: a dist.ArrayMesh shards every step across
         # the arrays (None / 1 array == the single-array pipeline)
         self.mesh = mesh if mesh is not None and mesh.n_arrays > 1 else None
+        self.segments: list[Segment] = []
         self.steps = self._build()
         self._perf_cache: dict[int, tuple] = {}
+        self._fusion_stats: dict | None = None
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -247,6 +278,7 @@ class ModelExecutable:
             # ('wired' steps feed the producer's output back as 'I')
             if len(progs) > 1 and self.mesh is None:
                 progs = programlib.chain(progs, lower_fn=cache.lower)
+            first = len(steps)
             for (op, _, _, host_act), prog, mode in zip(segment, progs,
                                                         modes):
                 sharded = (self.cache.sharded(prog, self.mesh)
@@ -255,6 +287,11 @@ class ModelExecutable:
                                   input_mode=mode, host_act=host_act,
                                   reps=max(1, getattr(op.gemm, "count", 1)),
                                   sharded=sharded))
+            fused = (programlib.fuse_segment(progs)
+                     if len(progs) > 1 and self.mesh is None else None)
+            self.segments.append(
+                Segment(indices=list(range(first, len(steps))),
+                        fused=fused))
             segment.clear()
             modes.clear()
 
@@ -321,14 +358,22 @@ class ModelExecutable:
     def run(self, backend="interpreter", *,
             tensors: dict[str, np.ndarray] | None = None, seed: int = 0,
             check: bool = False, rtol: float = 2e-3,
-            atol: float = 2e-3) -> RunResult:
+            atol: float = 2e-3, fused: bool = False) -> RunResult:
         """Execute the stream end-to-end.
 
         ``backend`` is a registry name or a live ``Backend`` instance (the
         scheduler reuses one across requests).  ``tensors`` supplies any
         subset of :meth:`tensor_specs`; missing entries are seeded.
         ``check=True`` asserts every step against the einsum-oracle replay
-        of the identical stream."""
+        of the identical stream.
+
+        ``fused=True`` executes every fusion-legal segment as ONE backend
+        kernel launch (``Backend.run_segment``): interior activations stay
+        on-chip, so interior steps report ``None`` in ``outputs``; the
+        oracle check still verifies every fused segment's final output
+        against the step-by-step einsum replay.  Segments without a fused
+        form (single steps, adapt boundaries, sharded streams, non-fusable
+        activations) take the per-Program path unchanged."""
         be = backend if not isinstance(backend, str) \
             else self.make_backend(backend)
         env = dict(tensors) if tensors else {}
@@ -337,44 +382,86 @@ class ModelExecutable:
 
         prev: np.ndarray | None = None
         ref_prev: np.ndarray | None = None
-        outputs: list[np.ndarray] = []
-        for s in self.steps:
-            g = s.op.gemm
-            w = env[s.weight_name]
-            t: dict[str, np.ndarray] = {"W": w}
-            if s.input_mode == "fresh":
-                t["I"] = env[s.input_name]
-            elif s.input_mode == "adapt":
-                t["I"] = adapt(prev, g.m, g.k)
-            elif s.input_mode == "wired" and s.sharded is not None:
-                # sharded streams do not chain on-chip: the producer's
-                # output crosses the host boundary explicitly
-                t["I"] = prev
-            out = np.asarray(
-                be.run_program(s.sharded if s.sharded is not None
-                               else s.program, t)[s.program.out_name])
-            if s.host_act is not None:
-                out = np.asarray(s.host_act(out))
-            if check:
+        outputs: list[np.ndarray | None] = [None] * len(self.steps)
+        n_fused = 0
+
+        def seg_input(first: Step, carrier, env):
+            g = first.op.gemm
+            if first.input_mode == "fresh":
+                return env[first.input_name]
+            if first.input_mode == "adapt":
+                return adapt(carrier, g.m, g.k)
+            return carrier
+
+        for seg in self.segments:
+            steps = [self.steps[i] for i in seg.indices]
+            if fused and seg.fused is not None:
+                first, last = steps[0], steps[-1]
+                t = {"I": np.asarray(seg_input(first, prev, env),
+                                     np.float32)}
+                for j, s in enumerate(steps):
+                    t[f"W{j}"] = env[s.weight_name]
+                out = np.asarray(
+                    be.run_segment(seg.fused, t)[seg.fused.out_name])
+                if last.host_act is not None:
+                    out = np.asarray(last.host_act(out))
+                if check:
+                    ref = np.asarray(seg_input(first, ref_prev, env),
+                                     np.float32)
+                    for s in steps:
+                        ref = ref.astype(np.float32) @ env[s.weight_name]
+                        if s.program.activation is not None:
+                            ref = np.asarray(s.program.activation(ref))
+                        if s.host_act is not None:
+                            ref = np.asarray(s.host_act(ref))
+                    k_max = max(s.op.gemm.k for s in steps)
+                    np.testing.assert_allclose(
+                        out, ref, rtol=rtol, atol=atol + rtol * k_max,
+                        err_msg=(f"fused segment at steps {seg.indices} "
+                                 f"diverged from the stream oracle"))
+                    ref_prev = ref
+                outputs[last.index] = out
+                prev = out
+                n_fused += 1
+                continue
+            for s in steps:
+                g = s.op.gemm
+                w = env[s.weight_name]
+                t: dict[str, np.ndarray] = {"W": w}
                 if s.input_mode == "fresh":
-                    ref_x = env[s.input_name]
+                    t["I"] = env[s.input_name]
                 elif s.input_mode == "adapt":
-                    ref_x = adapt(ref_prev, g.m, g.k)
-                else:
-                    ref_x = ref_prev
-                ref = ref_x.astype(np.float32) @ w
-                if s.program.activation is not None:
-                    ref = np.asarray(s.program.activation(ref))
+                    t["I"] = adapt(prev, g.m, g.k)
+                elif s.input_mode == "wired" and s.sharded is not None:
+                    # sharded streams do not chain on-chip: the producer's
+                    # output crosses the host boundary explicitly
+                    t["I"] = prev
+                out = np.asarray(
+                    be.run_program(s.sharded if s.sharded is not None
+                                   else s.program, t)[s.program.out_name])
                 if s.host_act is not None:
-                    ref = np.asarray(s.host_act(ref))
-                np.testing.assert_allclose(
-                    out, ref, rtol=rtol, atol=atol + rtol * g.k,
-                    err_msg=(f"step {s.index} ({g.name or g}) diverged "
-                             f"from the stream oracle"))
-                ref_prev = ref
-            outputs.append(out)
-            prev = out
-        return RunResult(outputs=outputs, final=prev, checked=check)
+                    out = np.asarray(s.host_act(out))
+                if check:
+                    if s.input_mode == "fresh":
+                        ref_x = env[s.input_name]
+                    elif s.input_mode == "adapt":
+                        ref_x = adapt(ref_prev, g.m, g.k)
+                    else:
+                        ref_x = ref_prev
+                    ref = ref_x.astype(np.float32) @ w
+                    if s.program.activation is not None:
+                        ref = np.asarray(s.program.activation(ref))
+                    if s.host_act is not None:
+                        ref = np.asarray(s.host_act(ref))
+                    np.testing.assert_allclose(
+                        out, ref, rtol=rtol, atol=atol + rtol * g.k,
+                        err_msg=(f"step {s.index} ({g.name or g}) diverged "
+                                 f"from the stream oracle"))
+                    ref_prev = ref
+                outputs[s.index] = out
+                prev = out
+        return RunResult(outputs=outputs, final=prev, checked=check,
+                         fused_segments=n_fused)
 
     # -- accounting (the same tile streams perf.simulate consumes) ------------
     @property
@@ -442,10 +529,66 @@ class ModelExecutable:
         tot["load_imbalance"] = perf.load_imbalance(per_cycles)
         return tot
 
+    def fusion_stats(self) -> dict:
+        """Modelled traffic and cycles of the stream under per-layer vs
+        fused execution, ``reps``-weighted.
+
+        Two layers of accounting, matching the two execution realities:
+        ``cycles_*`` come from the machine-model tile streams (interior
+        elision applied for fused segments -- ``FusedSegment.tile_costs``),
+        while ``hbm_bytes_*`` are *kernel-launch* traffic: per-layer
+        launches round-trip every interior activation through HBM, the
+        fused launch ships only the segment input, the weights and the
+        final output.  ``hbm_bytes_elided`` is exactly the difference --
+        what the fused kernels keep on-chip.
+
+        Depends only on the (immutable) step/segment structure, so the
+        result is computed once and cached."""
+        if self._fusion_stats is not None:
+            return dict(self._fusion_stats)
+        out = {"n_segments": len(self.segments),
+               "n_fused_segments": 0, "n_fused_steps": 0,
+               "hbm_bytes_per_layer": 0.0, "hbm_bytes_fused": 0.0,
+               "cycles_per_layer": 0.0, "cycles_fused": 0.0}
+        elem = self.cfg.elem_bytes
+        for seg in self.segments:
+            steps = [self.steps[i] for i in seg.indices]
+            if seg.fused is not None:
+                out["n_fused_segments"] += 1
+                out["n_fused_steps"] += len(steps)
+            for pos, s in enumerate(steps):
+                g = s.op.gemm
+                plain = s.program.tile_costs("minisa")
+                r = s.reps
+                res = perf.simulate(plain, self.cfg)
+                launch = elem * (g.m * g.k + g.k * g.n + g.m * g.n)
+                out["hbm_bytes_per_layer"] += r * launch
+                out["cycles_per_layer"] += r * res.cycles
+                if seg.fused is not None:
+                    fused_costs = seg.fused.layer_tile_costs(pos)
+                    fres = perf.simulate(fused_costs, self.cfg)
+                    fused_launch = elem * (g.k * g.n)   # weights always
+                    if pos == 0:
+                        fused_launch += elem * g.m * g.k    # segment input
+                    if pos == len(steps) - 1:
+                        fused_launch += elem * g.m * g.n    # final output
+                    out["hbm_bytes_fused"] += r * fused_launch
+                    out["cycles_fused"] += r * fres.cycles
+                else:
+                    out["hbm_bytes_fused"] += r * launch
+                    out["cycles_fused"] += r * res.cycles
+        out["hbm_bytes_elided"] = (out["hbm_bytes_per_layer"]
+                                   - out["hbm_bytes_fused"])
+        self._fusion_stats = out
+        return dict(out)
+
     def describe(self) -> dict:
         return {
             "name": self.name,
             "n_steps": len(self.steps),
+            "n_segments": len(self.segments),
+            "n_fused_segments": sum(1 for s in self.segments
+                                    if s.fused is not None),
             "n_gemms": int(sum(s.reps for s in self.steps)),
             "n_dynamic": sum(1 for s in self.steps if s.op.dynamic),
             "n_wired": sum(1 for s in self.steps

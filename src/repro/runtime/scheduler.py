@@ -117,6 +117,11 @@ class SchedulerReport:
     n_arrays: int = 1
     per_array_minisa_bytes: list = dataclasses.field(default_factory=list)
     per_array_cycles: list = dataclasses.field(default_factory=list)
+    # batched decode fast path (fused-segment kernels)
+    decode_fused: bool = False
+    decode_fused_segments: int = 0    # fused launches per decode step
+    decode_segments: int = 0          # total decode segments per step
+    decode_hbm_elided_bytes: float = 0.0   # modelled per decode step
 
     @property
     def total_tokens(self) -> int:
@@ -143,6 +148,10 @@ class SchedulerReport:
             "per_array_minisa_bytes": list(self.per_array_minisa_bytes),
             "per_array_cycles": list(self.per_array_cycles),
             "load_imbalance": self.load_imbalance,
+            "decode_fused": self.decode_fused,
+            "decode_fused_segments": self.decode_fused_segments,
+            "decode_segments": self.decode_segments,
+            "decode_hbm_elided_bytes": self.decode_hbm_elided_bytes,
             "cache_hit_rate": self.cache.get("hit_rate", 0.0),
             "cache_searches": self.cache.get("searches", 0),
             "cache_compiles": self.cache.get("compiles", 0),
@@ -214,7 +223,8 @@ class Scheduler:
 
     def __init__(self, prefill: ModelExecutable, decode: ModelExecutable,
                  *, backend: str = "interpreter", max_concurrent: int = 4,
-                 weight_seed: int = 0, seed: int = 0):
+                 weight_seed: int = 0, seed: int = 0,
+                 use_fused: bool | None = None):
         if prefill.cfg != decode.cfg:
             raise ValueError("prefill/decode executables must share one "
                              "FeatherConfig")
@@ -230,6 +240,15 @@ class Scheduler:
         self.backend = prefill.make_backend(backend)
         self.max_concurrent = max_concurrent
         self.seed = seed
+        # Batched decode fast path: every tick advances the whole batch of
+        # active requests through the decode stream's *fused segments* --
+        # one kernel launch per chained segment instead of one dispatch
+        # per layer.  Defaults on for the compiled backend (where the
+        # per-launch overhead is the decode loop's dominant cost); the
+        # interpreter keeps the per-Program path, whose machine state IS
+        # the chain semantics.
+        self.use_fused = (use_fused if use_fused is not None
+                          else backend == "pallas")
         # weight residency: one static weight set serves every request
         self.prefill_weights = prefill.make_tensors(weight_seed,
                                                     kinds=("weight",))
@@ -267,7 +286,8 @@ class Scheduler:
         env.update(a.dynamics)
         # quantised carrier: both backends feed identical step inputs
         env.update(self.decode.inputs_from(_stabilize(a.carry)))
-        res = self.decode.run(self.backend, tensors=env)
+        res = self.decode.run(self.backend, tensors=env,
+                              fused=self.use_fused)
         a.decoded += 1
         a.carry = res.final
         _commit_kv(a.dynamics, res.final, a.decoded)
@@ -321,6 +341,7 @@ class Scheduler:
                             + a.decoded * dec["per_array_cycles_minisa"][i])
             ticks += 1
         done.sort(key=lambda r: r.rid)
+        fusion = self.decode.fusion_stats()
         return SchedulerReport(
             backend=self.backend_name, requests=done,
             wall_s=time.perf_counter() - t0, ticks=ticks,
@@ -328,4 +349,9 @@ class Scheduler:
             cache=self.prefill.cache.stats.summary(),
             n_arrays=n_arrays,
             per_array_minisa_bytes=per_bytes,
-            per_array_cycles=per_cycles)
+            per_array_cycles=per_cycles,
+            decode_fused=self.use_fused,
+            decode_fused_segments=fusion["n_fused_segments"],
+            decode_segments=fusion["n_segments"],
+            decode_hbm_elided_bytes=(fusion["hbm_bytes_elided"]
+                                     if self.use_fused else 0.0))

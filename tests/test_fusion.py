@@ -1,0 +1,396 @@
+"""Fused-segment equivalence and fallback semantics.
+
+The correctness spine for the fusion tentpole: a chained segment executed
+as ONE fused pallas launch must equal the per-layer pallas path, the
+interpreter, and the einsum oracle of the identical chain -- across the
+Tab. IV CI workloads, random chain geometries, and whole model cells.
+Fallback cases (``adapt`` boundaries, sharded streams, non-fusable
+activations, VMEM budget) must cleanly take the per-Program path, and the
+fused cache tier must make a rebuilt executable compile nothing.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import backends
+from repro.configs.feather import feather_config
+from repro.core import isa, mapper, perf, program, workloads
+from repro.runtime import ModelExecutable, ProgramCache
+from repro.runtime.executable import ACTIVATIONS
+from tests._hypothesis_compat import given, settings, st
+
+CFG = feather_config(4, 16)
+RNG = np.random.default_rng(11)
+
+
+def _build_chain(dims, acts, cfg=CFG, cache=None):
+    """Search+lower+chain an L-layer stack; dims = [(k0), n0, n1, ...]."""
+    cache = cache or ProgramCache()
+    m, widths = dims
+    progs = []
+    for i in range(len(widths) - 1):
+        g = mapper.Gemm(m=m, k=widths[i], n=widths[i + 1],
+                        name=f"chain-l{i}")
+        plan = cache.plan(g, cfg)
+        progs.append(cache.lower(
+            plan.gemm, plan.choice, cfg,
+            activation=ACTIVATIONS.get(acts[i]), act_name=acts[i],
+            out_name=f"O{i}"))
+    return program.chain(progs, lower_fn=cache.lower)
+
+
+def _chain_tensors(m, widths, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, widths[0])).astype(np.float32)
+    ws = [(rng.standard_normal((widths[i], widths[i + 1]))
+           / np.sqrt(widths[i])).astype(np.float32)
+          for i in range(len(widths) - 1)]
+    return x, ws
+
+
+def _oracle(x, ws, acts):
+    out = np.asarray(x, np.float32)
+    for w, act in zip(ws, acts):
+        out = out @ w
+        fn = ACTIVATIONS.get(act)
+        if fn is not None:
+            out = np.asarray(fn(out))
+    return out
+
+
+def _run_per_layer(backend_name, chained, x, ws):
+    be = backends.get_backend(backend_name, CFG)
+    for i, prog in enumerate(chained):
+        t = {"W": ws[i]}
+        if i == 0:
+            t["I"] = x
+        be.run_program(prog, t)
+    return np.asarray(be.outputs[chained[-1].out_name])
+
+
+def _run_fused(backend_name, seg, x, ws):
+    be = backends.get_backend(backend_name, CFG)
+    t = {"I": x, **{f"W{i}": w for i, w in enumerate(ws)}}
+    return np.asarray(be.run_segment(seg, t)[seg.out_name])
+
+
+def _assert_chain_equivalence(dims, acts, seed=0):
+    m, widths = dims
+    chained = _build_chain(dims, acts)
+    seg = program.fuse_segment(chained)
+    assert seg is not None, program.fusion_illegal_reason(chained)
+    x, ws = _chain_tensors(m, widths, seed)
+    ref = _oracle(x, ws, acts)
+    k_max = max(widths)
+    tol = dict(rtol=2e-4, atol=2e-4 + 2e-4 * k_max)
+    outs = {
+        "fused-pallas": _run_fused("pallas", seg, x, ws),
+        "per-layer-pallas": _run_per_layer("pallas", chained, x, ws),
+        "fused-interpreter": _run_fused("interpreter", seg, x, ws),
+        "per-layer-interp": _run_per_layer("interpreter", chained, x, ws),
+    }
+    for name, out in outs.items():
+        np.testing.assert_allclose(out, ref, err_msg=name, **tol)
+    # fused pallas vs per-layer pallas: same kernel arithmetic, checked
+    # at a tolerance an order tighter than against the oracle
+    np.testing.assert_allclose(outs["fused-pallas"],
+                               outs["per-layer-pallas"],
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# The spine: ci_suite-anchored multi-layer chains, all four executions
+# ---------------------------------------------------------------------------
+
+def _suite_samples():
+    """One workload per Tab. IV family (+ the conv), chain-extended."""
+    suite = {g.name.split("-")[0] + "-" + g.name.split("-")[1]: g
+             for g in workloads.ci_suite()}
+    picks = [suite[k] for k in ("fhe-bconv", "fhe-ntt", "zkp-ntt",
+                                "gpt-oss", "conv-3x3s1")]
+    return picks
+
+
+@pytest.mark.parametrize("gemm", _suite_samples(), ids=lambda g: g.name)
+def test_fused_equals_per_layer_equals_oracle_ci_suite(gemm):
+    """fused pallas == per-layer pallas == interpreter == oracle on
+    3-layer chains anchored on each CI workload family's shape."""
+    widths = [gemm.k, gemm.n, 24, 16]
+    _assert_chain_equivalence((gemm.m, widths), ["silu", "relu", "none"])
+
+
+def test_fused_row_wise_activation_chain():
+    """softmax inside a fused chain (the attention qk->pv pattern):
+    legal because a fused block holds full output rows."""
+    _assert_chain_equivalence((12, [16, 12, 8]), ["softmax", "none"])
+
+
+@settings(max_examples=8, deadline=None)
+@given(m=st.integers(2, 40), k0=st.integers(3, 40),
+       n0=st.integers(2, 40), n1=st.integers(2, 40), n2=st.integers(2, 40),
+       n_layers=st.integers(2, 4),
+       act=st.sampled_from(["none", "relu", "gelu", "silu"]),
+       seed=st.integers(0, 2 ** 16))
+def test_fused_random_chain_property(m, k0, n0, n1, n2, n_layers, act,
+                                     seed):
+    """Property: any fusion-legal random chain geometry agrees with the
+    oracle on both the fused and per-layer paths."""
+    widths = [k0, n0, n1, n2][:n_layers + 1]
+    acts = [act] * (len(widths) - 2) + ["none"]
+    _assert_chain_equivalence((m, widths), acts, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Legality predicate + fallbacks
+# ---------------------------------------------------------------------------
+
+def test_fusion_legality_reasons():
+    chained = _build_chain((8, [12, 8, 6]), ["relu", "none"])
+    assert program.fusable(chained)
+    # fewer than 2 layers
+    assert "fewer than 2" in program.fusion_illegal_reason(chained[:1])
+    # shape break
+    other = _build_chain((10, [12, 8, 6]), ["relu", "none"])
+    assert "output" in program.fusion_illegal_reason([chained[0],
+                                                      other[1]])
+    # anonymous activation callable
+    anon = dataclasses.replace(chained[0], activation=lambda x: x * 2,
+                               act_name="none", _memo={})
+    assert "anonymous" in program.fusion_illegal_reason([anon, chained[1]])
+    # VMEM budget
+    assert "budget" in program.fusion_illegal_reason(chained,
+                                                     vmem_budget=10)
+    assert program.fuse_segment(chained, vmem_budget=10) is None
+
+
+def test_row_wise_activation_needs_wos():
+    """A row-wise activation under IO-S (transposed accumulator) cannot
+    fuse -- the block's rows are host columns there."""
+    choice = mapper.MappingChoice(df=isa.Dataflow.IOS, vn=4, m_t=8,
+                                  k_t=8, n_t=8, n_kg=1, n_nb=1, dup=4)
+    g1 = mapper.Gemm(m=8, k=8, n=8)
+    p1 = program.lower(g1, choice, CFG, out_name="O0",
+                       activation=ACTIVATIONS["softmax"],
+                       act_name="softmax")
+    p2 = program.lower(mapper.Gemm(m=8, k=8, n=4), choice, CFG,
+                       out_name="O1")
+    reason = program.fusion_illegal_reason([p1, p2])
+    assert reason is not None and "row-wise" in reason
+
+
+def test_adapt_boundary_breaks_fusion():
+    """The head-split reshape between projections and attention is an
+    ``adapt`` step: it starts a new segment, so no fused segment ever
+    spans it."""
+    ex = ModelExecutable.for_cell("gemma-7b", "decode_tiny", CFG,
+                                  cache=ProgramCache())
+    covered = [i for seg in ex.segments for i in seg.indices]
+    assert covered == list(range(len(ex.steps)))   # exact partition
+    for seg in ex.segments:
+        steps = [ex.steps[i] for i in seg.indices]
+        assert all(s.input_mode == "wired" for s in steps[1:])
+        assert steps[0].input_mode in ("fresh", "adapt")
+        if seg.fused is not None:
+            assert seg.n_steps >= 2
+    adapt_steps = [s.index for s in ex.steps if s.input_mode == "adapt"]
+    assert adapt_steps, "cell should contain adapt boundaries"
+    seg_starts = {seg.indices[0] for seg in ex.segments}
+    assert set(adapt_steps) <= seg_starts
+
+
+def test_sharded_stream_falls_back():
+    """Mesh-sharded executables never fuse (on-chip residency is
+    per-array state) but still run end-to-end."""
+    pytest.importorskip("jax")
+    from repro.dist import ArrayMesh
+    ex = ModelExecutable.for_cell("gemma-7b", "decode_tiny", CFG,
+                                  cache=ProgramCache(), mesh=ArrayMesh(2))
+    assert all(seg.fused is None for seg in ex.segments)
+    res = ex.run("interpreter", fused=True)
+    assert res.fused_segments == 0
+    assert all(o is not None for o in res.outputs)
+
+
+def test_sharded_program_not_fusable():
+    from repro.dist import ArrayMesh
+    g = mapper.Gemm(m=16, k=12, n=8)
+    plan = mapper.search(g, CFG)
+    sharded = program.shard_program(plan.program, ArrayMesh(2))
+    reason = program.fusion_illegal_reason([sharded, sharded])
+    assert reason is not None and "sharded" in reason
+
+
+# ---------------------------------------------------------------------------
+# Whole-cell fused execution (runtime path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cell", [("gemma-7b", "decode_tiny"),
+                                  ("granite-moe-3b-a800m", "prefill_tiny")],
+                         ids=lambda c: f"{c[0]}-{c[1]}")
+@pytest.mark.parametrize("backend", ["interpreter", "pallas"])
+def test_cell_fused_run_matches_oracle(cell, backend):
+    """run(fused=True) == the per-step einsum oracle (check=True) on both
+    backends, and matches the per-layer final output."""
+    ex = ModelExecutable.for_cell(cell[0], cell[1], CFG,
+                                  cache=ProgramCache())
+    env = ex.make_tensors(seed=5)
+    fused = ex.run(backend, tensors=env, fused=True, check=True)
+    plain = ex.run(backend, tensors=env, check=True)
+    assert fused.checked and fused.fused_segments >= 1
+    assert len(fused.outputs) == len(ex.steps)
+    np.testing.assert_allclose(fused.final, plain.final,
+                               rtol=2e-4, atol=2e-3)
+    # interior fused steps stay on-chip: no materialised output
+    fused_interior = {i for seg in ex.segments if seg.fused is not None
+                     for i in seg.indices[:-1]}
+    for i, out in enumerate(fused.outputs):
+        assert (out is None) == (i in fused_interior)
+
+
+# ---------------------------------------------------------------------------
+# Traffic accounting: the fused stream elides the interior round trips
+# ---------------------------------------------------------------------------
+
+def test_fused_traffic_elision():
+    chained = _build_chain((16, [12, 8, 6]), ["relu", "none"])
+    seg = program.fuse_segment(chained)
+    elem = CFG.elem_bytes
+    # kernel-launch accounting: exactly one Write + one Load of every
+    # interior activation is elided
+    interior = sum(p.gemm.n for p in chained[:-1])
+    assert seg.elided_hbm_bytes() == 2 * 16 * interior * elem
+    # machine-model tile stream: fused ships no more than per-layer, and
+    # interior stores are gone entirely
+    fused_traffic = perf.hbm_traffic(seg.tile_costs())
+    plain_traffic = perf.hbm_traffic(
+        [t for p in chained for t in p.tile_costs()])
+    assert fused_traffic["data_bytes"] <= plain_traffic["data_bytes"]
+    interior_stores = sum(
+        t.store_bytes for layer in range(seg.n_layers - 1)
+        for t in seg.layer_tile_costs(layer))
+    assert interior_stores == 0.0
+    # the instruction stream is untouched by fusion
+    assert seg.minisa_bits() == sum(p.minisa_bits() for p in chained)
+
+
+def _fixed_choice_chain(widths, acts, m=8):
+    """Chain lowered under ONE MappingChoice (equal vn -> guaranteed
+    §IV-G elision, independent of per-layer search outcomes)."""
+    choice = mapper.MappingChoice(df=isa.Dataflow.WOS, vn=4, m_t=8,
+                                  k_t=8, n_t=8, n_kg=1, n_nb=1, dup=4)
+    progs = [program.lower(mapper.Gemm(m=m, k=widths[i], n=widths[i + 1]),
+                           choice, CFG,
+                           activation=ACTIVATIONS.get(acts[i]),
+                           act_name=acts[i], out_name=f"O{i}")
+             for i in range(len(widths) - 1)]
+    return program.chain(progs)
+
+
+def test_commit_write_counts_on_chip():
+    """A chained producer's committing Write is OB-commit cycles, not HBM
+    store bytes -- the §IV-G semantics in the traffic model."""
+    chained = _fixed_choice_chain([12, 8, 6], ["none", "none"])
+    assert chained[1].input_elided
+    plain = program.lower(chained[0].gemm, chained[0].choice, CFG,
+                          out_name="O0")
+    chained_store = sum(t.store_bytes for t in chained[0].tile_costs())
+    plain_store = sum(t.store_bytes for t in plain.tile_costs())
+    assert chained_store < plain_store
+
+def test_fused_act_names_match_kernel_registry():
+    from repro.kernels.fused_chain import FUSED_ACT_FNS
+    from repro.kernels.nest_gemm import ACT_FNS
+    assert program.FUSED_ELEMENTWISE_ACTS == set(ACT_FNS)
+    assert (program.FUSED_ELEMENTWISE_ACTS
+            | program.ROW_WISE_ACTIVATIONS) == set(FUSED_ACT_FNS)
+    assert set(program.FUSED_ACT_ALIASES.values()) <= set(ACT_FNS)
+
+
+def test_activation_registries_numerically_agree():
+    """Three activation registries must stay numerically identical (same
+    eps, same max-subtraction): the runtime's host ACTIVATIONS, the
+    machine's device twins, and the fused kernel's FUSED_ACT_FNS --
+    drift in any one silently breaks the cross-path state checksums."""
+    import jax.numpy as jnp
+    from repro.core.machine import _JNP_ACTS
+    from repro.kernels.fused_chain import FUSED_ACT_FNS
+    x = RNG.standard_normal((6, 10)).astype(np.float32) * 3
+    for name, host_fn in ACTIVATIONS.items():
+        if host_fn is None:
+            continue
+        ref = np.asarray(host_fn(x))
+        mach = np.asarray(_JNP_ACTS[name](jnp.asarray(x)))
+        np.testing.assert_allclose(mach, ref, rtol=1e-6, atol=1e-6,
+                                   err_msg=f"machine twin {name}")
+        kname = program.FUSED_ACT_ALIASES.get(name, name)
+        if kname in FUSED_ACT_FNS:
+            kern = np.asarray(FUSED_ACT_FNS[kname](jnp.asarray(x)))
+            np.testing.assert_allclose(kern, ref, rtol=1e-6, atol=1e-6,
+                                       err_msg=f"kernel twin {name}")
+
+
+# ---------------------------------------------------------------------------
+# Cache: fused tier hits, fewer compiles
+# ---------------------------------------------------------------------------
+
+def test_fused_tier_hits_and_reduced_compiles():
+    cache = ProgramCache()
+    ex1 = ModelExecutable.for_cell("gemma-7b", "decode_tiny", CFG,
+                                   cache=cache)
+    n_fused_steps = sum(seg.n_steps for seg in ex1.segments
+                        if seg.fused is not None)
+    n_fused_segs = sum(1 for seg in ex1.segments if seg.fused is not None)
+    assert n_fused_segs >= 2 and n_fused_steps > n_fused_segs
+
+    # fused serving compiles ONE artifact per segment where the per-layer
+    # path compiles one per GEMM (measured without the shared cache)
+    be_layer = backends.PallasBackend(CFG)
+    ex1.run(be_layer)
+    be_fused = backends.PallasBackend(CFG)
+    ex1.run(be_fused, fused=True)
+    assert be_fused.n_compiles == (be_layer.n_compiles
+                                   - n_fused_steps + n_fused_segs)
+    assert be_fused.n_compiles < be_layer.n_compiles
+
+    # fused tier: the first cached run misses once per segment...
+    be1 = backends.PallasBackend(CFG, compile_cache=cache)
+    ex1.run(be1, fused=True)
+    assert cache.stats.fused_misses == n_fused_segs
+    snap = cache.stats.snapshot()
+    # ...and a REBUILT executable (fresh Program/FusedSegment objects) on
+    # a fresh backend hits structurally: zero new compiles of any kind
+    ex2 = ModelExecutable.for_cell("gemma-7b", "decode_tiny", CFG,
+                                   cache=cache)
+    be2 = backends.PallasBackend(CFG, compile_cache=cache)
+    ex2.run(be2, fused=True)
+    delta = cache.stats.delta(snap)
+    assert delta["fused_hits"] == n_fused_segs, delta
+    assert delta["fused_misses"] == 0, delta
+    assert delta["plan_misses"] == 0 and delta["compile_misses"] == 0
+    assert be2.n_compiles == 0
+
+
+# ---------------------------------------------------------------------------
+# Interpreter chain residency (the drain-path satellite)
+# ---------------------------------------------------------------------------
+
+def test_interpreter_chain_stays_on_device():
+    """The machine's operand buffers and committed chain state are device
+    arrays end to end: a wired consumer reads the producer's commit
+    without a host round trip."""
+    import jax
+    chained = _fixed_choice_chain([12, 8, 6], ["relu", "none"])
+    assert chained[1].input_elided
+    x, ws = _chain_tensors(8, [12, 8, 6])
+    be = backends.InterpreterBackend(CFG)
+    be.run_program(chained[0], {"I": x, "W": ws[0]})
+    m = be.machine
+    for role, buf in m._bufs.items():
+        if buf is not None:
+            assert isinstance(buf, jax.Array), role
+    out = be.run_program(chained[1], {"W": ws[1]})[chained[-1].out_name]
+    np.testing.assert_allclose(np.asarray(out),
+                               _oracle(x, ws, ["relu", "none"]),
+                               rtol=2e-4, atol=2e-3)
