@@ -99,11 +99,17 @@ def main() -> None:
                                  "cycles_minisa", "macs")})
     bench("serve_runtime",
           lambda: serve_runtime.run(quick=args.quick),
-          lambda r: "tok_s_pallas=" + _fmt(r["pallas"]["tokens_per_sec"])
-          + " hit_rate=" + _fmt(r["pallas"]["cache_hit_rate"]),
+          lambda r: "batched_decode_speedup=" + _fmt(
+              r["decode_serving"]["batched_decode_speedup"])
+          + " tok_s_pallas=" + _fmt(r["pallas"]["tokens_per_sec"]),
           lambda r: {f"{name}.{key}": row[key]
                      for name, row in r.items()
                      for key in ("tokens_per_sec", "total_tokens",
+                                 "decode_tokens_per_sec",
+                                 "launches_per_decode_tick",
+                                 "ttft_p50_s", "ttft_p95_s",
+                                 "latency_p50_s", "latency_p95_s",
+                                 "latency_p99_s", "batch_decode",
                                  "cache_hit_rate", "cache_searches",
                                  "cache_compiles",
                                  "minisa_bytes_per_request",
@@ -111,7 +117,11 @@ def main() -> None:
                                  "stall_minisa", "stall_micro",
                                  "decode_fused",
                                  "decode_fused_segments",
-                                 "decode_hbm_elided_bytes")})
+                                 "decode_hbm_elided_bytes",
+                                 "batched_decode_speedup",
+                                 "decode_tok_s_batched",
+                                 "decode_tok_s_per_request")
+                     if key in row})
     # fused-vs-per-layer kernels/serving live in benchmarks.fusion_compare;
     # CI runs it as its own perf-smoke step and --merges the results into
     # the BENCH_results.json written here (measuring it twice per CI run

@@ -1,64 +1,140 @@
-"""Serving-runtime benchmark: scheduler throughput + compile-cache reuse.
+"""Serving-runtime benchmark: batched decode vs per-request fused decode.
 
     PYTHONPATH=src python -m benchmarks.serve_runtime [--quick]
+        [--json PATH] [--merge] [--gate]
 
 Runs the continuous-batching :class:`repro.runtime.Scheduler` over a
-reduced (arch x shape) serving cell on both execution backends.  For each
-backend the prefill/decode executables are compiled once through a shared
-ProgramCache and then serve several concurrent requests; reported per
-backend:
+reduced (arch x shape) serving cell in three modes, all fed the identical
+submission sequence (per-request ``state_checksum``s are asserted
+bit-equal across the modes before any number is reported):
 
-  tokens_per_sec     wall-clock serving throughput (prefill + decode)
-  cache_hit_rate     ProgramCache hits / (hits + misses) across the
-                     whole build+serve (plans, lowerings, compiles)
-  searches/compiles  real mapper searches and backend compiles performed
-                     (the second backend's build is expected to re-search
-                     nothing: plans are backend-independent)
-  minisa/micro bytes per-request instruction traffic from the same tile
-                     streams perf.simulate consumes, plus stall fractions
+  interpreter         sequential per-request, per-layer Programs -- the
+                      reference trajectory
+  pallas_per_request  one fused-segment launch chain per request per
+                      decode step (the prior serving fast path)
+  pallas              cross-request batched decode: every active
+                      request's token stacked along M, ONE launch per
+                      segment per tick through the M-polymorphic
+                      ``BatchPlan`` (+ flash-decode attention over the
+                      paged per-request KV)
 
-``benchmarks/run.py`` merges these numbers into ``BENCH_results.json``.
+Per mode the table reports wall-clock tok/s, decode-phase tok/s,
+time-to-first-token and end-to-end latency percentiles (TTFT is decode-
+independent -- it measures queueing + prefill -- so it is reported
+separately from decode throughput), kernel launches per decode tick and
+ProgramCache reuse.  The headline ``decode_serving`` section records the
+batched-vs-per-request decode speedup; ``--gate`` exits non-zero if the
+batched path regresses below the per-request fused path.  ``--merge``
+folds ``decode_serving`` into an existing ``BENCH_results.json`` (the CI
+serving perf-smoke step); ``benchmarks/run.py`` also embeds the per-mode
+summaries directly.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import sys
+
+#: (mode name, Scheduler kwargs) -- identical submissions, three paths
+MODES = (
+    ("interpreter", dict(backend="interpreter", batch_decode=False,
+                         use_fused=False)),
+    ("pallas_per_request", dict(backend="pallas", batch_decode=False,
+                                use_fused=True)),
+    ("pallas", dict(backend="pallas", batch_decode=True, use_fused=True)),
+)
+
+
+def _serve(prefill, decode, n_requests, decode_steps, max_concurrent,
+           **kw):
+    from repro.runtime import Scheduler
+    sched = Scheduler(prefill, decode, max_concurrent=max_concurrent,
+                      **kw)
+    for _ in range(n_requests):
+        sched.submit(decode_steps=decode_steps)
+    return sched.run()
 
 
 def run(quick: bool = False, arch: str = "gemma-7b",
-        n_requests: int = 4, decode_steps: int = 3,
-        max_concurrent: int = 2) -> dict[str, dict]:
+        n_requests: int = 8, decode_steps: int = 4,
+        max_concurrent: int = 8) -> dict[str, dict]:
     from repro.configs.feather import feather_config
     from repro.runtime import ModelExecutable, ProgramCache, Scheduler
 
     if quick:
-        n_requests, decode_steps = 2, 2
+        decode_steps = 3
     cfg = feather_config(4, 16)
-    cache = ProgramCache()   # one cache across both backends
+    cache = ProgramCache()   # one cache across every mode
+    prefill = ModelExecutable.for_cell(arch, "prefill_tiny", cfg,
+                                       cache=cache)
+    decode = ModelExecutable.for_cell(arch, "decode_tiny", cfg,
+                                      cache=cache)
+
+    # Warm the pallas compile tiers (m=1 fused segments + the batched
+    # bucket this concurrency hits) so both timed pallas modes measure
+    # steady-state serving, not first-call trace cost.
+    for _, kw in MODES[1:]:
+        _serve(prefill, decode, n_requests=max_concurrent, decode_steps=1,
+               max_concurrent=max_concurrent, **kw)
+
     out: dict[str, dict] = {}
-    print(f"{'backend':>12} {'tok/s':>10} {'hit_rate':>9} {'searches':>9} "
-          f"{'compiles':>9} {'minisa_B/req':>13} {'instr_red':>10}")
-    for backend in ("interpreter", "pallas"):
+    checksums: dict[str, dict] = {}
+    print(f"{'mode':>19} {'tok/s':>9} {'decode tok/s':>13} "
+          f"{'ttft_p50 ms':>12} {'p95 lat ms':>11} {'launch/tick':>12} "
+          f"{'hit_rate':>9}")
+    for mode, kw in MODES:
         before = cache.stats.snapshot()
-        prefill = ModelExecutable.for_cell(arch, "prefill_tiny", cfg,
-                                           cache=cache)
-        decode = ModelExecutable.for_cell(arch, "decode_tiny", cfg,
-                                          cache=cache)
-        sched = Scheduler(prefill, decode, backend=backend,
-                          max_concurrent=max_concurrent)
-        for _ in range(n_requests):
-            sched.submit(decode_steps=decode_steps)
-        report = sched.run()
-        s = report.summary()
+        rep = _serve(prefill, decode, n_requests=n_requests,
+                     decode_steps=decode_steps,
+                     max_concurrent=max_concurrent, **kw)
+        s = rep.summary()
         s["cache_delta"] = cache.stats.delta(before)
         s["arch"] = arch
         s["decode_steps"] = decode_steps
-        out[backend] = s
-        print(f"{backend:>12} {s['tokens_per_sec']:10.1f} "
-              f"{s['cache_hit_rate']:9.2f} {s['cache_searches']:9d} "
-              f"{s['cache_compiles']:9d} "
-              f"{s['minisa_bytes_per_request']:13.0f} "
-              f"{s['micro_bytes_per_request'] / max(s['minisa_bytes_per_request'], 1e-9):10.0f}")
+        out[mode] = s
+        checksums[mode] = {r.rid: r.state_checksum for r in rep.requests}
+        lpt = s["launches_per_decode_tick"]
+        print(f"{mode:>19} {s['tokens_per_sec']:9.1f} "
+              f"{s['decode_tokens_per_sec']:13.1f} "
+              f"{s['ttft_p50_s'] * 1e3:12.2f} "
+              f"{s['latency_p95_s'] * 1e3:11.2f} "
+              f"{lpt if lpt else 0.0:12.1f} {s['cache_hit_rate']:9.2f}")
+
+    ref = checksums["interpreter"]
+    for mode, sums in checksums.items():
+        assert sums == ref, (
+            f"state_checksum divergence: {mode} vs interpreter")
+
+    per, bat = out["pallas_per_request"], out["pallas"]
+    speedup = (bat["decode_tokens_per_sec"]
+               / max(per["decode_tokens_per_sec"], 1e-9))
+    out["decode_serving"] = {
+        "arch": arch,
+        "n_requests": n_requests,
+        "max_concurrent": max_concurrent,
+        "decode_steps": decode_steps,
+        "decode_tok_s_per_request": per["decode_tokens_per_sec"],
+        "decode_tok_s_batched": bat["decode_tokens_per_sec"],
+        "batched_decode_speedup": speedup,
+        "launches_per_decode_tick_per_request":
+            per["launches_per_decode_tick"],
+        "launches_per_decode_tick_batched":
+            bat["launches_per_decode_tick"],
+        "ttft_p50_s": bat["ttft_p50_s"],
+        "ttft_p95_s": bat["ttft_p95_s"],
+        "ttft_p99_s": bat["ttft_p99_s"],
+        "latency_p50_s": bat["latency_p50_s"],
+        "latency_p95_s": bat["latency_p95_s"],
+        "latency_p99_s": bat["latency_p99_s"],
+        "kv_high_water_pages": bat["kv"].get("high_water_pages", 0),
+        "checksums_match": True,
+    }
+    print(f"batched decode speedup over per-request fused: "
+          f"{speedup:.2f}x at {max_concurrent} concurrent "
+          f"({bat['launches_per_decode_tick']} launches/tick vs "
+          f"{per['launches_per_decode_tick']})")
     return out
 
 
@@ -66,11 +142,41 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="CI sizes")
     ap.add_argument("--arch", default="gemma-7b")
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--decode-steps", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--decode-steps", type=int, default=4)
+    ap.add_argument("--concurrent", type=int, default=8)
+    ap.add_argument("--json", default="", help="write results to PATH")
+    ap.add_argument("--merge", action="store_true",
+                    help="merge into an existing BENCH_results.json "
+                         "instead of overwriting")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit non-zero if batched decode tok/s falls "
+                         "below the per-request fused path")
     args = ap.parse_args()
-    run(quick=args.quick, arch=args.arch, n_requests=args.requests,
-        decode_steps=args.decode_steps)
+    result = run(quick=args.quick, arch=args.arch,
+                 n_requests=args.requests,
+                 decode_steps=args.decode_steps,
+                 max_concurrent=args.concurrent)
+    serving = result["decode_serving"]
+    if args.json:
+        payload = {}
+        if args.merge and os.path.exists(args.json):
+            with open(args.json) as f:
+                payload = json.load(f)
+        payload.setdefault("results", {})["decode_serving"] = {
+            "derived": f"batched_decode_speedup="
+                       f"{serving['batched_decode_speedup']:.3g}",
+            **serving,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    if args.gate and serving["batched_decode_speedup"] < 1.0:
+        print(f"FAIL: batched decode "
+              f"({serving['decode_tok_s_batched']:.1f} tok/s) regressed "
+              f"below per-request fused "
+              f"({serving['decode_tok_s_per_request']:.1f} tok/s)")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

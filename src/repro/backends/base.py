@@ -51,6 +51,9 @@ class Backend(abc.ABC):
     def __init__(self, cfg: "FeatherConfig"):
         self.cfg = cfg
         self.outputs: dict[str, np.ndarray] = {}
+        #: kernel launches performed (only compiled backends bump this;
+        #: the interpreter replays instructions, it does not launch)
+        self.n_launches = 0
         # one executor per logical array, created on first sharded run
         self._shard_subs: dict[int, "Backend"] = {}
 
@@ -88,6 +91,38 @@ class Backend(abc.ABC):
                 t["I"] = tensors["I"]
             self.run_program(prog, t)
         return self.outputs
+
+    # -- batched decode attention --------------------------------------------
+    def run_batched_attention(self, programs, q: np.ndarray,
+                              kT: np.ndarray, v: np.ndarray,
+                              lengths=None) -> np.ndarray:
+        """Advance a whole decode batch through one attention segment.
+
+        ``programs`` is the (score, value) Program pair of a dynamic
+        attention segment; ``q`` is [B, m, d] stacked per-request
+        carriers, ``kT`` [B, d, skv] / ``v`` [B, skv, d_o] the
+        per-request gathered KV operands, ``lengths`` the per-request
+        true KV lengths.  Returns the stacked [B, m, d_o] context.
+
+        The base implementation replays the chained Program pair once
+        per request -- the sequential oracle the batched kernel must
+        match.  The Programs' in-stream softmax spans the full ``skv``
+        width, so the base path only accepts full-width lengths; the
+        Pallas override (``kernel_ops.flash_decode``) handles genuinely
+        ragged batches.
+        """
+        qk, pv = programs
+        skv = kT.shape[2]
+        if lengths is not None:
+            assert all(int(x) == skv for x in np.asarray(lengths).ravel()), \
+                ("base run_batched_attention replays full-width Programs; "
+                 f"ragged lengths {lengths} need the Pallas backend")
+        outs = []
+        for r in range(q.shape[0]):
+            self.run_program(qk, {"I": q[r], "W": kT[r]})
+            out = self.run_program(pv, {"W": v[r]})[pv.out_name]
+            outs.append(np.asarray(out))
+        return np.stack(outs)
 
     # -- multi-array execution ----------------------------------------------
     def _make_shard_backend(self) -> "Backend":

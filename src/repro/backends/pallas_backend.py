@@ -238,6 +238,9 @@ class PallasBackend(Backend):
         # compile_program invocations this instance performed.
         self.compile_cache = compile_cache
         self.n_compiles = 0
+        # kernel launches this instance performed (one pallas_call each);
+        # the Scheduler diffs this to prove one-launch-per-segment ticks
+        self.n_launches = 0
 
     def compile(self, program: "Program") -> CompiledProgram:
         key = id(program)
@@ -288,6 +291,7 @@ class PallasBackend(Backend):
         scratch; only the segment input and the final output cross HBM.
         """
         comp = self.compile_fused(segment)
+        self.n_launches += 1
         tensors = tensors or {}
         x = self._resolve("I", tensors, False)
         ws = [jax.numpy.asarray(
@@ -301,6 +305,19 @@ class PallasBackend(Backend):
         out = np.asarray(out)
         self.outputs[comp.out_name] = out
         return self.outputs
+
+    def run_batched_attention(self, programs, q, kT, v, lengths=None):
+        """ONE ``flash_decode`` launch for the whole decode batch: every
+        request's score+context GEMM pair, each row masked to its own
+        true KV length (SNIPPETS §2 flash-decode shape).  Replaces 2*B
+        per-request launches with one."""
+        import jax.numpy as jnp
+        self.n_launches += 1
+        k = jnp.asarray(kT, jnp.float32).transpose(0, 2, 1)
+        out = kernel_ops.flash_decode(
+            jnp.asarray(q, jnp.float32), k, jnp.asarray(v, jnp.float32),
+            lengths, interpret=self.interpret)
+        return np.asarray(out)
 
     def _resolve(self, name: str | None, tensors, elided: bool):
         if name is None:
@@ -380,6 +397,7 @@ class PallasBackend(Backend):
             return o
 
         # check_rep=False: jax has no replication rule for pallas_call
+        self.n_launches += 1
         out = shard_map(body, mesh=jmesh, in_specs=in_specs,
                         out_specs=out_spec, check_rep=False)(x, w)
         out = np.ascontiguousarray(np.asarray(out)[:g.m, :g.n])
@@ -399,6 +417,7 @@ class PallasBackend(Backend):
         if isinstance(program, programlib.ShardedProgram):
             return self.run_sharded(program, tensors)
         comp = self.compile(program)
+        self.n_launches += 1
         x = self._resolve(comp.input_name, tensors, program.input_elided)
         w = self._resolve(comp.weight_name, tensors, False)
         out = kernel_ops.nest_gemm(

@@ -764,6 +764,47 @@ def chain(programs: list[Program], lower_fn: Callable = None
 
 
 # ---------------------------------------------------------------------------
+# M-polymorphic buckets (cross-request batched decode)
+# ---------------------------------------------------------------------------
+
+#: Padded host-M bucket ladder for cross-request batching: the serving
+#: scheduler stacks B requests' decode rows along M and executes the
+#: stack at the smallest bucket >= B, so every (segment, bucket) pair
+#: compiles exactly once regardless of how the batch composition drifts
+#: as requests admit and retire.
+M_BUCKET_LADDER: tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+def m_bucket(rows: int,
+             ladder: tuple[int, ...] = M_BUCKET_LADDER) -> int:
+    """Smallest ladder bucket >= ``rows`` (doubling past the ladder end,
+    so an oversized batch still gets a power-of-two pad)."""
+    if rows < 1:
+        raise ValueError(f"need at least one row, got {rows}")
+    for b in ladder:
+        if b >= rows:
+            return b
+    b = ladder[-1]
+    while b < rows:
+        b *= 2
+    return b
+
+
+def bucketed_gemm(gemm, bucket: int):
+    """The same GEMM with ``bucket`` stacked request blocks along host-M.
+
+    K/N (and therefore the weight operand and its residency) are
+    untouched; callers re-lower with the *original* MappingChoice, whose
+    K tiling ``snap_tiling`` preserves, so every stacked row sees the
+    same reduction order as the per-request Program -- the batched path
+    stays on the sequential path's numeric trajectory."""
+    if bucket < 1:
+        raise ValueError(f"bucket must be >= 1, got {bucket}")
+    name = f"{gemm.name}@mx{bucket}" if gemm.name else gemm.name
+    return dataclasses.replace(gemm, m=bucket * gemm.m, name=name)
+
+
+# ---------------------------------------------------------------------------
 # Fused segments (chained-layer elision compiled to ONE kernel launch)
 # ---------------------------------------------------------------------------
 

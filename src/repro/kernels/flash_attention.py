@@ -4,6 +4,14 @@ Grid: (batch*heads, Q blocks, KV blocks); KV is the innermost sequential
 dimension.  Running (max, sum, acc) live in VMEM scratch and the output
 block is finalised on the last KV step -- the classic online-softmax
 recurrence, with causal block skipping via pl.when.
+
+``flash_decode`` is the serving twin: one launch advances a whole batch
+of decode requests, each row attending over its *own* gathered K/V pages
+masked to its own true length (grid (requests, KV blocks); per-request
+length rides along as a [B, 1] int32 operand).  Unlike the prefill
+kernel it applies no ``d**-0.5`` scaling by default -- the MINISA GEMM
+stream's score GEMM carries none, and the batched path must stay on the
+sequential path's numeric trajectory.
 """
 
 from __future__ import annotations
@@ -99,3 +107,73 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, n_kv: int, sq: int, bkv: int, scale: float):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                           # [sq, d]
+    k = k_ref[0]                           # [bkv, d]
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (sq, bkv), 1)
+    # this request's true KV length -- everything past it (other requests'
+    # retired pages, zero padding) is masked out of the softmax
+    s = jnp.where(kpos < len_ref[0, 0], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new))
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bkv", "interpret", "scale"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 lengths: jax.Array, *, bkv: int = 128,
+                 interpret: bool = False, scale: float = 1.0) -> jax.Array:
+    """Batched ragged decode attention: one launch for the whole batch.
+
+    q: [B, sq, d] (one decode carrier per request), k, v: [B, skv, d]
+    (per-request gathered KV pages), lengths: [B, 1] int32 true KV
+    lengths.  Softmax for request b runs over k[b, :lengths[b]] only.
+    No default ``d**-0.5``: score scaling is the GEMM stream's business.
+    """
+    b, sq, d = q.shape
+    sk = k.shape[1]
+    assert sk % bkv == 0, (sk, bkv)
+    n_kv = sk // bkv
+    kernel = functools.partial(_decode_kernel, n_kv=n_kv, sq=sq, bkv=bkv,
+                               scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, sq, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bkv, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, sq, d), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((sq, 1), jnp.float32),
+            pltpu.VMEM((sq, 1), jnp.float32),
+            pltpu.VMEM((sq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lengths)

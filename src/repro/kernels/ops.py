@@ -106,6 +106,30 @@ def flash_attention(q, k, v, *, causal=True, bq=128, bkv=128,
     return o
 
 
+def flash_decode(q, k, v, lengths=None, *, bkv=128, interpret=None,
+                 scale=1.0):
+    """Ragged-shape-safe batched decode attention: one launch advances
+    every request in the batch, each masked to its own KV length.
+
+    q: [B, sq, d], k, v: [B, skv, d], lengths: [B] or [B, 1] int true
+    lengths (defaults to the full skv for every request).
+    """
+    interpret = _auto_interpret(interpret)
+    b, sq, d = q.shape
+    sk = k.shape[1]
+    if lengths is None:
+        lengths = jnp.full((b, 1), sk, dtype=jnp.int32)
+    else:
+        lengths = jnp.asarray(lengths, dtype=jnp.int32).reshape(b, 1)
+    bkv_ = min(bkv, _rnd(sk))
+    q, _ = _pad_to(q, 1, 8)
+    k, _ = _pad_to(k, 1, bkv_)
+    v, _ = _pad_to(v, 1, bkv_)
+    o = _fa.flash_decode(q, k, v, lengths, bkv=bkv_, interpret=interpret,
+                         scale=scale)
+    return o[:, :sq]
+
+
 def mamba_scan(da, dbx, c, h0, *, d_blk=256, chunk=64, interpret=None):
     interpret = _auto_interpret(interpret)
     b, l, d, n = da.shape

@@ -23,15 +23,17 @@ adds per-array traffic, cycles and load imbalance.
 
 from repro.runtime.cache import (CacheStats, ProgramCache,  # noqa: F401
                                  default_cache, reset_default_cache)
-from repro.runtime.executable import (ACTIVATIONS, ModelExecutable,  # noqa: F401
+from repro.runtime.executable import (ACTIVATIONS, BatchPlan,  # noqa: F401
+                                      BatchSegment, ModelExecutable,
                                       RunResult, Segment, Step, TINY_SHAPES,
                                       adapt)
-from repro.runtime.scheduler import (Request, RequestReport,  # noqa: F401
-                                     Scheduler, SchedulerReport)
+from repro.runtime.scheduler import (KVPool, PagedKV, Request,  # noqa: F401
+                                     RequestReport, Scheduler,
+                                     SchedulerReport)
 
 __all__ = [
     "CacheStats", "ProgramCache", "default_cache", "reset_default_cache",
-    "ACTIVATIONS", "ModelExecutable", "RunResult", "Segment", "Step",
-    "TINY_SHAPES", "adapt", "Request", "RequestReport", "Scheduler",
-    "SchedulerReport",
+    "ACTIVATIONS", "BatchPlan", "BatchSegment", "ModelExecutable",
+    "RunResult", "Segment", "Step", "TINY_SHAPES", "adapt", "KVPool",
+    "PagedKV", "Request", "RequestReport", "Scheduler", "SchedulerReport",
 ]

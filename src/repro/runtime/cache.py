@@ -69,6 +69,8 @@ class CacheStats:
     fused_hits: int = 0
     fused_misses: int = 0         # == fused-segment compiles
     evictions: int = 0
+    disk_evictions: int = 0       # plans trimmed from the persisted tier
+    disk_bytes: int = 0           # size of the persisted file, last save
     loaded_from_disk: int = 0
 
     @property
@@ -111,6 +113,8 @@ class CacheStats:
             "fused_compiles": self.fused_misses,
             "fused_hits": self.fused_hits,
             "evictions": self.evictions,
+            "disk_evictions": self.disk_evictions,
+            "disk_bytes": self.disk_bytes,
             "loaded_from_disk": self.loaded_from_disk,
         }
 
@@ -226,6 +230,7 @@ class ProgramCache:
         hit = self._lowered.get(key)
         if hit is not None:
             self.stats.lowered_hits += 1
+            self._lowered[key] = self._lowered.pop(key)   # LRU touch
             return hit
         self.stats.lowered_misses += 1
         prog = programlib.lower(gemm, choice, cfg, activation=activation,
@@ -252,6 +257,7 @@ class ProgramCache:
         hit = self._sharded.get(key)
         if hit is not None:
             self.stats.sharded_hits += 1
+            self._sharded[key] = self._sharded.pop(key)   # LRU touch
             return hit
         self.stats.sharded_misses += 1
         sharded = programlib.shard_program(program, mesh, axis=axis,
@@ -263,9 +269,11 @@ class ProgramCache:
     # -- tier 3: backend compile artifacts (PallasBackend hook) ---------------
     def lookup_compiled(self, program: "Program",
                         max_block: int) -> "CompiledProgram | None":
-        comp = self._compiled.get(compiled_key(program, max_block))
+        key = compiled_key(program, max_block)
+        comp = self._compiled.get(key)
         if comp is not None:
             self.stats.compile_hits += 1
+            self._compiled[key] = self._compiled.pop(key)   # LRU touch
         return comp
 
     def store_compiled(self, program: "Program", max_block: int,
@@ -276,9 +284,11 @@ class ProgramCache:
 
     # -- tier 5: fused-segment artifacts (one compile per chained segment) ----
     def lookup_fused(self, segment, max_block: int):
-        comp = self._fused.get(fused_key(segment, max_block))
+        key = fused_key(segment, max_block)
+        comp = self._fused.get(key)
         if comp is not None:
             self.stats.fused_hits += 1
+            self._fused[key] = self._fused.pop(key)   # LRU touch
         return comp
 
     def store_fused(self, segment, max_block: int, comp) -> None:
@@ -317,15 +327,26 @@ class ProgramCache:
 
     def save(self, path: str | os.PathLike | None = None) -> str:
         """Persist the plan tier (search results never hold callables, so
-        they pickle cleanly; variant/compiled tiers are re-derived)."""
+        they pickle cleanly; variant/compiled tiers are re-derived).
+
+        The documented ``max_plans`` LRU bound holds on disk too: only
+        the most-recently-used ``max_plans`` entries persist (dict order
+        IS recency order -- hits re-insert), trimmed entries count as
+        ``disk_evictions``, and the written file's size is stat'ed into
+        ``disk_bytes``."""
         path = os.fspath(path or self.path)
         if not path:
             raise ValueError("no persistence path configured")
-        payload = {"version": _PERSIST_VERSION, "plans": self._plans}
+        items = list(self._plans.items())
+        trimmed = max(0, len(items) - self.max_plans)
+        self.stats.disk_evictions += trimmed
+        payload = {"version": _PERSIST_VERSION,
+                   "plans": dict(items[trimmed:])}
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:
             pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
         os.replace(tmp, path)
+        self.stats.disk_bytes = os.path.getsize(path)
         return path
 
     def load(self, path: str | os.PathLike) -> int:

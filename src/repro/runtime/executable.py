@@ -171,6 +171,53 @@ class Segment:
 
 
 @dataclasses.dataclass
+class BatchSegment:
+    """One segment of the M-polymorphic batched-decode plan.
+
+    kind 'static':    weight-stationary segment re-lowered at the M
+                      bucket (same MappingChoice, so the K accumulation
+                      order matches the per-request path); every active
+                      request's rows stack along M and advance in ONE
+                      launch (``fused`` when fusion-legal, else the
+                      bucketed chained per-layer Programs).
+    kind 'attention': the dynamic score+context pair; per-request KV
+                      rides in as stacked operands and the backend's
+                      ``run_batched_attention`` advances the whole batch
+                      in one launch (flash-decode on Pallas).
+    kind 'perreq':    anything the bucketed lowering cannot express --
+                      sequential per-request replay, bit-identical to
+                      the unbatched path.
+    """
+    kind: str                          # 'static' | 'attention' | 'perreq'
+    indices: list[int]                 # step indices of the segment
+    programs: list                     # bucketed Programs / (score, ctx)
+    fused: programlib.FusedSegment | None = None
+    host_act: Callable | None = None   # last step's host-side activation
+    m_rows: int = 1                    # per-request rows through the seg
+
+
+@dataclasses.dataclass
+class BatchPlan:
+    """Batched-decode execution plan for one M bucket."""
+    bucket: int
+    segments: list[BatchSegment]
+
+    @property
+    def launches_per_tick(self) -> int | None:
+        """Backend launches one tick costs, or None if a per-request
+        fallback segment makes it batch-size-dependent."""
+        total = 0
+        for seg in self.segments:
+            if seg.kind == "perreq":
+                return None
+            if seg.kind == "static" and seg.fused is None:
+                total += len(seg.programs)
+            else:
+                total += 1
+        return total
+
+
+@dataclasses.dataclass
 class RunResult:
     outputs: list[np.ndarray]       # per-step outputs (post host_act);
                                     # interior steps of a fused segment
@@ -214,6 +261,7 @@ class ModelExecutable:
         self.steps = self._build()
         self._perf_cache: dict[int, tuple] = {}
         self._fusion_stats: dict | None = None
+        self._batch_plans: dict[int, BatchPlan] = {}
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -462,6 +510,169 @@ class ModelExecutable:
                 prev = out
         return RunResult(outputs=outputs, final=prev, checked=check,
                          fused_segments=n_fused)
+
+    # -- cross-request batched execution (M-polymorphic segments) -------------
+    def batch_plan(self, n_requests: int) -> BatchPlan:
+        """The M-polymorphic plan serving ``n_requests`` stacked rows.
+
+        Bucketed to :func:`program.m_bucket` so thousands of batch
+        compositions share a handful of compiled artifacts; plans are
+        memoised per bucket and their Programs flow through the shared
+        ProgramCache like every other lowering."""
+        if self.mesh is not None:
+            raise ValueError("batched decode requires a single-array "
+                             "stream; mesh-sharded streams schedule "
+                             "per-request")
+        bucket = programlib.m_bucket(n_requests)
+        plan = self._batch_plans.get(bucket)
+        if plan is None:
+            plan = self._build_batch_plan(bucket)
+            self._batch_plans[bucket] = plan
+        return plan
+
+    def _build_batch_plan(self, bucket: int) -> BatchPlan:
+        """Re-lower every static segment at m = bucket * m_rows.
+
+        Each bucketed GEMM reuses the base step's *own* MappingChoice
+        (``snap_tiling`` clips the M tile; K tiling is untouched), so the
+        per-row accumulation order matches the per-request path -- the
+        batched numbers stay on the sequential trajectory.  In-program
+        activation legality survives the re-lowering: elementwise acts
+        are M-independent and row-wise acts were only in-program under
+        WO-S with full output rows, which bucketing preserves."""
+        cache = self.cache
+        segs: list[BatchSegment] = []
+        for seg in self.segments:
+            steps = [self.steps[i] for i in seg.indices]
+            idx = list(seg.indices)
+            m_rows = steps[0].op.gemm.m
+            if any(s.op.dynamic for s in steps):
+                if (len(steps) == 2 and all(s.op.dynamic for s in steps)
+                        and steps[0].program.act_name == "softmax"
+                        and steps[0].host_act is None
+                        and steps[1].input_mode == "wired"
+                        and steps[1].program.act_name == "none"):
+                    segs.append(BatchSegment(
+                        kind="attention", indices=idx,
+                        programs=[steps[0].program, steps[1].program],
+                        host_act=steps[-1].host_act, m_rows=m_rows))
+                else:
+                    segs.append(BatchSegment(kind="perreq", indices=idx,
+                                             programs=[]))
+                continue
+            try:
+                progs = []
+                for s in steps:
+                    bg = programlib.bucketed_gemm(s.op.gemm, bucket)
+                    progs.append(cache.lower(
+                        bg, s.program.choice, self.cfg,
+                        activation=s.program.activation,
+                        act_name=s.program.act_name,
+                        out_name=s.program.out_name))
+                fused = None
+                if len(progs) > 1:
+                    progs = programlib.chain(progs, lower_fn=cache.lower)
+                    fused = programlib.fuse_segment(progs)
+            except ValueError:
+                segs.append(BatchSegment(kind="perreq", indices=idx,
+                                         programs=[]))
+                continue
+            segs.append(BatchSegment(kind="static", indices=idx,
+                                     programs=list(progs), fused=fused,
+                                     host_act=steps[-1].host_act,
+                                     m_rows=m_rows))
+        return BatchPlan(bucket=bucket, segments=segs)
+
+    def run_batch(self, backend, envs: list[dict[str, np.ndarray]], *,
+                  lengths=None, fused: bool = True) -> list[np.ndarray]:
+        """Advance EVERY request one step with one launch per segment.
+
+        ``envs`` carries one tensor dict per request (static weights are
+        identical across requests by construction; dynamic KV operands
+        and fresh inputs are per-request).  ``lengths`` are the
+        per-request true KV widths for the attention segment.  Returns
+        the per-request final carriers, each bit-comparable (modulo the
+        stabilised-recurrence regime) to a sequential :meth:`run`.
+        """
+        be = backend if not isinstance(backend, str) \
+            else self.make_backend(backend)
+        n = len(envs)
+        plan = self.batch_plan(n)
+        prevs: list[np.ndarray | None] = [None] * n
+        for bseg in plan.segments:
+            steps = [self.steps[i] for i in bseg.indices]
+            first = steps[0]
+            g = first.op.gemm
+            if bseg.kind == "perreq":
+                for r in range(n):
+                    prevs[r] = self._run_steps_perreq(be, steps, envs[r],
+                                                      prevs[r])
+                continue
+            xs = []
+            for r in range(n):
+                if first.input_mode == "fresh":
+                    xs.append(np.asarray(envs[r][first.input_name],
+                                         np.float32))
+                elif first.input_mode == "adapt":
+                    xs.append(adapt(prevs[r], g.m, g.k))
+                else:          # 'wired' never starts a segment
+                    xs.append(np.asarray(prevs[r], np.float32))
+            if bseg.kind == "attention":
+                kT = np.stack([np.asarray(envs[r][steps[0].weight_name],
+                                          np.float32) for r in range(n)])
+                v = np.stack([np.asarray(envs[r][steps[1].weight_name],
+                                         np.float32) for r in range(n)])
+                out = be.run_batched_attention(
+                    tuple(bseg.programs), np.stack(xs), kT, v, lengths)
+                outs = [np.asarray(out[r]) for r in range(n)]
+                if bseg.host_act is not None:
+                    outs = [np.asarray(bseg.host_act(o)) for o in outs]
+                prevs = outs
+                continue
+            # static: stack along M, zero-pad to the bucket, one launch
+            m_rows = bseg.m_rows
+            X = np.concatenate(xs, axis=0)
+            if n < plan.bucket:
+                X = np.concatenate(
+                    [X, np.zeros(((plan.bucket - n) * m_rows, X.shape[1]),
+                                 np.float32)], axis=0)
+            if fused and bseg.fused is not None:
+                t = {"I": X}
+                for j, s in enumerate(steps):
+                    t[f"W{j}"] = envs[0][s.weight_name]
+                out = np.asarray(
+                    be.run_segment(bseg.fused, t)[bseg.fused.out_name])
+            else:
+                out = X
+                for j, (s, prog) in enumerate(zip(steps, bseg.programs)):
+                    t = {"W": envs[0][s.weight_name]}
+                    if j == 0:
+                        t["I"] = X
+                    out = np.asarray(be.run_program(prog, t)
+                                     [prog.out_name])
+            out = out[:n * m_rows]
+            if bseg.host_act is not None:
+                out = np.asarray(bseg.host_act(out))
+            prevs = [out[r * m_rows:(r + 1) * m_rows] for r in range(n)]
+        return prevs
+
+    def _run_steps_perreq(self, be, steps, env, prev):
+        """Sequential replay of one segment for one request (the batched
+        plan's fallback; numerics identical to :meth:`run`'s per-Program
+        path)."""
+        for s in steps:
+            g = s.op.gemm
+            t: dict[str, np.ndarray] = {"W": env[s.weight_name]}
+            if s.input_mode == "fresh":
+                t["I"] = env[s.input_name]
+            elif s.input_mode == "adapt":
+                t["I"] = adapt(prev, g.m, g.k)
+            out = np.asarray(be.run_program(s.program, t)
+                             [s.program.out_name])
+            if s.host_act is not None:
+                out = np.asarray(s.host_act(out))
+            prev = out
+        return prev
 
     # -- accounting (the same tile streams perf.simulate consumes) ------------
     @property

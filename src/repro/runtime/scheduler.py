@@ -9,27 +9,37 @@ One prefill and one decode :class:`~repro.runtime.executable.ModelExecutable`
     per scheduler and shared by all requests (only *dynamic* operands --
     the attention K^T/V, FEATHER+'s runtime-layout case -- are
     per-request state);
-  * **KV residency**: each request carries its dynamic tensors across
-    decode steps; every step's output is committed back into them (a
-    deterministic bounded update standing in for the model's KV append),
-    and the next step's fresh inputs derive from the previous output, so
-    the decode loop is a real numeric recurrence;
+  * **KV residency**: each request's dynamic tensors live in a paged
+    :class:`KVPool` arena for the request's lifetime; every step's
+    output is committed back into them (a deterministic bounded update
+    standing in for the model's KV append), and the next step's fresh
+    inputs derive from the previous output, so the decode loop is a real
+    numeric recurrence.  Pages are evicted back to the pool when a
+    request retires; admission stalls (never deadlocks) when the pool is
+    exhausted;
   * **one backend instance** executes everything, so the Pallas compile
     cache and the machine's jitted invocation kernels stay warm across
     requests -- a second request performs zero mapper searches and zero
     backend compiles (the cache stats in the report prove it).
 
-Scheduling is continuous batching: up to ``max_concurrent`` requests are
-in flight; each tick admits waiting requests into free slots (paying one
-prefill) and advances every active request by one decode step; finished
-requests retire immediately, freeing their slot mid-batch.
+Scheduling is split prefill/decode continuous batching: every tick first
+advances the WHOLE decode batch -- with ``batch_decode`` the batch
+stacks along M and moves through the decode stream's M-polymorphic
+segments in ONE backend launch per segment
+(``ModelExecutable.run_batch``), flash-decode included -- then retires
+finished requests mid-batch, and only then spends the per-tick
+``token_budget`` on prefill work: continuing admitted requests' prompt
+chunks and admitting new requests into free slots.  Long prompts are
+chunked (``prompt_tokens`` per request), so one long prompt can never
+stall the decode batch.
 
 Per-request accounting reuses the exact tile streams ``perf.simulate``
 consumes (via ``ModelExecutable.perf_stats``): MINISA vs micro-instruction
-traffic bytes, modelled cycles and instruction-fetch stall fractions.
-With mesh-sharded executables the report additionally carries per-array
-traffic/cycles and the load-imbalance factor, and seeded runs are
-bit-reproducible across backends (quantised recurrence feedback; see
+traffic bytes, modelled cycles and instruction-fetch stall fractions,
+plus wall-clock latency and time-to-first-token.  With mesh-sharded
+executables the report additionally carries per-array traffic/cycles and
+the load-imbalance factor, and seeded runs are bit-reproducible across
+backends *and batch compositions* (quantised recurrence feedback; see
 ``_stabilize``).
 """
 
@@ -48,9 +58,10 @@ from repro.runtime.executable import ModelExecutable
 #: The serving recurrence feeds backend outputs back into request state
 #: (KV commits, the next step's input carrier).  Quantising that feedback
 #: to this many decimals makes a seeded run *bit*-reproducible across
-#: backends: fp32 kernel-order differences between the interpreter and
-#: the Pallas kernels (~1e-6 at serving extents) vanish under the
-#: quantum, so both backends walk the identical state trajectory.
+#: backends -- and across batch compositions: fp32 kernel-order
+#: differences between the interpreter, the Pallas kernels and the
+#: M-stacked batched launches (~1e-6 at serving extents) vanish under
+#: the quantum, so every path walks the identical state trajectory.
 _STATE_DECIMALS = 3
 
 
@@ -58,11 +69,20 @@ def _stabilize(x: np.ndarray) -> np.ndarray:
     return np.round(np.asarray(x, np.float32), _STATE_DECIMALS)
 
 
+def _pct(vals: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(vals, np.float64), q)) \
+        if vals else 0.0
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
     decode_steps: int
     seed: int = 0
+    #: prompt length in tokens; prompts longer than one prefill pass are
+    #: chunked (None == exactly one pass, the pre-chunking behaviour)
+    prompt_tokens: int | None = None
+    t_submit: float = 0.0
 
 
 @dataclasses.dataclass
@@ -78,9 +98,11 @@ class RequestReport:
     stall_minisa: float
     stall_micro: float
     #: sha1 over the request's final quantised KV state + carrier --
-    #: equal across backends / re-runs for equal seeds (determinism
-    #: regression surface)
+    #: equal across backends / re-runs / batch compositions for equal
+    #: seeds (determinism regression surface)
     state_checksum: str = ""
+    #: submit -> first decode token out (prefill queueing + chunking)
+    ttft_s: float = 0.0
 
     @property
     def tokens(self) -> int:
@@ -96,6 +118,7 @@ class RequestReport:
             "prefill_tokens": self.prefill_tokens,
             "decode_tokens": self.decode_tokens,
             "wall_s": self.wall_s,
+            "ttft_s": self.ttft_s,
             "minisa_bytes": self.minisa_bytes,
             "micro_bytes": self.micro_bytes,
             "instr_reduction": self.instr_reduction,
@@ -122,6 +145,14 @@ class SchedulerReport:
     decode_fused_segments: int = 0    # fused launches per decode step
     decode_segments: int = 0          # total decode segments per step
     decode_hbm_elided_bytes: float = 0.0   # modelled per decode step
+    # cross-request batched decode (M-polymorphic segments)
+    batch_decode: bool = False
+    decode_wall_s: float = 0.0        # wall time inside decode ticks
+    prefill_wall_s: float = 0.0       # wall time inside prefill/admission
+    decode_steps_total: int = 0       # request-steps decoded
+    decode_ticks: int = 0             # ticks that ran a decode phase
+    decode_launches: int = 0          # backend kernel launches in decode
+    kv: dict = dataclasses.field(default_factory=dict)   # KVPool stats
 
     @property
     def total_tokens(self) -> int:
@@ -132,18 +163,44 @@ class SchedulerReport:
         return self.total_tokens / max(self.wall_s, 1e-9)
 
     @property
+    def decode_tokens_per_sec(self) -> float:
+        """Decode-phase throughput, separated from prefill/TTFT."""
+        toks = sum(r.decode_tokens for r in self.requests)
+        return toks / max(self.decode_wall_s, 1e-9)
+
+    @property
+    def launches_per_decode_tick(self) -> float:
+        return self.decode_launches / max(self.decode_ticks, 1)
+
+    @property
     def load_imbalance(self) -> float:
         return perf.load_imbalance(self.per_array_cycles)
 
     def summary(self) -> dict:
+        walls = [r.wall_s for r in self.requests]
+        ttfts = [r.ttft_s for r in self.requests]
         return {
             "backend": self.backend,
             "n_requests": len(self.requests),
             "total_tokens": self.total_tokens,
             "tokens_per_sec": self.tokens_per_sec,
+            "decode_tokens_per_sec": self.decode_tokens_per_sec,
             "wall_s": self.wall_s,
+            "decode_wall_s": self.decode_wall_s,
+            "prefill_wall_s": self.prefill_wall_s,
             "ticks": self.ticks,
             "max_concurrent": self.max_concurrent,
+            "batch_decode": self.batch_decode,
+            "decode_ticks": self.decode_ticks,
+            "decode_steps_total": self.decode_steps_total,
+            "decode_launches": self.decode_launches,
+            "launches_per_decode_tick": self.launches_per_decode_tick,
+            "latency_p50_s": _pct(walls, 50),
+            "latency_p95_s": _pct(walls, 95),
+            "latency_p99_s": _pct(walls, 99),
+            "ttft_p50_s": _pct(ttfts, 50),
+            "ttft_p95_s": _pct(ttfts, 95),
+            "ttft_p99_s": _pct(ttfts, 99),
             "n_arrays": self.n_arrays,
             "per_array_minisa_bytes": list(self.per_array_minisa_bytes),
             "per_array_cycles": list(self.per_array_cycles),
@@ -152,6 +209,7 @@ class SchedulerReport:
             "decode_fused_segments": self.decode_fused_segments,
             "decode_segments": self.decode_segments,
             "decode_hbm_elided_bytes": self.decode_hbm_elided_bytes,
+            "kv": dict(self.kv),
             "cache_hit_rate": self.cache.get("hit_rate", 0.0),
             "cache_searches": self.cache.get("searches", 0),
             "cache_compiles": self.cache.get("compiles", 0),
@@ -170,21 +228,162 @@ class SchedulerReport:
         }
 
 
+# ---------------------------------------------------------------------------
+# Paged per-request KV state
+# ---------------------------------------------------------------------------
+
+def _kv_specs(executable: ModelExecutable) -> dict[str, tuple]:
+    """name -> (shape, time_axis, time_extent, width) for every dynamic
+    tensor.  The time-like axis is the *longer* one -- the same rule the
+    commit recurrence has always used."""
+    specs = {}
+    for name, (shape, kind) in executable.tensor_specs().items():
+        if kind != "dynamic":
+            continue
+        rows, cols = shape
+        if cols > rows:
+            specs[name] = (shape, 1, cols, rows)
+        else:
+            specs[name] = (shape, 0, rows, cols)
+    return specs
+
+
+class KVPool:
+    """Fixed arena of KV pages shared by all in-flight requests.
+
+    One page holds ``page_size`` time slots of EVERY dynamic tensor (one
+    arena per tensor, indexed by the same page table), so a request's
+    whole KV state allocates and evicts as one page list.  ``allocate``
+    returns None when the pool is exhausted -- the scheduler turns that
+    into an admission stall, never an OOM.
+    """
+
+    def __init__(self, specs: dict[str, tuple], page_size: int,
+                 n_pages: int):
+        self.specs = specs
+        self.page_size = max(1, page_size)
+        self.n_pages = max(1, n_pages)
+        self.arenas = {
+            name: np.zeros((self.n_pages * self.page_size, width),
+                           np.float32)
+            for name, (_, _, _, width) in specs.items()}
+        self._free = list(range(self.n_pages - 1, -1, -1))
+        self.allocated_pages = 0
+        self.high_water_pages = 0
+        self.evicted_pages = 0
+        self.admit_stalls = 0
+
+    @property
+    def time_extent(self) -> int:
+        """Slots one request needs: the longest dynamic time axis."""
+        return max((t for _, _, t, _ in self.specs.values()), default=1)
+
+    @property
+    def pages_per_request(self) -> int:
+        return -(-self.time_extent // self.page_size)
+
+    def allocate(self) -> list[int] | None:
+        need = self.pages_per_request
+        if len(self._free) < need:
+            return None
+        pages = [self._free.pop() for _ in range(need)]
+        self.allocated_pages += need
+        self.high_water_pages = max(self.high_water_pages,
+                                    self.allocated_pages)
+        return pages
+
+    def release(self, pages: list[int]) -> None:
+        self._free.extend(pages)
+        self.allocated_pages -= len(pages)
+        self.evicted_pages += len(pages)
+
+    def stats(self) -> dict:
+        return {
+            "n_pages": self.n_pages,
+            "page_size": self.page_size,
+            "pages_per_request": self.pages_per_request,
+            "allocated_pages": self.allocated_pages,
+            "high_water_pages": self.high_water_pages,
+            "evicted_pages": self.evicted_pages,
+            "admit_stalls": self.admit_stalls,
+        }
+
+
+class PagedKV:
+    """One request's KV state, resident in pool pages.
+
+    ``seed``/``commit``/``gather`` reproduce the flat-dict recurrence
+    bit-exactly: ``gather`` reconstructs the original-shaped float32
+    tensors, so state checksums are independent of the paging layout.
+    """
+
+    def __init__(self, pool: KVPool, pages: list[int]):
+        self.pool = pool
+        self.pages = pages
+
+    def _slot(self, j: int) -> int:
+        ps = self.pool.page_size
+        return self.pages[j // ps] * ps + j % ps
+
+    def seed(self, dynamics: dict[str, np.ndarray]) -> None:
+        for name, (shape, tax, t_ext, _) in self.pool.specs.items():
+            arr = np.asarray(dynamics[name], np.float32)
+            arena = self.pool.arenas[name]
+            for j in range(t_ext):
+                arena[self._slot(j), :] = arr[j, :] if tax == 0 \
+                    else arr[:, j]
+
+    def commit(self, out: np.ndarray, pos: int) -> None:
+        """Deterministic bounded KV append: fold the step output into
+        one time slot of each dynamic operand (same fold as the
+        pre-paging ``_commit_kv``, same quantisation)."""
+        vec = _stabilize(np.tanh(np.asarray(out, np.float32).ravel()))
+        if vec.size == 0:
+            return
+        for name, (_, _, t_ext, width) in self.pool.specs.items():
+            arena = self.pool.arenas[name]
+            arena[self._slot(pos % t_ext), :] = np.resize(vec, width)
+
+    def gather(self) -> dict[str, np.ndarray]:
+        out = {}
+        for name, (shape, tax, t_ext, _) in self.pool.specs.items():
+            arena = self.pool.arenas[name]
+            rows = np.stack([arena[self._slot(j)] for j in range(t_ext)]) \
+                if t_ext else np.zeros(shape, np.float32)
+            out[name] = np.ascontiguousarray(rows if tax == 0 else rows.T)
+        return out
+
+    def release(self) -> None:
+        if self.pages:
+            self.pool.release(self.pages)
+            self.pages = []
+
+
 @dataclasses.dataclass
 class _Active:
     req: Request
-    dynamics: dict[str, np.ndarray]     # per-request KV residency
-    carry: np.ndarray                   # previous step's output
+    kv: PagedKV
+    carry: np.ndarray | None            # previous step's output
     t_start: float
+    prefill_chunks: int = 1             # total prompt chunks
+    chunks_done: int = 0
     decoded: int = 0
+    t_first: float = 0.0                # first decode token wall time
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.chunks_done >= self.prefill_chunks
+
+    @property
+    def dynamics(self) -> dict[str, np.ndarray]:
+        """Flat view of the paged KV state (compat / checksums)."""
+        return self.kv.gather()
 
 
 def _commit_kv(dynamics: dict[str, np.ndarray], out: np.ndarray,
                pos: int) -> None:
-    """Deterministic bounded KV append: fold the step output into one
-    slot of each dynamic operand along its time-like (longer) axis.
-    Quantised (see ``_stabilize``) so the committed state is identical
-    across backends."""
+    """Flat-dict twin of :meth:`PagedKV.commit` (kept for direct use on
+    unpaged dynamics dicts)."""
     vec = _stabilize(np.tanh(np.asarray(out, np.float32).ravel()))
     if vec.size == 0:
         return
@@ -206,25 +405,36 @@ def _state_checksum(dynamics: dict[str, np.ndarray],
 
 
 class Scheduler:
-    """Continuous-batching serving loop over prefill/decode executables.
+    """Split prefill/decode continuous-batching loop over executables.
 
     Seeding is fully explicit: every request's tensors derive from
     ``(self.seed, request seed)`` only -- never from admission order or
     leftover generator state -- and all recurrence feedback is quantised
     (``_stabilize``), so a run with the same submissions is
-    bit-reproducible run-to-run *and* across backends
-    (``RequestReport.state_checksum`` is the regression surface).
+    bit-reproducible run-to-run, across backends *and across batch
+    compositions* (``RequestReport.state_checksum`` is the regression
+    surface).
+
+    ``batch_decode`` (default: on for the Pallas backend on a
+    single-array stream) advances the whole active batch through the
+    decode stream's M-polymorphic segments with ONE backend launch per
+    segment per tick; ``token_budget`` caps prefill tokens per tick so
+    prompt work never starves the decode batch, and ``prompt_tokens``
+    at submit chunks long prompts across ticks.
 
     When the executables carry an ``ArrayMesh``, every Program executes
-    sharded and the report adds per-array instruction traffic, modelled
-    cycles and the load-imbalance factor -- the multi-array serving
-    simulator view.
+    sharded (per-request; batching auto-disables) and the report adds
+    per-array instruction traffic, modelled cycles and the
+    load-imbalance factor -- the multi-array serving simulator view.
     """
 
     def __init__(self, prefill: ModelExecutable, decode: ModelExecutable,
                  *, backend: str = "interpreter", max_concurrent: int = 4,
                  weight_seed: int = 0, seed: int = 0,
-                 use_fused: bool | None = None):
+                 use_fused: bool | None = None,
+                 batch_decode: bool | None = None,
+                 token_budget: int | None = None,
+                 kv_page_size: int = 4, kv_pages: int | None = None):
         if prefill.cfg != decode.cfg:
             raise ValueError("prefill/decode executables must share one "
                              "FeatherConfig")
@@ -240,15 +450,38 @@ class Scheduler:
         self.backend = prefill.make_backend(backend)
         self.max_concurrent = max_concurrent
         self.seed = seed
-        # Batched decode fast path: every tick advances the whole batch of
-        # active requests through the decode stream's *fused segments* --
-        # one kernel launch per chained segment instead of one dispatch
-        # per layer.  Defaults on for the compiled backend (where the
-        # per-launch overhead is the decode loop's dominant cost); the
-        # interpreter keeps the per-Program path, whose machine state IS
-        # the chain semantics.
+        # Fused-segment fast path: chained segments execute as ONE kernel
+        # launch (prefill and decode).  Defaults on for the compiled
+        # backend (where per-launch overhead dominates); the interpreter
+        # keeps the per-Program path, whose machine state IS the chain
+        # semantics.
         self.use_fused = (use_fused if use_fused is not None
                           else backend == "pallas")
+        # Cross-request batched decode: stack every active request along
+        # M and advance the batch with one launch per segment per tick.
+        # Mesh-sharded streams schedule per-request (on-chip residency is
+        # per-array state), so batching auto-disables there.
+        if batch_decode is None:
+            batch_decode = backend == "pallas" and decode.mesh is None
+        elif batch_decode and decode.mesh is not None:
+            raise ValueError("batch_decode requires a single-array "
+                             "decode stream (got an ArrayMesh)")
+        self.batch_decode = batch_decode
+        #: prefill tokens one tick may spend (None == unbounded); decode
+        #: always runs first, so prompts never stall the decode batch
+        self.token_budget = token_budget
+        # paged per-request KV state: sized so max_concurrent requests
+        # fit by default; smaller pools admission-stall, never OOM
+        specs = _kv_specs(decode)
+        t_ext = max((t for _, _, t, _ in specs.values()), default=1)
+        per_req = -(-t_ext // max(1, kv_page_size))
+        if kv_pages is None:
+            kv_pages = per_req * max_concurrent
+        if kv_pages < per_req:
+            raise ValueError(
+                f"kv_pages={kv_pages} cannot hold even one request "
+                f"({per_req} pages of {kv_page_size} slots needed)")
+        self.kv_pool = KVPool(specs, kv_page_size, kv_pages)
         # weight residency: one static weight set serves every request
         self.prefill_weights = prefill.make_tensors(weight_seed,
                                                     kinds=("weight",))
@@ -257,59 +490,119 @@ class Scheduler:
         self._pending: collections.deque[Request] = collections.deque()
         self._next_rid = 0
 
-    def submit(self, decode_steps: int, seed: int | None = None) -> Request:
+    def submit(self, decode_steps: int, seed: int | None = None,
+               prompt_tokens: int | None = None) -> Request:
         """Queue a request.  The default per-request seed derives from
         the scheduler seed and the rid alone, so a submission sequence
-        reproduces exactly regardless of wall-clock or interleaving."""
+        reproduces exactly regardless of wall-clock or interleaving.
+        ``prompt_tokens`` longer than one prefill pass are chunked
+        across ticks under the token budget."""
         if seed is None:
             seed = self.seed * 1_000_003 + self._next_rid
         req = Request(rid=self._next_rid, decode_steps=decode_steps,
-                      seed=seed)
+                      seed=seed, prompt_tokens=prompt_tokens,
+                      t_submit=time.perf_counter())
         self._next_rid += 1
         self._pending.append(req)
         return req
 
     # -- one request's phases -------------------------------------------------
-    def _admit(self, req: Request) -> _Active:
-        t_start = time.perf_counter()   # request wall time includes prefill
+    def _chunks_for(self, req: Request) -> int:
+        chunk = max(1, self.prefill.tokens or 1)
+        prompt = req.prompt_tokens if req.prompt_tokens else chunk
+        return max(1, -(-prompt // chunk))
+
+    def _admit(self, req: Request) -> _Active | None:
+        """Allocate KV pages and run the first prompt chunk; None when
+        the pool cannot hold another request (admission stall)."""
+        pages = self.kv_pool.allocate()
+        if pages is None:
+            return None
+        # request wall time runs from submission (queueing included)
+        a = _Active(req=req, kv=PagedKV(self.kv_pool, pages), carry=None,
+                    t_start=req.t_submit or time.perf_counter(),
+                    prefill_chunks=self._chunks_for(req))
+        self._prefill_chunk(a)
+        return a
+
+    def _prefill_chunk(self, a: _Active) -> None:
+        """One prompt chunk through the prefill stream (fused fast path
+        under ``use_fused``), committed into the request's KV at the
+        chunk position.  Chunk 0 seeds the KV from the request seed;
+        later chunks carry the stabilised output forward, so chunking is
+        itself a deterministic recurrence."""
+        c = a.chunks_done
         env = dict(self.prefill_weights)
-        env.update(self.prefill.make_tensors(req.seed,
-                                             kinds=("dynamic", "input")))
-        res = self.prefill.run(self.backend, tensors=env)
-        dynamics = self.decode.make_tensors(req.seed, kinds=("dynamic",))
-        _commit_kv(dynamics, res.final, 0)   # prefill output seeds the KV
-        return _Active(req=req, dynamics=dynamics, carry=res.final,
-                       t_start=t_start)
+        if c == 0:
+            env.update(self.prefill.make_tensors(
+                a.req.seed, kinds=("dynamic", "input")))
+        else:
+            env.update(self.prefill.make_tensors(
+                a.req.seed + 7_919 * c, kinds=("dynamic",)))
+            env.update(self.prefill.inputs_from(_stabilize(a.carry)))
+        res = self.prefill.run(self.backend, tensors=env,
+                               fused=self.use_fused)
+        if c == 0:
+            a.kv.seed(self.decode.make_tensors(a.req.seed,
+                                               kinds=("dynamic",)))
+        a.carry = res.final
+        a.kv.commit(res.final, c)   # prompt chunk feeds the KV
+        a.chunks_done += 1
+
+    def _decode_env(self, a: _Active) -> dict[str, np.ndarray]:
+        env = dict(self.decode_weights)
+        env.update(a.kv.gather())
+        # quantised carrier: every path feeds identical step inputs
+        env.update(self.decode.inputs_from(_stabilize(a.carry)))
+        return env
+
+    def _after_decode(self, a: _Active, final: np.ndarray) -> None:
+        a.decoded += 1
+        a.carry = final
+        if a.t_first == 0.0:
+            a.t_first = time.perf_counter()
+        # decode commits continue the prompt chunks' positions
+        a.kv.commit(final, a.prefill_chunks - 1 + a.decoded)
 
     def _decode_step(self, a: _Active) -> None:
-        env = dict(self.decode_weights)
-        env.update(a.dynamics)
-        # quantised carrier: both backends feed identical step inputs
-        env.update(self.decode.inputs_from(_stabilize(a.carry)))
-        res = self.decode.run(self.backend, tensors=env,
+        res = self.decode.run(self.backend, tensors=self._decode_env(a),
                               fused=self.use_fused)
-        a.decoded += 1
-        a.carry = res.final
-        _commit_kv(a.dynamics, res.final, a.decoded)
+        self._after_decode(a, res.final)
+
+    def _decode_batch(self, batch: list[_Active]) -> None:
+        """One tick of the whole decode batch: every request's row
+        stacked along M, one backend launch per M-polymorphic segment
+        (``ModelExecutable.run_batch``)."""
+        finals = self.decode.run_batch(
+            self.backend, [self._decode_env(a) for a in batch],
+            fused=self.use_fused)
+        for a, final in zip(batch, finals):
+            self._after_decode(a, final)
 
     def _report(self, a: _Active, pre: dict, dec: dict) -> RequestReport:
         n = a.decoded
+        c = a.chunks_done
         return RequestReport(
             rid=a.req.rid,
-            prefill_tokens=self.prefill.tokens or 0,
+            prefill_tokens=c * (self.prefill.tokens or 0),
             decode_tokens=n * (self.decode.tokens or 1),
             wall_s=time.perf_counter() - a.t_start,
-            minisa_bytes=pre["minisa_bytes"] + n * dec["minisa_bytes"],
-            micro_bytes=pre["micro_bytes"] + n * dec["micro_bytes"],
-            cycles_minisa=pre["cycles_minisa"] + n * dec["cycles_minisa"],
-            cycles_micro=pre["cycles_micro"] + n * dec["cycles_micro"],
-            stall_minisa=(pre["stall_cycles_minisa"]
+            minisa_bytes=c * pre["minisa_bytes"] + n * dec["minisa_bytes"],
+            micro_bytes=c * pre["micro_bytes"] + n * dec["micro_bytes"],
+            cycles_minisa=(c * pre["cycles_minisa"]
+                           + n * dec["cycles_minisa"]),
+            cycles_micro=(c * pre["cycles_micro"]
+                          + n * dec["cycles_micro"]),
+            stall_minisa=(c * pre["stall_cycles_minisa"]
                           + n * dec["stall_cycles_minisa"])
-            / max(pre["cycles_minisa"] + n * dec["cycles_minisa"], 1e-9),
-            stall_micro=(pre["stall_cycles_micro"]
+            / max(c * pre["cycles_minisa"] + n * dec["cycles_minisa"],
+                  1e-9),
+            stall_micro=(c * pre["stall_cycles_micro"]
                          + n * dec["stall_cycles_micro"])
-            / max(pre["cycles_micro"] + n * dec["cycles_micro"], 1e-9),
-            state_checksum=_state_checksum(a.dynamics, a.carry),
+            / max(c * pre["cycles_micro"] + n * dec["cycles_micro"], 1e-9),
+            state_checksum=_state_checksum(a.kv.gather(), a.carry),
+            ttft_s=(a.t_first - a.req.t_submit
+                    if a.t_first and a.req.t_submit else 0.0),
         )
 
     # -- the serving loop -----------------------------------------------------
@@ -321,25 +614,71 @@ class Scheduler:
         active: list[_Active] = []
         done: list[RequestReport] = []
         ticks = 0
+        decode_wall = prefill_wall = 0.0
+        decode_ticks = decode_steps_total = decode_launches = 0
+        chunk_tokens = max(1, self.prefill.tokens or 1)
         while self._pending or active:
-            while self._pending and len(active) < self.max_concurrent:
-                active.append(self._admit(self._pending.popleft()))
+            ticks += 1
+            # 1) decode phase: the whole ready batch advances one step
+            ready = [a for a in active
+                     if a.prefill_done and a.decoded < a.req.decode_steps]
+            if ready:
+                td = time.perf_counter()
+                l0 = getattr(self.backend, "n_launches", 0)
+                if self.batch_decode:
+                    self._decode_batch(ready)
+                else:
+                    for a in ready:
+                        self._decode_step(a)
+                decode_wall += time.perf_counter() - td
+                decode_launches += (getattr(self.backend, "n_launches", 0)
+                                    - l0)
+                decode_ticks += 1
+                decode_steps_total += len(ready)
+            # 2) retire finished requests mid-batch, evicting their KV
             for a in list(active):
-                if a.decoded < a.req.decode_steps:
-                    self._decode_step(a)
-                if a.decoded >= a.req.decode_steps:
+                if a.prefill_done and a.decoded >= a.req.decode_steps:
                     active.remove(a)
                     pre = self.prefill.perf_stats()
                     dec = self.decode.perf_stats()
                     done.append(self._report(a, pre, dec))
+                    a.kv.release()   # checksum gathered; evict the pages
+                    c, n = a.chunks_done, a.decoded
                     for i in range(n_arrays):
                         per_bytes[i] += (
-                            pre["per_array_minisa_bytes"][i]
-                            + a.decoded * dec["per_array_minisa_bytes"][i])
+                            c * pre["per_array_minisa_bytes"][i]
+                            + n * dec["per_array_minisa_bytes"][i])
                         per_cycles[i] += (
-                            pre["per_array_cycles_minisa"][i]
-                            + a.decoded * dec["per_array_cycles_minisa"][i])
-            ticks += 1
+                            c * pre["per_array_cycles_minisa"][i]
+                            + n * dec["per_array_cycles_minisa"][i])
+            # 3) prefill phase under the per-tick token budget: continue
+            #    admitted prompts first (oldest-first), then admit new
+            #    requests into free slots.  When nothing decoded and
+            #    nothing progressed, one chunk is forced so the loop
+            #    always makes progress.
+            tp = time.perf_counter()
+            budget = (self.token_budget if self.token_budget is not None
+                      else float("inf"))
+            progressed = False
+            for a in active:
+                while (not a.prefill_done
+                       and (budget >= chunk_tokens
+                            or (not ready and not progressed))):
+                    self._prefill_chunk(a)
+                    budget -= chunk_tokens
+                    progressed = True
+            while self._pending and len(active) < self.max_concurrent:
+                if budget < chunk_tokens and (ready or progressed):
+                    break
+                a = self._admit(self._pending[0])
+                if a is None:       # KV pool exhausted: wait for retires
+                    self.kv_pool.admit_stalls += 1
+                    break
+                self._pending.popleft()
+                active.append(a)
+                budget -= chunk_tokens
+                progressed = True
+            prefill_wall += time.perf_counter() - tp
         done.sort(key=lambda r: r.rid)
         fusion = self.decode.fusion_stats()
         return SchedulerReport(
@@ -354,4 +693,11 @@ class Scheduler:
             decode_fused_segments=fusion["n_fused_segments"],
             decode_segments=fusion["n_segments"],
             decode_hbm_elided_bytes=(fusion["hbm_bytes_elided"]
-                                     if self.use_fused else 0.0))
+                                     if self.use_fused else 0.0),
+            batch_decode=self.batch_decode,
+            decode_wall_s=decode_wall,
+            prefill_wall_s=prefill_wall,
+            decode_steps_total=decode_steps_total,
+            decode_ticks=decode_ticks,
+            decode_launches=decode_launches,
+            kv=self.kv_pool.stats())

@@ -1,0 +1,275 @@
+"""Cross-request batched decode: the flash-decode kernel against a
+masked numpy oracle, M-polymorphic batch plans, one-launch-per-segment
+ticks, paged KV admission, and the spine invariant -- per-request
+``state_checksum``s are bit-identical across backends, batch
+compositions and arrival interleavings."""
+
+import numpy as np
+import pytest
+
+from repro.configs.feather import feather_config
+from repro.core import program as programlib
+from repro.core.mapper import Gemm
+from repro.kernels import ops
+from repro.runtime import ModelExecutable, ProgramCache, Scheduler
+
+CFG = feather_config(4, 16)
+
+#: mixed decode lengths (retire-mid-batch) and mixed prompt lengths
+#: (chunked prefill): every batch composition the scheduler can hit
+SUBMISSIONS = [(3, None), (1, None), (2, 64), (4, 32), (2, None)]
+
+
+@pytest.fixture(scope="module")
+def cache():
+    return ProgramCache()
+
+
+@pytest.fixture(scope="module")
+def cell(cache):
+    prefill = ModelExecutable.for_cell("gemma-7b", "prefill_tiny", CFG,
+                                       cache=cache)
+    decode = ModelExecutable.for_cell("gemma-7b", "decode_tiny", CFG,
+                                      cache=cache)
+    return prefill, decode
+
+
+# ---------------------------------------------------------------------------
+# M buckets
+# ---------------------------------------------------------------------------
+
+def test_m_bucket_ladder():
+    assert [programlib.m_bucket(n) for n in (1, 2, 3, 4, 5, 8, 9, 16, 17)] \
+        == [1, 2, 4, 4, 8, 8, 16, 16, 32]
+    assert programlib.m_bucket(200) == 256       # doubles past the ladder
+    with pytest.raises(ValueError):
+        programlib.m_bucket(0)
+
+
+def test_bucketed_gemm_scales_m_only():
+    g = Gemm(m=2, k=16, n=64, name="wq")
+    b = programlib.bucketed_gemm(g, 8)
+    assert (b.m, b.k, b.n) == (16, 16, 64)
+    assert b.name == "wq@mx8"
+
+
+# ---------------------------------------------------------------------------
+# flash-decode kernel vs masked numpy oracle
+# ---------------------------------------------------------------------------
+
+def _oracle(q, k, v, lengths):
+    outs = []
+    for b in range(q.shape[0]):
+        s = q[b].astype(np.float32) @ k[b, :lengths[b]].T
+        p = np.exp(s - s.max(axis=-1, keepdims=True))
+        p /= p.sum(axis=-1, keepdims=True)
+        outs.append(p @ v[b, :lengths[b]])
+    return np.stack(outs)
+
+
+def test_flash_decode_matches_masked_oracle():
+    rng = np.random.default_rng(0)
+    B, sq, skv, d = 4, 1, 16, 8
+    q = rng.standard_normal((B, sq, d)).astype(np.float32)
+    k = rng.standard_normal((B, skv, d)).astype(np.float32)
+    v = rng.standard_normal((B, skv, d)).astype(np.float32)
+    lengths = np.array([16, 5, 1, 9], dtype=np.int32)
+    out = np.asarray(ops.flash_decode(q, k, v, lengths))
+    np.testing.assert_allclose(out, _oracle(q, k, v, lengths),
+                               rtol=1e-5, atol=1e-5)
+    # default lengths == full width
+    np.testing.assert_array_equal(
+        np.asarray(ops.flash_decode(q, k, v)),
+        np.asarray(ops.flash_decode(q, k, v,
+                                    np.full(B, skv, np.int32))))
+
+
+def test_flash_decode_ragged_kv_padding():
+    """skv not a block multiple: the zero-padded tail must not leak."""
+    rng = np.random.default_rng(1)
+    B, sq, skv, d = 3, 2, 12, 8
+    q = rng.standard_normal((B, sq, d)).astype(np.float32)
+    k = rng.standard_normal((B, skv, d)).astype(np.float32)
+    v = rng.standard_normal((B, skv, d)).astype(np.float32)
+    lengths = np.array([12, 3, 7], dtype=np.int32)
+    out = np.asarray(ops.flash_decode(q, k, v, lengths, bkv=8))
+    np.testing.assert_allclose(out, _oracle(q, k, v, lengths),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Batch plan: one launch per segment, no new mapper searches
+# ---------------------------------------------------------------------------
+
+def test_batch_plan_one_launch_per_segment(cell, cache):
+    _, decode = cell
+    plan = decode.batch_plan(5)
+    assert plan.bucket == 8
+    assert plan.launches_per_tick == len(plan.segments)
+    kinds = [s.kind for s in plan.segments]
+    assert "attention" in kinds and "perreq" not in kinds
+
+
+def test_batch_plans_reuse_base_choices(cell, cache):
+    """Bucketed re-lowering reuses each step's MappingChoice: growing the
+    ladder costs lowerings, never mapper searches."""
+    _, decode = cell
+    snap = cache.stats.snapshot()
+    for n in (1, 2, 3, 4, 8, 16):
+        decode.batch_plan(n)
+    delta = cache.stats.delta(snap)
+    assert delta["plan_misses"] == 0, delta
+    # bucket memoisation: same sizes again do zero work
+    snap = cache.stats.snapshot()
+    for n in (1, 2, 3, 4, 8, 16):
+        decode.batch_plan(n)
+    assert cache.stats.delta(snap)["lowered_misses"] == 0
+
+
+def test_run_batch_matches_sequential(cell):
+    """Stacked-M execution equals per-request runs on both backends."""
+    _, decode = cell
+    n = 5
+    weights = decode.make_tensors(seed=0, kinds=("weight",))
+    envs = []
+    for r in range(n):
+        env = dict(weights)
+        env.update(decode.make_tensors(seed=10 + r, kinds=("dynamic",)))
+        env.update(decode.make_tensors(seed=100 + r, kinds=("input",)))
+        envs.append(env)
+    seq = [decode.run("interpreter", tensors=e).final for e in envs]
+    bi = decode.run_batch("interpreter", envs, fused=False)
+    for r in range(n):
+        np.testing.assert_allclose(bi[r], seq[r], rtol=1e-5, atol=1e-6)
+    be = decode.make_backend("pallas")
+    l0 = be.n_launches
+    bp = decode.run_batch(be, envs, fused=True)
+    assert be.n_launches - l0 == decode.batch_plan(n).launches_per_tick
+    k_max = max(s.op.gemm.k for s in decode.steps)
+    for r in range(n):
+        np.testing.assert_allclose(bp[r], seq[r], rtol=2e-4,
+                                   atol=2e-4 * k_max)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: batch-composition invariance (the spine invariant)
+# ---------------------------------------------------------------------------
+
+def _serve(prefill, decode, **kw):
+    sched = Scheduler(prefill, decode, **kw)
+    for steps, prompt in SUBMISSIONS:
+        sched.submit(decode_steps=steps, prompt_tokens=prompt)
+    rep = sched.run()
+    assert len(rep.requests) == len(SUBMISSIONS)
+    assert all(r.state_checksum for r in rep.requests)
+    return {r.rid: r.state_checksum for r in rep.requests}, rep
+
+
+@pytest.fixture(scope="module")
+def oracle_checksums(cell):
+    """Sequential per-request interpreter run: the reference trajectory."""
+    prefill, decode = cell
+    sums, _ = _serve(prefill, decode, backend="interpreter",
+                     batch_decode=False, use_fused=False)
+    return sums
+
+
+@pytest.mark.parametrize("backend,batch,fused,conc", [
+    ("interpreter", True, False, 5),     # batched, per-layer programs
+    ("pallas", False, True, 5),          # sequential fused (PR 5 path)
+    ("pallas", True, True, 5),           # batched fused + flash decode
+    ("pallas", True, True, 2),           # different batch composition
+    ("pallas", True, True, 3),           # retire/admit interleaving
+])
+def test_batched_checksums_match_sequential(cell, oracle_checksums,
+                                            backend, batch, fused, conc):
+    prefill, decode = cell
+    sums, rep = _serve(prefill, decode, backend=backend,
+                       batch_decode=batch, use_fused=fused,
+                       max_concurrent=conc)
+    assert sums == oracle_checksums
+    assert rep.batch_decode == batch
+
+
+def test_batched_decode_one_launch_per_segment_per_tick(cell):
+    prefill, decode = cell
+    _, rep = _serve(prefill, decode, backend="pallas", batch_decode=True,
+                    max_concurrent=5)
+    per_tick = decode.batch_plan(1).launches_per_tick
+    assert rep.decode_ticks > 0
+    assert rep.launches_per_decode_tick == per_tick
+    assert rep.decode_launches == rep.decode_ticks * per_tick
+
+
+def test_reports_carry_ttft_and_percentiles(cell):
+    prefill, decode = cell
+    _, rep = _serve(prefill, decode, backend="interpreter",
+                    batch_decode=True, max_concurrent=3)
+    s = rep.summary()
+    for key in ("ttft_p50_s", "ttft_p95_s", "ttft_p99_s",
+                "latency_p50_s", "latency_p95_s", "latency_p99_s"):
+        assert s[key] > 0.0, key
+    for r in rep.requests:
+        assert 0.0 < r.ttft_s <= r.wall_s
+    # chunked prompts did more prefill work than single-pass ones
+    by_rid = {r.rid: r for r in rep.requests}
+    assert by_rid[2].prefill_tokens > by_rid[0].prefill_tokens
+
+
+def test_kv_pool_admission_stalls_not_oom(cell, oracle_checksums):
+    """A pool holding one request serialises admission: everything still
+    completes with the identical checksums, and the stats record the
+    stalls and evictions."""
+    prefill, decode = cell
+    per_req = Scheduler(prefill, decode).kv_pool.pages_per_request
+    sums, rep = _serve(prefill, decode, backend="interpreter",
+                       batch_decode=False, use_fused=False,
+                       max_concurrent=4, kv_pages=per_req)
+    assert sums == oracle_checksums
+    assert rep.kv["admit_stalls"] > 0
+    assert rep.kv["evicted_pages"] == per_req * len(SUBMISSIONS)
+    assert rep.kv["high_water_pages"] == per_req
+
+
+def test_kv_pool_too_small_rejected(cell):
+    prefill, decode = cell
+    with pytest.raises(ValueError, match="kv_pages"):
+        Scheduler(prefill, decode, kv_pages=0)
+
+
+def test_token_budget_defers_prefill(cell, oracle_checksums):
+    """A one-chunk-per-tick budget splits prompt work across ticks but
+    cannot change any request's trajectory."""
+    prefill, decode = cell
+    chunk = prefill.tokens or 1
+    sums, rep = _serve(prefill, decode, backend="interpreter",
+                       batch_decode=True, max_concurrent=5,
+                       token_budget=chunk)
+    assert sums == oracle_checksums
+    budgeted_ticks = rep.ticks
+    _, rep_free = _serve(prefill, decode, backend="interpreter",
+                         batch_decode=True, max_concurrent=5)
+    assert budgeted_ticks > rep_free.ticks
+
+
+# ---------------------------------------------------------------------------
+# ProgramCache: disk-tier LRU bound
+# ---------------------------------------------------------------------------
+
+def test_cache_disk_tier_trims_to_lru_bound(tmp_path):
+    path = tmp_path / "plans.pkl"
+    cache = ProgramCache(path)
+    shapes = [(8, 16, 16), (16, 16, 16), (8, 8, 32), (16, 8, 8)]
+    for m, k, n in shapes:
+        cache.plan(Gemm(m=m, k=k, n=n), CFG)
+    cache.plan(Gemm(m=8, k=16, n=16), CFG)      # LRU touch on the oldest
+    cache.max_plans = 2                          # tighten a live bound
+    cache.save()
+    assert cache.stats.disk_evictions == 2
+    assert cache.stats.disk_bytes == path.stat().st_size > 0
+    fresh = ProgramCache(path)
+    assert len(fresh._plans) == 2
+    assert fresh.stats.loaded_from_disk == 2
+    # most-recently-used survived: the touched plan and the last insert
+    kept = {k[:3] for k in fresh._plans}
+    assert kept == {(8, 16, 16), (16, 8, 8)}
