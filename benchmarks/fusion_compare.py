@@ -14,6 +14,12 @@ timed loop so the numbers are steady-state serving cost):
                   reported with the modelled HBM bytes each mode ships
                   (the fused mode structurally elides every interior
                   activation round trip)
+  block fusion    a gemma decode transformer block spanning former
+                  ``adapt`` (head-split) breaks -- [wv, qk, pv, wo] --
+                  executed per-layer vs as ONE streamed megakernel
+                  launch (asserted via ``Backend.n_launches``), with the
+                  streamed VMEM high-water vs the resident-weights
+                  footprint
   decode serving  the continuous-batching Scheduler over a reduced
                   (arch x shape) cell with the batched decode fast path
                   off vs on (``use_fused``), reporting tok/s
@@ -121,6 +127,71 @@ def bench_chain_kernels(quick: bool = False) -> dict:
         "hbm_bytes_elided": seg.elided_hbm_bytes(),
         "n_launches_per_layer": len(ws),
         "n_launches_fused": 1,
+        "vmem_highwater_bytes": seg.vmem_highwater_bytes(),
+        "vmem_resident_bytes": seg.resident_vmem_bytes(),
+    }
+
+
+def bench_block_fusion(quick: bool = False, arch: str = "gemma-7b") -> dict:
+    """A transformer block spanning former adapt breaks, per-layer vs
+    ONE streamed launch.
+
+    Picks the decode cell's adapt-spanning fused segment ([wv, qk
+    softmax, pv, wo] -- attention with the head-split/merge permutations
+    done in-kernel), cross-checks both modes, asserts the fused mode is
+    exactly one ``pallas_call`` via ``Backend.n_launches``, and reports
+    wall clock, launches per block, elided HBM bytes and the streamed
+    VMEM high-water against the keep-every-weight-resident footprint.
+    """
+    from repro import backends
+    from repro.backends.base import Backend
+    from repro.configs.feather import feather_config
+    from repro.runtime import ModelExecutable, ProgramCache
+
+    cfg = feather_config(4, 16)
+    ex = ModelExecutable.for_cell(arch, "decode_tiny", cfg,
+                                  cache=ProgramCache())
+    seg = next(s for s in ex.segments
+               if s.fused is not None and any(s.fused.adapts))
+    steps = [ex.steps[i] for i in seg.indices]
+    env = ex.make_tensors(seed=3)
+    rng = np.random.default_rng(7)
+    g0 = steps[0].op.gemm
+    t = {"I": rng.standard_normal((g0.m, g0.k)).astype(np.float32)}
+    for j, s in enumerate(steps):
+        t[f"W{j}"] = np.asarray(env[s.weight_name], np.float32)
+    fused = seg.fused
+
+    be = backends.get_backend("pallas", cfg)
+    before = be.n_launches
+    out = np.asarray(be.run_segment(fused, t)[fused.out_name])
+    launches_fused = be.n_launches - before
+    assert launches_fused == 1, \
+        f"block fusion must be ONE launch, got {launches_fused}"
+    per_be = backends.get_backend("pallas", cfg)
+    # the base replay on a pallas instance = today's per-layer path
+    before = per_be.n_launches
+    ref = np.asarray(
+        Backend.run_segment(per_be, fused, t)[fused.out_name])
+    launches_per_layer = per_be.n_launches - before
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+    iters = 5 if quick else 20
+    us_layer = _time(lambda: Backend.run_segment(per_be, fused, t), iters)
+    us_fused = _time(lambda: be.run_segment(fused, t), iters)
+    return {
+        "arch": arch,
+        "n_layers": fused.n_layers,
+        "adapts": list(fused.adapts),
+        "launches_per_block_per_layer": launches_per_layer,
+        "launches_per_block_fused": launches_fused,
+        "us_per_layer": us_layer,
+        "us_fused": us_fused,
+        "block_speedup": us_layer / max(us_fused, 1e-9),
+        "hbm_bytes_elided": fused.elided_hbm_bytes(),
+        "vmem_highwater_bytes": fused.vmem_highwater_bytes(),
+        "vmem_resident_bytes": fused.resident_vmem_bytes(),
+        "max_layer_working_set_bytes": fused.max_layer_working_set_bytes(),
     }
 
 
@@ -168,17 +239,24 @@ def bench_decode_serving(quick: bool = False,
 def run(quick: bool = False) -> dict:
     out = {
         "chain_kernels": bench_chain_kernels(quick),
+        "block_fusion": bench_block_fusion(quick),
         "decode_serving": bench_decode_serving(quick),
     }
-    c, d = out["chain_kernels"], out["decode_serving"]
-    print(f"{'mode':>12} {'us/chain':>10} {'HBM B':>8}   "
-          f"{'tok/s':>8}")
+    c, b, d = (out["chain_kernels"], out["block_fusion"],
+               out["decode_serving"])
+    print(f"{'mode':>12} {'us/chain':>10} {'HBM B':>8} "
+          f"{'launch/blk':>10} {'VMEM B':>9}   {'tok/s':>8}")
     print(f"{'per-layer':>12} {c['us_per_layer']:10.0f} "
-          f"{c['hbm_bytes_per_layer']:8.0f}   "
+          f"{c['hbm_bytes_per_layer']:8.0f} "
+          f"{b['launches_per_block_per_layer']:10d} "
+          f"{b['vmem_resident_bytes']:9.0f}   "
           f"{d['tok_s_per_layer']:8.1f}")
     print(f"{'fused':>12} {c['us_fused']:10.0f} "
-          f"{c['hbm_bytes_fused']:8.0f}   {d['tok_s_fused']:8.1f}")
+          f"{c['hbm_bytes_fused']:8.0f} "
+          f"{b['launches_per_block_fused']:10d} "
+          f"{b['vmem_highwater_bytes']:9.0f}   {d['tok_s_fused']:8.1f}")
     print(f"kernel_speedup={c['kernel_speedup']:.2f}x "
+          f"block_speedup={b['block_speedup']:.2f}x "
           f"decode_speedup={d['decode_speedup']:.2f}x "
           f"elided={c['hbm_bytes_elided']:.0f}B/chain "
           f"checksums_equal={d['state_checksums_equal']}")
@@ -190,7 +268,13 @@ def flat_metrics(result: dict) -> dict:
     keep = {
         "chain_kernels": ("us_per_layer", "us_fused", "kernel_speedup",
                           "hbm_bytes_per_layer", "hbm_bytes_fused",
-                          "hbm_bytes_elided"),
+                          "hbm_bytes_elided", "vmem_highwater_bytes",
+                          "vmem_resident_bytes"),
+        "block_fusion": ("us_per_layer", "us_fused", "block_speedup",
+                         "launches_per_block_per_layer",
+                         "launches_per_block_fused", "hbm_bytes_elided",
+                         "vmem_highwater_bytes", "vmem_resident_bytes",
+                         "max_layer_working_set_bytes"),
         "decode_serving": ("tok_s_per_layer", "tok_s_fused",
                            "decode_speedup", "fused_segments",
                            "decode_hbm_elided_bytes"),
@@ -206,8 +290,19 @@ def main() -> None:
     ap.add_argument("--merge", action="store_true",
                     help="merge into an existing BENCH_results.json "
                          "instead of overwriting")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail unless the adapt-spanning block is ONE "
+                         "launch with streamed VMEM below resident")
     args = ap.parse_args()
     result = run(quick=args.quick)
+    if args.gate:
+        b = result["block_fusion"]
+        assert b["launches_per_block_fused"] == 1, b
+        assert b["vmem_highwater_bytes"] < b["vmem_resident_bytes"], b
+        print(f"gate ok: 1 launch/block "
+              f"(vs {b['launches_per_block_per_layer']}), VMEM "
+              f"{b['vmem_highwater_bytes']}B < "
+              f"{b['vmem_resident_bytes']}B resident")
     if args.json:
         payload = {}
         if args.merge and os.path.exists(args.json):

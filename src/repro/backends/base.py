@@ -81,15 +81,58 @@ class Backend(abc.ABC):
         weight as ``'W{l}'``.  The base implementation replays the
         chained per-layer Programs on this backend (the chain semantics
         -- on-chip commit, elided/retargeted inputs -- come from the
-        Programs themselves); subclasses with a genuinely fused path
-        (the Pallas backend's one-launch megakernel) override it.
+        Programs themselves), applying the runtime ``adapt`` shape glue
+        at the segment's interior adapt boundaries; subclasses with a
+        genuinely fused path (the Pallas backend's one-launch
+        megakernel, which lowers adapt to an in-kernel slab permutation)
+        override it.  A :class:`~repro.core.program.ShardedFusedSegment`
+        dispatches to the per-array path.
         """
+        from repro.core.program import ShardedFusedSegment
+        if isinstance(segment, ShardedFusedSegment):
+            return self._run_sharded_segment(segment, tensors)
+        from repro.runtime.executable import adapt
         tensors = tensors or {}
+        adapts = getattr(segment, "adapts", None) \
+            or (False,) * len(segment.programs)
         for layer, prog in enumerate(segment.programs):
             t = {"W": tensors[f"W{layer}"]}
-            if layer == 0 and "I" in tensors:
-                t["I"] = tensors["I"]
+            if layer == 0:
+                if "I" in tensors:
+                    t["I"] = tensors["I"]
+            elif adapts[layer]:
+                prev = self.outputs[segment.programs[layer - 1].out_name]
+                g = prog.gemm
+                t["I"] = adapt(np.asarray(prev), g.m, g.k)
+            elif any(op.meta.get("operand") == "I"
+                     and op.meta.get("tensor") == "I"
+                     for tile in prog.tiles for op in tile.loads):
+                # unchained sub-programs (per-array shard chains) still
+                # load the host 'I': feed the previous layer's output
+                t["I"] = np.asarray(
+                    self.outputs[segment.programs[layer - 1].out_name])
             self.run_program(prog, t)
+        return self.outputs
+
+    def _run_sharded_segment(self, segment, tensors=None
+                             ) -> dict[str, np.ndarray]:
+        """Per-array fused execution of an M-sharded chained segment:
+        each array runs its row slice of the WHOLE chain on its own
+        sub-backend (fused on backends that support it), so the segment
+        costs n_arrays launches instead of n_arrays * n_layers."""
+        tensors = tensors or {}
+        out = np.zeros((segment.m, segment.n_out), np.float32)
+        for a, (fseg, (m0, m1)) in enumerate(
+                zip(segment.array_segments, segment.row_ranges)):
+            sub = self._shard_backend(a)
+            before = sub.n_launches
+            t = {k: v for k, v in tensors.items() if k != "I"}
+            if "I" in tensors:
+                t["I"] = np.asarray(tensors["I"])[m0:m1]
+            res = sub.run_segment(fseg, t)
+            out[m0:m1] = np.asarray(res[fseg.out_name])[:m1 - m0]
+            self.n_launches += sub.n_launches - before
+        self.outputs[segment.out_name] = out
         return self.outputs
 
     # -- batched decode attention --------------------------------------------
@@ -123,6 +166,26 @@ class Backend(abc.ABC):
             out = self.run_program(pv, {"W": v[r]})[pv.out_name]
             outs.append(np.asarray(out))
         return np.stack(outs)
+
+    def run_batched_attention_proj(self, programs, q: np.ndarray,
+                                   kT: np.ndarray, v: np.ndarray,
+                                   wo: np.ndarray, *, m_out: int,
+                                   k_out: int, lengths=None) -> np.ndarray:
+        """Block-fused decode attention: the attention pair PLUS the
+        adapt-cycled output projection ``wo`` for every request.
+
+        The base implementation replays :meth:`run_batched_attention`
+        and applies the runtime ``adapt`` + GEMM per request on the host
+        -- the oracle for the Pallas override, which folds the
+        projection into the decode kernel's last KV step (one launch for
+        attention + Wo instead of two).  Returns [B, m_out, n_out].
+        """
+        from repro.runtime.executable import adapt
+        ctx = self.run_batched_attention(programs, q, kT, v,
+                                         lengths=lengths)
+        wo = np.asarray(wo, np.float32)
+        return np.stack([adapt(ctx[r], m_out, k_out) @ wo
+                         for r in range(ctx.shape[0])])
 
     # -- multi-array execution ----------------------------------------------
     def _make_shard_backend(self) -> "Backend":

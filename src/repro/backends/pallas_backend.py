@@ -107,12 +107,14 @@ class CompiledSegment:
 
     Mirrors the :class:`~repro.core.program.FusedSegment` geometry with
     the backend's ``max_block`` clamp applied; ``dims`` are the per-layer
-    host (K, N) weight shapes the launch binds.
+    TRUE host (M, K, N) extents the streamed launch binds, ``adapts``
+    the in-kernel shape-glue boundaries.
     """
     bm: int                         # resident-activation rows per grid step
     layer_bks: tuple[int, ...]      # per-layer weight K-streaming tile
     acts: tuple[str | None, ...]    # per-layer in-kernel activation
-    dims: tuple[tuple[int, int], ...]
+    dims: tuple[tuple[int, int, int], ...]
+    adapts: tuple[bool, ...]
     out_name: str
 
     @property
@@ -126,22 +128,31 @@ class CompiledSegment:
             "layer_bks": self.layer_bks,
             "acts": self.acts,
             "dims": self.dims,
+            "adapts": self.adapts,
         }
 
 
 def compile_segment(segment, *, max_block: int = 2048) -> CompiledSegment:
     """Clamp the FusedSegment launch geometry to the backend's working-set
-    bound.  One call == one fused compile (vs one per layer unfused)."""
+    bound.  One call == one fused compile (vs one per layer unfused).
+
+    Adapt-crossing segments keep their bm unclamped: the in-kernel slab
+    permutation needs every activation row resident in one M block.
+    """
     from repro.kernels.fused_chain import FUSED_ACT_FNS
     for act in segment.acts:
         if act is not None and act not in FUSED_ACT_FNS:
             raise ValueError(f"activation {act!r} has no fused kernel")
+    adapts = tuple(segment.adapts)
+    bm = segment.bm if any(adapts) else max(1, min(segment.bm, max_block))
     return CompiledSegment(
-        bm=max(1, min(segment.bm, max_block)),
+        bm=bm,
         layer_bks=tuple(max(1, min(bk, max_block))
                         for bk in segment.layer_bks),
         acts=tuple(segment.acts),
-        dims=tuple((p.gemm.k, p.gemm.n) for p in segment.programs),
+        dims=tuple((p.gemm.m, p.gemm.k, p.gemm.n)
+                   for p in segment.programs),
+        adapts=adapts,
         out_name=segment.out_name)
 
 
@@ -286,10 +297,17 @@ class PallasBackend(Backend):
         return comp
 
     def run_segment(self, segment, tensors=None):
-        """ONE ``pallas_call`` for the whole chained segment: the
-        resident activation slab flows through every layer in VMEM
-        scratch; only the segment input and the final output cross HBM.
+        """ONE ``pallas_call`` for the whole chained segment: each
+        layer's weight streams HBM->VMEM in double-buffered K tiles
+        against the resident activation slab, with adapt (head-split)
+        boundaries lowered to in-kernel slab permutations; only the
+        segment input, the weight tiles and the final output cross HBM.
+
+        A :class:`~repro.core.program.ShardedFusedSegment` dispatches to
+        the per-array path (one fused launch per array).
         """
+        if isinstance(segment, programlib.ShardedFusedSegment):
+            return self._run_sharded_segment(segment, tensors)
         comp = self.compile_fused(segment)
         self.n_launches += 1
         tensors = tensors or {}
@@ -301,6 +319,7 @@ class PallasBackend(Backend):
         out = kernel_ops.fused_chain(
             jax.numpy.asarray(x, jax.numpy.float32), ws,
             bm=comp.bm, bks=comp.layer_bks, acts=comp.acts,
+            adapts=comp.adapts, dims=comp.dims,
             interpret=self.interpret, out_dtype=jax.numpy.float32)
         out = np.asarray(out)
         self.outputs[comp.out_name] = out
@@ -317,6 +336,21 @@ class PallasBackend(Backend):
         out = kernel_ops.flash_decode(
             jnp.asarray(q, jnp.float32), k, jnp.asarray(v, jnp.float32),
             lengths, interpret=self.interpret)
+        return np.asarray(out)
+
+    def run_batched_attention_proj(self, programs, q, kT, v, wo, *,
+                                   m_out, k_out, lengths=None):
+        """ONE ``flash_decode_proj`` launch: batched ragged attention
+        with the output projection folded into the last KV step, the
+        adapt head-merge done as a static in-VMEM permutation.  Replaces
+        the attention launch plus B per-request Wo launches."""
+        import jax.numpy as jnp
+        self.n_launches += 1
+        k = jnp.asarray(kT, jnp.float32).transpose(0, 2, 1)
+        out = kernel_ops.flash_decode_proj(
+            jnp.asarray(q, jnp.float32), k, jnp.asarray(v, jnp.float32),
+            jnp.asarray(wo, jnp.float32), lengths, m_out=m_out,
+            k_out=k_out, interpret=self.interpret)
         return np.asarray(out)
 
     def _resolve(self, name: str | None, tensors, elided: bool):

@@ -331,6 +331,7 @@ class Program:
     def tile_costs(self, control: str = "minisa",
                    max_tiles: int = 4096, *,
                    elide_input_loads: bool = False,
+                   elide_weight_loads: bool = False,
                    on_chip_store: bool = False) -> list[perf.TileCost]:
         """control in {'minisa', 'micro'} selects the fetch stream.
 
@@ -342,7 +343,10 @@ class Program:
         accounting to fused-segment execution, where *every* interior
         activation stays in VMEM: input-operand Loads (the consumer side
         of the chain) and all output Writes (the producer side) are kept
-        on-chip.
+        on-chip.  ``elide_weight_loads`` drops the weight-operand Loads
+        instead -- the streamed fused launch replaces the Program's
+        residency-derived weight traffic with its own K-tile schedule
+        (``FusedSegment.layer_tile_costs`` folds those bytes back in).
 
         Streams longer than ``max_tiles`` are run-length merged (k
         consecutive tiles -> one cost with summed fields); the engine
@@ -353,7 +357,7 @@ class Program:
         ``_memo``.
         """
         memo_key = ("tile_costs", control, max_tiles, elide_input_loads,
-                    on_chip_store)
+                    elide_weight_loads, on_chip_store)
         hit = self._memo.get(memo_key)
         if hit is not None:
             return hit
@@ -378,8 +382,10 @@ class Program:
                          + (prologue_bits if i == 0 else 0)) / 8.0
             load_bytes = sum(
                 op.inst.length for op in tile.loads
-                if not (elide_input_loads
-                        and op.meta.get("operand") == "I")) * elem
+                if not ((elide_input_loads
+                         and op.meta.get("operand") == "I")
+                        or (elide_weight_loads
+                            and op.meta.get("operand") == "W"))) * elem
             store = 0
             commit_elems = 0
             for op in tile.drains:
@@ -818,33 +824,85 @@ FUSED_ELEMENTWISE_ACTS = frozenset({"relu", "gelu", "silu"})
 #: kernel follows the identical convention.
 FUSED_ACT_ALIASES = {"swiglu": "silu", "geglu": "gelu"}
 
-#: Default VMEM working-set budget for one fused segment, in elements
-#: (weights + per-boundary activation scratch).  4M fp32 elements == 16 MB,
-#: one TPU core's VMEM; segments over budget fall back to per-layer
-#: launches rather than silently thrash.
-FUSED_VMEM_BUDGET = 4 << 20
+#: Bytes per element of the dtypes the fused kernel streams.  The budget
+#: below is in BYTES, so bf16/int8 segments genuinely fit twice/four
+#: times the fp32 working set instead of being sized as if fp32.
+DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1}
+
+#: Default VMEM working-set budget for one fused segment, in BYTES
+#: (double-buffered operand windows + the fp32 activation/accumulator
+#: scratch).  16 MB == one TPU core's VMEM; segments over budget fall
+#: back to per-layer launches rather than silently thrash.
+FUSED_VMEM_BUDGET = 16 << 20
+
+#: HBM->VMEM weight-pipeline depth: 2 == double buffering (the grid
+#: pipeline fetches K-tile j+1 while K-tile j is in compute).
+FUSED_STREAM_DEPTH = 2
+
+
+def _streamed_footprint_bytes(bm: int, bk0: int, layer_dims, bks, *,
+                              operand_dtype: str = "float32",
+                              depth: int = FUSED_STREAM_DEPTH) -> int:
+    """VMEM high-water of the streamed fused launch, in bytes.
+
+    Operand windows (the segment input's (bm, bk0) block, each weight's
+    (bk_l, n_l) K-tile, the (bm, n_out) output block) are held ``depth``
+    deep by the pipeline; the resident activation slab and the
+    accumulator are fp32 VMEM scratch sized by the widest interior layer.
+    """
+    db = DTYPE_BYTES[operand_dtype]
+    kps = [-(-k // bk) * bk for (k, _), bk in zip(layer_dims, bks)]
+    k_slab = max(kps[1:], default=1)
+    n_max = max(n for _, n in layer_dims)
+    n_out = layer_dims[-1][1]
+    windows = (depth * bm * bk0
+               + sum(depth * bk * n for bk, (_, n) in zip(bks, layer_dims))
+               + depth * bm * n_out)
+    scratch = 4 * bm * (k_slab + n_max)
+    return db * windows + scratch
 
 
 def fusion_illegal_reason(programs: list["Program"], *,
-                          vmem_budget: int = FUSED_VMEM_BUDGET
-                          ) -> str | None:
+                          vmem_budget: int = FUSED_VMEM_BUDGET,
+                          adapts: tuple[bool, ...] | None = None,
+                          operand_dtype: str = "float32") -> str | None:
     """Why this chain cannot execute as one fused kernel (None == legal).
 
-    Legal segments are shape-compatible ``wired`` chains: layer i's host
-    output [m, n_i] is exactly layer i+1's host input [m, k_{i+1}].
-    Activations must be applicable inside the kernel: elementwise
+    Legal segments are ``wired`` chains: layer i's host output [m, n_i]
+    is exactly layer i+1's host input [m, k_{i+1}] -- unless the caller
+    marks the boundary in ``adapts`` (``adapts[i]`` True means layer i's
+    input is the deterministic flatten/cycle/reshape ``adapt`` glue of
+    layer i-1's output, which the kernel applies as an in-VMEM index
+    permutation on the resident slab; that requires the whole activation
+    resident, enforced geometrically by ``fuse_segment``).  Activations
+    must be applicable inside the kernel: elementwise
     (``FUSED_ELEMENTWISE_ACTS``) anywhere; row-wise ones only when the
     layer's accumulator holds full host rows (WO-S -- the same condition
     under which the lowering admits them in-Program).  Sharded segments
     fall back: on-chip residency is per-array state and does not cross
-    the mesh boundary.
+    the mesh boundary (``fuse_sharded_segment`` fuses *within* each
+    array instead).
+
+    ``operand_dtype`` sizes the budget check in bytes: the minimal
+    streamed footprint (one activation row, unit K tiles -- or the full
+    resident activation when ``adapts`` forces it) must fit
+    ``vmem_budget``.
     """
     if len(programs) < 2:
         return "segment has fewer than 2 layers"
+    if operand_dtype not in DTYPE_BYTES:
+        return f"operand dtype {operand_dtype!r} has no byte width"
+    if adapts is None:
+        adapts = (False,) * len(programs)
+    if len(adapts) != len(programs):
+        return (f"adapts length {len(adapts)} != segment length "
+                f"{len(programs)}")
+    if adapts[0]:
+        return "layer 0 cannot adapt from a producer outside the segment"
     for i, prog in enumerate(programs):
-        if isinstance(prog, ShardedProgram):
+        if isinstance(prog, (ShardedProgram, ShardedFusedSegment)):
             return f"layer {i} is mesh-sharded"
-        if i > 0:
+        if i > 0 and not adapts[i]:
             prev = programs[i - 1].gemm
             g = prog.gemm
             if (prev.m, prev.n) != (g.m, g.k):
@@ -860,19 +918,29 @@ def fusion_illegal_reason(programs: list["Program"], *,
             if prog.choice.df != isa.Dataflow.WOS:
                 return (f"layer {i} row-wise activation {act!r} needs the "
                         f"host-row accumulator orientation (WO-S)")
-    # necessary condition only: the weights are resident regardless of the
-    # M tile.  fuse_segment() additionally bounds the bm-dependent slabs
-    # (input + interior scratch), shrinking bm before falling back.
-    elems = sum(p.gemm.k * p.gemm.n for p in programs)
-    if elems > vmem_budget:
-        return (f"segment weight working set {elems} elements exceeds the "
-                f"fused VMEM budget {vmem_budget}")
+    # necessary condition: even the minimal streamed geometry (unit K
+    # tiles; one resident row, or every row when an adapt permutation
+    # needs the whole activation resident) must fit the byte budget.
+    # fuse_segment() additionally fits the real bm / bk schedule.
+    dims = [(p.gemm.k, p.gemm.n) for p in programs]
+    min_rows = max(p.gemm.m for p in programs) if any(adapts) else 1
+    need = _streamed_footprint_bytes(min_rows, 1, dims,
+                                     (1,) * len(programs),
+                                     operand_dtype=operand_dtype)
+    if need > vmem_budget:
+        return (f"minimal streamed working set {need} bytes "
+                f"({operand_dtype}) exceeds the fused VMEM budget "
+                f"{vmem_budget}")
     return None
 
 
 def fusable(programs: list["Program"], *,
-            vmem_budget: int = FUSED_VMEM_BUDGET) -> bool:
-    return fusion_illegal_reason(programs, vmem_budget=vmem_budget) is None
+            vmem_budget: int = FUSED_VMEM_BUDGET,
+            adapts: tuple[bool, ...] | None = None,
+            operand_dtype: str = "float32") -> bool:
+    return fusion_illegal_reason(programs, vmem_budget=vmem_budget,
+                                 adapts=adapts,
+                                 operand_dtype=operand_dtype) is None
 
 
 @dataclasses.dataclass
@@ -885,17 +953,37 @@ class FusedSegment:
     geometry*: every layer's tiling snapped to one common host-M tile
     (``bm`` rows of the chained activation stay resident in VMEM scratch
     across all layers) and a per-layer host-K tile (``layer_bks``) that
-    streams each layer's weight against the resident activation.
+    streams each layer's weight HBM->VMEM in ``buffer_depth``-deep
+    (double-buffered) K-tiles against the resident activation -- so the
+    VMEM footprint is bounded by the largest layer's windows, not the
+    sum of all weights.
+
+    ``adapts[l]`` True marks layer l's input as the flatten/cycle/reshape
+    ``adapt`` glue of layer l-1's output, executed inside the kernel as a
+    static index permutation on the resident slab (whole activation
+    resident: ``m_steps == 1`` whenever any adapt is present), which is
+    what lets attention (qk/pv) and MLP fuse into ONE launch per
+    transformer block.
 
     Data-traffic accounting (:meth:`tile_costs`) keeps every interior
     boundary on-chip -- interior Writes are costed as OB-commit cycles
-    and interior input Loads vanish -- so ``perf.simulate`` over the
-    fused stream charges exactly the HBM bytes the fused kernel ships.
+    and interior input Loads vanish, while weight Loads are restated to
+    the streamed K-tile schedule (re-fetched once per M step) -- so
+    ``perf.simulate`` over the fused stream charges exactly the HBM
+    bytes the fused kernel ships.
     """
     programs: list[Program]
     bm: int                       # common host-M tile (resident rows)
     layer_bks: tuple[int, ...]    # per-layer host-K weight-streaming tile
     acts: tuple[str | None, ...]  # per-layer in-kernel activation name
+    adapts: tuple[bool, ...] = None       # in-kernel adapt boundaries
+    buffer_depth: int = FUSED_STREAM_DEPTH    # K-tile pipeline depth
+    vmem_budget: int = FUSED_VMEM_BUDGET      # bytes the geometry fit
+    operand_dtype: str = "float32"            # streamed operand dtype
+
+    def __post_init__(self):
+        if self.adapts is None:
+            self.adapts = (False,) * len(self.programs)
 
     @property
     def n_layers(self) -> int:
@@ -926,6 +1014,49 @@ class FusedSegment:
     def macs(self) -> int:
         return sum(p.macs for p in self.programs)
 
+    # -- streamed launch geometry --------------------------------------------
+    @property
+    def m_steps(self) -> int:
+        """Host-M grid steps of the launch.  The weight K-tile stream
+        restarts per M step (each step re-streams every layer's weight),
+        and any in-kernel adapt permutation requires exactly one."""
+        return -(-self.m // self.bm)
+
+    @property
+    def padded_ks(self) -> tuple[int, ...]:
+        """Per-layer K extents padded to the K-tile schedule (the zero
+        pad rows are inert: padded weight rows are zero)."""
+        return tuple(-(-p.gemm.k // bk) * bk
+                     for p, bk in zip(self.programs, self.layer_bks))
+
+    def vmem_highwater_bytes(self) -> int:
+        """Peak VMEM bytes the streamed launch holds: double-buffered
+        operand windows (input block, one K-tile per weight, output
+        block) plus the fp32 slab/accumulator scratch -- bounded by the
+        largest layer's windows, NOT the sum of all weights."""
+        dims = [(p.gemm.k, p.gemm.n) for p in self.programs]
+        return _streamed_footprint_bytes(
+            self.bm, min(self.layer_bks[0], self.programs[0].gemm.k),
+            dims, self.layer_bks, operand_dtype=self.operand_dtype,
+            depth=self.buffer_depth)
+
+    def resident_vmem_bytes(self) -> int:
+        """What the same segment would hold with every weight fully
+        VMEM-resident (the pre-streaming discipline): the sum over
+        layers, the footprint streaming replaces."""
+        db = DTYPE_BYTES[self.operand_dtype]
+        weights = sum(p.gemm.k * p.gemm.n for p in self.programs)
+        slabs = self.bm * (self.k_in + sum(self.widths))
+        return db * weights + 4 * slabs
+
+    def max_layer_working_set_bytes(self) -> int:
+        """The largest single layer's working set (its full weight plus
+        its bm-row input/output slabs) -- the bound the streamed
+        footprint is held to."""
+        db = DTYPE_BYTES[self.operand_dtype]
+        return max(db * (g.k * g.n) + 4 * self.bm * (g.k + g.n)
+                   for g in (p.gemm for p in self.programs))
+
     # -- instruction accounting (the chained stream is unchanged) ------------
     def minisa_bits(self) -> int:
         return sum(p.minisa_bits() for p in self.programs)
@@ -936,13 +1067,23 @@ class FusedSegment:
     # -- data-traffic accounting ---------------------------------------------
     def layer_tile_costs(self, layer: int, control: str = "minisa",
                          max_tiles: int = 4096) -> list:
-        """Layer ``layer``'s tile stream under fused execution: interior
-        stores stay on-chip, non-first layers read their input from the
-        resident activation (no HBM Load)."""
-        return self.programs[layer].tile_costs(
+        """Layer ``layer``'s tile stream under streamed fused execution:
+        interior stores stay on-chip, non-first layers read their input
+        from the resident activation (no HBM Load), and the Program's
+        residency-derived weight Loads are restated to the bytes the
+        streamed kernel actually ships -- the padded weight fetched once
+        per M step of the launch, spread evenly over the layer's tiles."""
+        costs = self.programs[layer].tile_costs(
             control, max_tiles,
             elide_input_loads=layer > 0,
+            elide_weight_loads=True,
             on_chip_store=layer < self.n_layers - 1)
+        g = self.programs[layer].gemm
+        kp = self.padded_ks[layer]
+        shipped = float(self.cfg.elem_bytes * self.m_steps * kp * g.n)
+        per_tile = shipped / max(len(costs), 1)
+        return [dataclasses.replace(t, load_bytes=t.load_bytes + per_tile)
+                for t in costs]
 
     def tile_costs(self, control: str = "minisa",
                    max_tiles: int = 4096) -> list:
@@ -958,12 +1099,17 @@ class FusedSegment:
 
     # -- kernel-launch traffic (what the compiled backend actually ships) ----
     def kernel_hbm_bytes(self) -> float:
-        """Bytes the ONE fused launch moves across HBM: the segment input,
-        every layer's weight, the final output -- nothing else."""
+        """Bytes the ONE fused launch moves across HBM: the segment
+        input, every layer's weight K-tile stream (the padded weight,
+        re-fetched once per M step -- the streaming discipline trades
+        weight re-streams for bounded VMEM), the final output -- nothing
+        else."""
         elem = self.cfg.elem_bytes
         m = self.m
         return elem * (m * self.k_in
-                       + sum(p.gemm.k * p.gemm.n for p in self.programs)
+                       + self.m_steps * sum(
+                           kp * p.gemm.n
+                           for kp, p in zip(self.padded_ks, self.programs))
                        + m * self.programs[-1].gemm.n)
 
     def per_layer_kernel_hbm_bytes(self) -> float:
@@ -988,6 +1134,14 @@ class FusedSegment:
             "bm": self.bm,
             "layer_bks": self.layer_bks,
             "acts": self.acts,
+            "adapts": self.adapts,
+            "m_steps": self.m_steps,
+            "buffer_depth": self.buffer_depth,
+            "operand_dtype": self.operand_dtype,
+            "vmem_highwater_bytes": self.vmem_highwater_bytes(),
+            "vmem_resident_bytes": self.resident_vmem_bytes(),
+            "max_layer_working_set_bytes":
+                self.max_layer_working_set_bytes(),
             "hbm_bytes_fused": self.kernel_hbm_bytes(),
             "hbm_bytes_per_layer": self.per_layer_kernel_hbm_bytes(),
             "hbm_bytes_elided": self.elided_hbm_bytes(),
@@ -995,24 +1149,33 @@ class FusedSegment:
 
 
 def fuse_segment(programs: list["Program"], *,
-                 vmem_budget: int = FUSED_VMEM_BUDGET
-                 ) -> FusedSegment | None:
-    """Build the fused launch geometry for a chained segment, or None
-    when the segment must fall back to per-layer execution.
+                 vmem_budget: int = FUSED_VMEM_BUDGET,
+                 adapts: tuple[bool, ...] | None = None,
+                 operand_dtype: str = "float32") -> FusedSegment | None:
+    """Build the streamed fused launch geometry for a chained segment,
+    or None when the segment must fall back to per-layer execution.
 
-    The common M tile is the tightest of the layers' snapped host-M
-    tiles (every layer's mapping stays honoured -- a coarser layer just
-    sees its tile revisited); each layer's host-K tile becomes its
-    weight-streaming granularity against the resident activation.  The
-    full VMEM working set -- resident weights plus the bm-row input and
-    interior-scratch slabs -- must fit ``vmem_budget``: bm shrinks to
-    fit, and only when even one row cannot fit does the segment fall
-    back to per-layer launches.
+    Each layer's host-K tile (snapped from its own mapping, then capped
+    so the double-buffered K-tile windows of ALL layers together stay
+    under the largest single weight) becomes its HBM->VMEM streaming
+    granularity.  The host-M tile covers the whole activation in one
+    grid step whenever the streamed footprint allows (no weight
+    re-streams) -- and MUST when ``adapts`` marks an in-kernel
+    permutation boundary (the flatten/cycle/reshape glue needs every row
+    resident); otherwise bm falls back to the tightest snapped tile and
+    halves until the footprint fits ``vmem_budget`` (bytes, sized for
+    ``operand_dtype``).
     """
-    if fusion_illegal_reason(programs, vmem_budget=vmem_budget) is not None:
+    if fusion_illegal_reason(programs, vmem_budget=vmem_budget,
+                             adapts=adapts,
+                             operand_dtype=operand_dtype) is not None:
         return None
+    n_layers = len(programs)
+    if adapts is None:
+        adapts = (False,) * n_layers
     m = programs[0].gemm.m
-    bm = m
+    m_max = max(p.gemm.m for p in programs)
+    bm_snap = m_max
     bks = []
     for prog in programs:
         snapped = snap_tiling(prog.gemm, prog.choice, prog.cfg)
@@ -1020,22 +1183,43 @@ def fuse_segment(programs: list["Program"], *,
             return None
         m_t, k_t, n_t = snapped
         wos = prog.choice.df == isa.Dataflow.WOS
-        bm = min(bm, m_t if wos else n_t)
+        bm_snap = min(bm_snap, m_t if wos else n_t)
         bks.append(max(1, min(k_t, prog.gemm.k)))
-    weight_elems = sum(p.gemm.k * p.gemm.n for p in programs)
-    # bm-row slabs: input block, every interior scratch, the output block
-    row_elems = programs[0].gemm.k + sum(p.gemm.n for p in programs)
-    bm_fit = (vmem_budget - weight_elems) // max(row_elems, 1)
-    if bm_fit < 1:
-        return None               # not even one resident row fits
-    bm = min(bm, bm_fit)
+    # cap the K tiles so the depth-deep K-tile windows of all layers sum
+    # to no more than the largest single weight: the streamed footprint
+    # is bounded by the biggest layer, not the per-layer sum
+    depth = FUSED_STREAM_DEPTH
+    w_max = max(p.gemm.k * p.gemm.n for p in programs)
+    bks = [max(1, min(bk, max(1, w_max // (depth * n_layers * p.gemm.n))))
+           for bk, p in zip(bks, programs)]
+    dims = [(p.gemm.k, p.gemm.n) for p in programs]
+
+    def fits(rows: int) -> bool:
+        return _streamed_footprint_bytes(
+            rows, bks[0], dims, bks,
+            operand_dtype=operand_dtype) <= vmem_budget
+
+    if any(adapts):
+        bm = m_max            # the permutation needs the whole activation
+        if not fits(bm):
+            return None
+    elif fits(m):
+        bm = m                # whole M resident: weights stream exactly once
+    else:
+        bm = max(1, min(bm_snap, m))
+        while bm > 1 and not fits(bm):
+            bm //= 2
+        if not fits(bm):
+            return None       # not even one streamed row fits
     acts = tuple(
         None if p.act_name == "none"
         else FUSED_ACT_ALIASES.get(p.act_name, p.act_name)
         for p in programs)
     return FusedSegment(
-        programs=list(programs), bm=max(1, min(bm, m)),
-        layer_bks=tuple(bks), acts=acts)
+        programs=list(programs), bm=max(1, bm),
+        layer_bks=tuple(bks), acts=acts, adapts=tuple(adapts),
+        buffer_depth=depth, vmem_budget=vmem_budget,
+        operand_dtype=operand_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -1242,6 +1426,114 @@ def shard_program(program: Program, mesh, axis: str | None = None,
         base=program, mesh=mesh, axis=axis, shards=tuple(shards),
         epilogue_act=program.activation if hoist else None,
         epilogue_act_name=program.act_name if hoist else "none")
+
+
+@dataclasses.dataclass
+class ShardedFusedSegment:
+    """A chained segment fused WITHIN each array of an M-sharded stream.
+
+    When every step of a wired run is sharded along host-M with aligned
+    row ranges, each array owns a contiguous row slice of the *whole*
+    chain: no interior activation ever crosses the mesh boundary, so the
+    per-array sub-chains fuse into one streamed launch each.  The
+    segment then costs ``n_arrays`` launches instead of
+    ``n_arrays * n_layers`` -- the mesh only forbids fusing *across*
+    arrays, never within one.
+    """
+    steps: list[ShardedProgram]                 # per-layer sharded lowerings
+    mesh: Any                                   # dist.ArrayMesh
+    array_segments: tuple[FusedSegment, ...]    # one fused chain per array
+    row_ranges: tuple[tuple[int, int], ...]     # host rows [m0, m1) per array
+
+    @property
+    def cfg(self) -> FeatherConfig:
+        return self.steps[0].cfg
+
+    @property
+    def out_name(self) -> str:
+        return self.steps[-1].out_name
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.steps)
+
+    @property
+    def n_arrays(self) -> int:
+        return len(self.array_segments)
+
+    @property
+    def m(self) -> int:
+        return self.steps[0].base.gemm.m
+
+    @property
+    def n_out(self) -> int:
+        return self.steps[-1].base.gemm.n
+
+    @property
+    def acts(self) -> tuple:
+        return self.array_segments[0].acts
+
+    def vmem_highwater_bytes(self) -> int:
+        """Worst per-array streamed footprint (arrays run concurrently)."""
+        return max(seg.vmem_highwater_bytes()
+                   for seg in self.array_segments)
+
+    def layer_tile_costs(self, layer: int, control: str = "minisa",
+                         max_tiles: int = 4096) -> list:
+        """Layer ``layer``'s tile stream across every array's fused
+        sub-chain (per-array streams concatenated; arrays run in
+        parallel, but the byte totals are what accounting sums)."""
+        out = []
+        for seg in self.array_segments:
+            out.extend(seg.layer_tile_costs(layer, control, max_tiles))
+        return out
+
+    def describe(self) -> dict:
+        return {
+            "n_layers": self.n_layers, "n_arrays": self.n_arrays,
+            "m": self.m, "row_ranges": list(self.row_ranges),
+            "vmem_highwater_bytes": self.vmem_highwater_bytes(),
+            "per_array": [seg.describe() for seg in self.array_segments],
+        }
+
+
+def fuse_sharded_segment(steps: list[ShardedProgram], *,
+                         vmem_budget: int = FUSED_VMEM_BUDGET,
+                         operand_dtype: str = "float32"
+                         ) -> ShardedFusedSegment | None:
+    """Fuse a run of M-sharded steps within each array, or None.
+
+    Legal only when every step is split along host-M on the same mesh
+    with identical row ranges (so array ``a``'s shard chain is a closed
+    sub-problem) and each array's per-shard Program chain is itself
+    fusable.  Adapt boundaries never qualify: the flatten/cycle
+    permutation mixes rows globally, which is exactly the cross-array
+    dataflow the mesh forbids.
+    """
+    if len(steps) < 2:
+        return None
+    if not all(isinstance(s, ShardedProgram) for s in steps):
+        return None
+    mesh = steps[0].mesh
+    if any(s.mesh is not mesh or s.axis != "m" for s in steps):
+        return None
+    if any(s.epilogue_act is not None for s in steps):
+        return None
+    ranges = tuple((sh.m0, sh.m1) for sh in steps[0].shards)
+    for s in steps[1:]:
+        if tuple((sh.m0, sh.m1) for sh in s.shards) != ranges:
+            return None
+    array_segments = []
+    for a in range(len(ranges)):
+        chain = [s.shards[a].program for s in steps]
+        seg = fuse_segment(chain, vmem_budget=vmem_budget,
+                           operand_dtype=operand_dtype)
+        if seg is None:
+            return None
+        array_segments.append(seg)
+    return ShardedFusedSegment(
+        steps=list(steps), mesh=mesh,
+        array_segments=tuple(array_segments), row_ranges=ranges)
 
 
 def _retarget_input(program: Program, source_name: str) -> Program:

@@ -12,6 +12,12 @@ length rides along as a [B, 1] int32 operand).  Unlike the prefill
 kernel it applies no ``d**-0.5`` scaling by default -- the MINISA GEMM
 stream's score GEMM carries none, and the batched path must stay on the
 sequential path's numeric trajectory.
+
+``flash_decode_proj`` is the block-fused variant: at the last KV step
+the finalised context is adapt-cycled (ravel -> tile -> slice ->
+reshape, the runtime's head-merge permutation done statically in VMEM)
+and multiplied by the resident output projection, so attention + Wo for
+the whole decode batch is ONE launch instead of two.
 """
 
 from __future__ import annotations
@@ -140,6 +146,94 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
     def _store():
         o_ref[0] = (acc_ref[...]
                     / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _decode_proj_kernel(q_ref, k_ref, v_ref, len_ref, wo_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, n_kv: int, sq: int,
+                        true_sq: int, d: int, bkv: int, scale: float,
+                        m_out: int, k_out: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                           # [sq, d]
+    k = k_ref[0]                           # [bkv, d]
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (sq, bkv), 1)
+    s = jnp.where(kpos < len_ref[0, 0], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new))
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _project():
+        ctx = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)   # [sq, d]
+        # runtime adapt on the TRUE context rows: ravel row-major, cycle
+        # to m_out*k_out elements, refold -- the head-merge permutation
+        # the per-layer path does on the host between pv and wo
+        flat = ctx[:true_sq, :].reshape(-1)
+        need, size = m_out * k_out, true_sq * d
+        if need > size:
+            flat = jnp.tile(flat, -(-need // size))
+        h = flat[:need].reshape(m_out, k_out)
+        o_ref[0] = jnp.dot(h, wo_ref[...],
+                           preferred_element_type=jnp.float32
+                           ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "true_sq", "m_out", "k_out", "bkv", "interpret", "scale"))
+def flash_decode_proj(q: jax.Array, k: jax.Array, v: jax.Array,
+                      lengths: jax.Array, wo: jax.Array, *, true_sq: int,
+                      m_out: int, k_out: int, bkv: int = 128,
+                      interpret: bool = False,
+                      scale: float = 1.0) -> jax.Array:
+    """Block-fused batched decode attention: softmax(q k^T) v followed by
+    the adapt-cycled output projection, one launch for the whole batch.
+
+    q: [B, sq, d] (rows past ``true_sq`` are carrier padding and are
+    dropped before the adapt), k, v: [B, skv, d], lengths: [B, 1] int32,
+    wo: [k_out, n_out] shared across requests (its BlockSpec is pinned,
+    so it streams HBM->VMEM once).  Returns [B, m_out, n_out].
+    """
+    b, sq, d = q.shape
+    sk = k.shape[1]
+    n_out = wo.shape[1]
+    assert sk % bkv == 0, (sk, bkv)
+    assert wo.shape[0] == k_out, (wo.shape, k_out)
+    n_kv = sk // bkv
+    kernel = functools.partial(
+        _decode_proj_kernel, n_kv=n_kv, sq=sq, true_sq=true_sq, d=d,
+        bkv=bkv, scale=scale, m_out=m_out, k_out=k_out)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, sq, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bkv, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((k_out, n_out), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m_out, n_out), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m_out, n_out), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((sq, 1), jnp.float32),
+            pltpu.VMEM((sq, 1), jnp.float32),
+            pltpu.VMEM((sq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lengths, wo)
 
 
 @functools.partial(jax.jit, static_argnames=("bkv", "interpret", "scale"))

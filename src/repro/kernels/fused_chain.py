@@ -1,33 +1,40 @@
-"""Fused chained-GEMM megakernel: one ``pl.pallas_call`` for a whole
-MINISA chained segment (paper §IV-G at kernel granularity).
+"""Fused chained-GEMM megakernel with double-buffered weight streaming:
+one ``pl.pallas_call`` for a whole MINISA chained segment (paper §IV-G
+at kernel granularity), VMEM bounded by the largest layer.
 
-The per-layer NEST kernel (``nest_gemm.py``) launches once per GEMM, so
-every chained activation round-trips through HBM between launches even
-though the Program IR commits it on-chip.  This kernel is the compiled
-twin of that commit: the grid walks host-M blocks, and within one grid
-step a ``bm``-row slab of the activation flows through *all* layers of
-the segment without leaving VMEM --
+The PR-5 kernel kept every layer's FULL weight VMEM-resident per grid
+step, so the VMEM budget capped segment length at the *sum* of the
+weights and ``adapt`` (head-split) boundaries broke fusion.  This kernel
+streams instead: the grid is ``(M/bm, sum_l K_l/bk_l)`` — the second
+axis walks every layer's host-K tiles back to back, and Pallas's grid
+pipeline double-buffers each weight's ``(bk_l, n_l)`` window because its
+BlockSpec index advances between consecutive steps (and pins once the
+layer is done, eliding refetch).  Per grid step::
 
-  layer l:  acc = sum_k  h[:, k:k+bk_l] @ W_l[k:k+bk_l, :]
-            (the layer's weight streamed in host-K tiles against the
-             resident activation slab, fp32 accumulate)
-            acc = act_l(acc)      at the final-K store -- the Activation
-                                  drain, fused exactly where the
-                                  interpreter applies it
-            h   = scratch_l <- acc   interior commit: the chained
-                                     activation lives in VMEM scratch,
-                                     never in HBM
+  layer l, K-tile j:   acc[:, :n_l] += h[:, j*bk : (j+1)*bk] @ W_l_tile
+  at j == kt_l - 1:    acc = act_l(acc)          (Activation drain)
+                       slab <- acc | adapt(acc)  (interior commit — the
+                                                  chained activation and
+                                                  the head-split/merge
+                                                  permutation both live
+                                                  in VMEM scratch)
 
-Only the segment input (one HBM read) and the last layer's output (one
-HBM write) cross the chip boundary; ``core/program.FusedSegment``'s
-traffic accounting charges exactly that.
+Only the segment input (one HBM read), the weight K-tiles (each shipped
+once per M block) and the last layer's output (one HBM write) cross the
+chip boundary; ``core/program.FusedSegment`` charges exactly that.
 
-Row-wise activations (softmax / rmsnorm / layernorm) are legal here even
-though the per-layer kernel must defer them to the host: each layer's
-accumulator block spans the layer's FULL output width (weights are VMEM-
-resident per grid step), so a block holds complete host rows.  Their
-numerics mirror ``runtime.executable.ACTIVATIONS`` (same eps, same
-max-subtraction).
+``adapt`` boundaries (the runtime's flatten/cycle/reshape shape glue
+between chained layers) lower to an all-static index permutation on the
+resident slab: the true ``(m_l, n_l)`` region of the accumulator is
+raveled row-major, cycled to ``m' * k'`` elements and reshaped — bit-
+identical to ``runtime.executable.adapt`` because it IS the same
+indexing, just performed in VMEM.  This requires the whole activation
+resident (one M block), which ``fuse_segment`` enforces.
+
+Row-wise activations (softmax / rmsnorm / layernorm) stay legal: the
+accumulator block spans the layer's FULL true output width, so it holds
+complete host rows.  Their numerics mirror
+``runtime.executable.ACTIVATIONS`` (same eps, same max-subtraction).
 
 On CPU the kernel runs in Pallas interpret mode; on TPU the identical
 call site lowers to Mosaic.
@@ -72,65 +79,151 @@ FUSED_ACT_FNS = {
 }
 
 
-def _fused_kernel(x_ref, *refs, dims, bks, acts):
-    """One bm-row slab through every layer of the segment."""
+def _adapt_slab(acc, m_l, n_l, m_next, k_next):
+    """The runtime ``adapt`` shape glue as a static index permutation:
+    ravel the true region row-major, cycle to m'*k' elements, reshape."""
+    flat = acc[:m_l, :].reshape(-1)
+    need = m_next * k_next
+    size = m_l * n_l
+    if need > size:
+        flat = jnp.tile(flat, -(-need // size))
+    return flat[:need].reshape(m_next, k_next)
+
+
+def _fused_kernel(x_ref, *refs, dims, bks, kts, offs, acts, adapts,
+                  bm, k_slab):
+    """One (m-block, K-tile) grid step: exactly one layer's tile fires."""
     n_layers = len(dims)
     w_refs = refs[:n_layers]
     o_ref = refs[n_layers]
-    h_refs = refs[n_layers + 1:]          # interior VMEM commits
-    h = x_ref[...].astype(jnp.float32)
-    for layer, (k_l, n_l) in enumerate(dims):
-        acc = jnp.zeros((h.shape[0], n_l), jnp.float32)
-        bk = bks[layer]
-        for k0 in range(0, k_l, bk):      # stream the weight's K tiles
-            k1 = min(k0 + bk, k_l)
-            acc += jnp.dot(h[:, k0:k1], w_refs[layer][k0:k1, :],
-                           preferred_element_type=jnp.float32)
-        if acts[layer] is not None:       # Activation drain, fused
-            acc = FUSED_ACT_FNS[acts[layer]](acc)
-        if layer < n_layers - 1:
-            h_refs[layer][...] = acc      # on-chip commit (stays in VMEM)
-            h = h_refs[layer][...]
-        else:
-            o_ref[...] = acc.astype(o_ref.dtype)
+    slab_ref = refs[n_layers + 1]     # resident interior activation
+    acc_ref = refs[n_layers + 2]      # fp32 accumulator, n_max wide
+    s = pl.program_id(1)
+
+    for layer in range(n_layers):
+        m_l, k_l, n_l = dims[layer]
+        off, kt, bk = offs[layer], kts[layer], bks[layer]
+        j = s - off                   # this layer's local K-tile index
+
+        @pl.when((s >= off) & (s < off + kt))
+        def _layer_step(layer=layer, m_l=m_l, k_l=k_l, n_l=n_l,
+                        kt=kt, bk=bk, j=j):
+            if layer == 0:
+                # the input block window IS this K tile (streamed too)
+                h = x_ref[...].astype(jnp.float32)
+            else:
+                h = slab_ref[:, pl.ds(j * bk, bk)]
+            partial = jnp.dot(h, w_refs[layer][...].astype(jnp.float32),
+                              preferred_element_type=jnp.float32)
+
+            @pl.when(j == 0)
+            def _init():
+                acc_ref[:, :n_l] = jnp.zeros((bm, n_l), jnp.float32)
+
+            acc_ref[:, :n_l] += partial
+
+            @pl.when(j == kt - 1)     # final K tile: drain the layer
+            def _drain():
+                acc = acc_ref[:, :n_l]
+                if acts[layer] is not None:
+                    acc = FUSED_ACT_FNS[acts[layer]](acc)
+                if layer == n_layers - 1:
+                    o_ref[...] = acc.astype(o_ref.dtype)
+                    return
+                if adapts[layer + 1]:
+                    m_next, k_next = dims[layer + 1][:2]
+                    nxt = _adapt_slab(acc, m_l, n_l, m_next, k_next)
+                else:
+                    m_next, k_next = bm, n_l
+                    nxt = acc
+                # full overwrite, zero-padded: stale slab columns from
+                # the previous (wider) layer can never leak, and the
+                # zero K-pad matches the zero-padded weight rows
+                slab_ref[...] = jnp.pad(
+                    nxt, ((0, bm - m_next), (0, k_slab - k_next)))
+
+
+def _pad_axis(x, axis, target):
+    pad = target - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bm", "bks", "acts", "interpret",
-                                    "out_dtype"))
+                   static_argnames=("bm", "bks", "acts", "adapts", "dims",
+                                    "interpret", "out_dtype"))
 def fused_chain(x: jax.Array, *ws: jax.Array, bm: int,
                 bks: tuple[int, ...], acts: tuple[str | None, ...],
+                adapts: tuple[bool, ...] | None = None,
+                dims: tuple[tuple[int, int, int], ...] | None = None,
                 interpret: bool = False, out_dtype=None) -> jax.Array:
-    """O = act_{L-1}(... act_0(X @ W_0) ... @ W_{L-1}); M % bm == 0
-    (``kernels.ops.fused_chain`` pads).
+    """O = act_{L-1}(... act_0(X @ W_0) ... @ W_{L-1}) in ONE launch,
+    each weight streamed HBM->VMEM in double-buffered (bk_l, n_l) tiles.
 
-    One kernel launch for the whole chain: grid (M/bm,), each weight
-    VMEM-resident per grid step, interior activations in VMEM scratch.
+    ``dims`` carries each layer's TRUE (m, k, n); operands are zero-
+    padded here to the K-tile grid (zero pad rows make stale slab
+    columns inert).  ``adapts[l]`` marks the runtime shape-glue boundary
+    before layer ``l``, lowered to the in-kernel slab permutation —
+    which needs the whole activation in one M block (bm >= every m_l).
     """
-    m, k0 = x.shape
     assert ws, "fused_chain needs at least one weight"
-    assert m % bm == 0, f"M={m} not divisible by bm={bm}"
-    dims = tuple(w.shape for w in ws)
-    k_prev = k0
-    for k_l, n_l in dims:
-        assert k_l == k_prev, f"chain shape mismatch: {k_prev} -> {k_l}"
-        k_prev = n_l
-    assert len(bks) == len(ws) and len(acts) == len(ws)
+    n_layers = len(ws)
+    if adapts is None:
+        adapts = (False,) * n_layers
+    if dims is None:
+        m = x.shape[0]
+        dims = tuple((m, w.shape[0], w.shape[1]) for w in ws)
+    assert len(bks) == len(acts) == len(adapts) == len(dims) == n_layers
+    assert not adapts[0], "layer 0 reads the host input, not the slab"
+    for l in range(1, n_layers):
+        if not adapts[l]:
+            assert dims[l][1] == dims[l - 1][2], \
+                f"chain shape mismatch at layer {l}: " \
+                f"{dims[l - 1][2]} -> {dims[l][1]}"
     assert all(a is None or a in FUSED_ACT_FNS for a in acts), acts
-    n_out = dims[-1][1]
     out_dtype = out_dtype or x.dtype
 
-    in_specs = [pl.BlockSpec((bm, k0), lambda i: (i, 0))]
-    in_specs += [pl.BlockSpec(dim, lambda i: (0, 0)) for dim in dims]
-    scratch = [pltpu.VMEM((bm, n_l), jnp.float32)
-               for _, n_l in dims[:-1]]
-    return pl.pallas_call(
-        functools.partial(_fused_kernel, dims=dims, bks=tuple(bks),
-                          acts=tuple(acts)),
-        grid=(m // bm,),
+    bks = tuple(max(1, min(bk, d[1])) for bk, d in zip(bks, dims))
+    kts = tuple(-(-d[1] // bk) for d, bk in zip(dims, bks))
+    padded_ks = tuple(kt * bk for kt, bk in zip(kts, bks))
+    offs = tuple(sum(kts[:l]) for l in range(n_layers))
+    total = sum(kts)
+    m0, m_out = dims[0][0], dims[-1][0]
+    n_out = dims[-1][2]
+    if any(adapts):
+        # the slab permutation needs every row of every layer resident
+        bm = max(bm, max(d[0] for d in dims))
+        n_m = 1
+    else:
+        bm = max(1, min(bm, m0))
+        n_m = -(-m0 // bm)
+    k_slab = max([pk for pk in padded_ks[1:]] or [1])
+
+    x = _pad_axis(_pad_axis(x, 0, n_m * bm), 1, padded_ks[0])
+    ws = tuple(_pad_axis(w, 0, pk) for w, pk in zip(ws, padded_ks))
+
+    in_specs = [pl.BlockSpec(
+        (bm, bks[0]),
+        lambda i, s, kt0=kts[0]: (i, jnp.minimum(s, kt0 - 1)))]
+    in_specs += [
+        pl.BlockSpec(
+            (bk, w.shape[1]),
+            lambda i, s, off=off, kt=kt: (jnp.clip(s - off, 0, kt - 1), 0))
+        for w, bk, off, kt in zip(ws, bks, offs, kts)]
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_kernel, dims=tuple(dims), bks=bks, kts=kts, offs=offs,
+            acts=tuple(acts), adapts=tuple(adapts), bm=bm, k_slab=k_slab),
+        grid=(n_m, total),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm, n_out), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, n_out), out_dtype),
-        scratch_shapes=scratch,
+        out_specs=pl.BlockSpec((bm, n_out), lambda i, s: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_m * bm, n_out), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, k_slab), jnp.float32),
+                        pltpu.VMEM((bm, max(d[2] for d in dims)),
+                                   jnp.float32)],
         interpret=interpret,
     )(x, *ws)
+    return out[:m_out]

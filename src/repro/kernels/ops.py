@@ -59,30 +59,33 @@ def _rnd(x):
     return p
 
 
-def fused_chain(x, ws, *, bm=128, bks=None, acts=None, interpret=None,
-                out_dtype=None):
+def fused_chain(x, ws, *, bm=128, bks=None, acts=None, adapts=None,
+                dims=None, interpret=None, out_dtype=None):
     """Ragged-shape-safe fused chained GEMM: ONE kernel launch for
-    ``act_{L-1}(... act_0(x @ ws[0]) ...) @ ws[-1]`` with every interior
-    activation resident in VMEM (zero-pads M to the block multiple, the
-    paper's implicit zero-padding semantics).
+    ``act_{L-1}(... act_0(x @ ws[0]) ...) @ ws[-1]`` with every layer's
+    weight streamed HBM->VMEM in double-buffered K tiles and every
+    interior activation resident in VMEM (the kernel zero-pads M and K
+    to the tile grid, the paper's implicit zero-padding semantics).
 
-    ``bks`` streams each layer's weight in host-K tiles against the
-    resident activation; ``acts`` names per-layer activations from
-    :data:`fused_chain.FUSED_ACT_FNS` (None entries skip).
+    ``bks`` sets each layer's weight-streaming granularity; ``acts``
+    names per-layer activations from :data:`fused_chain.FUSED_ACT_FNS`
+    (None entries skip); ``adapts``/``dims`` carry the runtime's shape-
+    glue boundaries and true per-layer (m, k, n) so a whole transformer
+    block (attention + MLP, spanning head-split reshapes) runs as one
+    launch.
     """
     interpret = _auto_interpret(interpret)
-    m = x.shape[0]
     n_layers = len(ws)
     if bks is None:
         bks = (128,) * n_layers
     if acts is None:
         acts = (None,) * n_layers
-    bm_ = min(bm, _rnd(m))
     bks_ = tuple(max(1, min(bk, w.shape[0])) for bk, w in zip(bks, ws))
-    x, _ = _pad_to(x, 0, bm_)
-    o = _fc.fused_chain(x, *ws, bm=bm_, bks=bks_, acts=tuple(acts),
-                        interpret=interpret, out_dtype=out_dtype)
-    return o[:m]
+    return _fc.fused_chain(
+        x, *ws, bm=bm, bks=bks_, acts=tuple(acts),
+        adapts=None if adapts is None else tuple(adapts),
+        dims=None if dims is None else tuple(tuple(d) for d in dims),
+        interpret=interpret, out_dtype=out_dtype)
 
 
 def flash_attention(q, k, v, *, causal=True, bq=128, bkv=128,
@@ -128,6 +131,36 @@ def flash_decode(q, k, v, lengths=None, *, bkv=128, interpret=None,
     o = _fa.flash_decode(q, k, v, lengths, bkv=bkv_, interpret=interpret,
                          scale=scale)
     return o[:, :sq]
+
+
+def flash_decode_proj(q, k, v, wo, lengths=None, *, m_out, k_out,
+                      bkv=128, interpret=None, scale=1.0):
+    """Block-fused batched decode attention: one launch computes
+    softmax(q k^T) v AND the adapt-cycled output projection ``wo`` for
+    every request in the batch.
+
+    q: [B, sq, d], k, v: [B, skv, d], wo: [k_out, n_out] shared across
+    requests, lengths: [B] or [B, 1] int true KV lengths.  Each
+    request's [sq, d] context is raveled row-major, cycled to
+    m_out * k_out elements and refolded to [m_out, k_out] in VMEM (the
+    runtime ``adapt`` head-merge) before the projection.  Returns
+    [B, m_out, n_out].
+    """
+    interpret = _auto_interpret(interpret)
+    b, sq, d = q.shape
+    sk = k.shape[1]
+    if lengths is None:
+        lengths = jnp.full((b, 1), sk, dtype=jnp.int32)
+    else:
+        lengths = jnp.asarray(lengths, dtype=jnp.int32).reshape(b, 1)
+    bkv_ = min(bkv, _rnd(sk))
+    q, _ = _pad_to(q, 1, 8)
+    k, _ = _pad_to(k, 1, bkv_)
+    v, _ = _pad_to(v, 1, bkv_)
+    return _fa.flash_decode_proj(q, k, v, lengths, jnp.asarray(wo),
+                                 true_sq=sq, m_out=m_out, k_out=k_out,
+                                 bkv=bkv_, interpret=interpret,
+                                 scale=scale)
 
 
 def mamba_scan(da, dbx, c, h0, *, d_blk=256, chunk=64, interpret=None):

@@ -146,10 +146,14 @@ def compiled_key(program: "Program", max_block: int) -> tuple:
 
 def fused_key(segment, max_block: int) -> tuple:
     """Structural key of a fused segment: the per-layer compiled keys
-    plus the segment launch geometry -- a rebuilt executable's fresh
-    FusedSegment objects hit the same artifact."""
+    plus the full streamed launch geometry -- a rebuilt executable's
+    fresh FusedSegment objects hit the same artifact, while a changed
+    K-tile schedule, adapt layout, buffer depth or VMEM budget can never
+    serve a stale compiled kernel."""
     return (tuple(compiled_key(p, max_block) for p in segment.programs),
-            segment.bm, segment.layer_bks, segment.acts, max_block)
+            segment.bm, segment.layer_bks, segment.acts,
+            tuple(segment.adapts), segment.buffer_depth,
+            segment.vmem_budget, segment.operand_dtype, max_block)
 
 
 class ProgramCache:

@@ -153,14 +153,18 @@ class Step:
 
 @dataclasses.dataclass
 class Segment:
-    """A maximal chained run of steps (one ``program.chain`` group).
+    """A maximal chained run of steps, possibly spanning adapt breaks.
 
     ``fused`` carries the one-kernel-launch geometry when the whole
-    segment is fusion-legal (``program.fuse_segment``): shape-compatible
-    ``wired`` chains with kernel-applicable activations.  ``adapt``
-    boundaries start a new segment by construction, and mesh-sharded
-    streams never fuse (on-chip residency is per-array state), so those
-    cases fall back to the per-Program path automatically.
+    segment is fusion-legal (``program.fuse_segment``): ``wired`` chains
+    with kernel-applicable activations, joined across interior ``adapt``
+    (head split/merge) boundaries -- the streamed megakernel lowers the
+    shape glue to an in-kernel slab permutation, so a whole transformer
+    block runs as one launch.  On a mesh, ``fused`` may instead be a
+    :class:`~repro.core.program.ShardedFusedSegment` (fused WITHIN each
+    array when the run is M-sharded with aligned rows -- the mesh only
+    forbids fusing *across* arrays).  Everything else falls back to the
+    per-Program path automatically.
     """
     indices: list[int]                            # step indices, in order
     fused: programlib.FusedSegment | None = None
@@ -325,18 +329,46 @@ class ModelExecutable:
             # a mesh-sharded stream keeps every layer's host round trip
             # ('wired' steps feed the producer's output back as 'I')
             if len(progs) > 1 and self.mesh is None:
-                progs = programlib.chain(progs, lower_fn=cache.lower)
+                # chain each maximal wired sub-run; interior adapt
+                # boundaries keep their host-shaped input Program (the
+                # fused kernel lowers the shape glue to an in-kernel
+                # slab permutation; the per-step fallback adapts
+                # host-side)
+                chained: list = []
+                start = 0
+                for i in range(1, len(progs) + 1):
+                    if i == len(progs) or modes[i] != "wired":
+                        sub = progs[start:i]
+                        chained.extend(
+                            programlib.chain(sub, lower_fn=cache.lower)
+                            if len(sub) > 1 else sub)
+                        start = i
+                progs = chained
             first = len(steps)
+            shardeds = []
             for (op, _, _, host_act), prog, mode in zip(segment, progs,
                                                         modes):
                 sharded = (self.cache.sharded(prog, self.mesh)
                            if self.mesh is not None else None)
+                shardeds.append(sharded)
                 steps.append(Step(index=len(steps), op=op, program=prog,
                                   input_mode=mode, host_act=host_act,
                                   reps=max(1, getattr(op.gemm, "count", 1)),
                                   sharded=sharded))
-            fused = (programlib.fuse_segment(progs)
-                     if len(progs) > 1 and self.mesh is None else None)
+            fused = None
+            if len(progs) > 1:
+                if self.mesh is None:
+                    # interior adapt boundaries fuse as in-kernel
+                    # permutations; the FIRST step's adapt (if any) is
+                    # applied host-side to the segment input
+                    adapts = (False,) + tuple(
+                        m == "adapt" for m in modes[1:])
+                    fused = programlib.fuse_segment(progs, adapts=adapts)
+                elif all(s is not None for s in shardeds):
+                    # fuse WITHIN each array: legal when the whole run
+                    # is M-sharded with aligned rows (mesh segments
+                    # contain only wired sub-runs by construction)
+                    fused = programlib.fuse_sharded_segment(shardeds)
             self.segments.append(
                 Segment(indices=list(range(first, len(steps))),
                         fused=fused))
@@ -350,7 +382,13 @@ class ModelExecutable:
             wired = (prev is not None and op.chained
                      and prev[1] is None       # host act breaks the chain
                      and (prev[0].gemm.m, prev[0].gemm.n) == (g.m, g.k))
-            if not wired:
+            # a chained shape break (head split/merge) no longer flushes:
+            # the segment continues across the adapt boundary and the
+            # fused kernel swallows the reshape (single-array streams
+            # only -- per-array residency stops at the mesh boundary)
+            adaptable = (not wired and prev is not None and op.chained
+                         and prev[1] is None and self.mesh is None)
+            if not (wired or adaptable):
                 flush()
             segment.append(entry)
             modes.append("wired" if wired
@@ -456,7 +494,9 @@ class ModelExecutable:
                 if check:
                     ref = np.asarray(seg_input(first, ref_prev, env),
                                      np.float32)
-                    for s in steps:
+                    for j, s in enumerate(steps):
+                        if j > 0 and s.input_mode == "adapt":
+                            ref = adapt(ref, s.op.gemm.m, s.op.gemm.k)
                         ref = ref.astype(np.float32) @ env[s.weight_name]
                         if s.program.activation is not None:
                             ref = np.asarray(s.program.activation(ref))
@@ -542,9 +582,25 @@ class ModelExecutable:
         WO-S with full output rows, which bucketing preserves."""
         cache = self.cache
         segs: list[BatchSegment] = []
+        runs: list[list[int]] = []
         for seg in self.segments:
-            steps = [self.steps[i] for i in seg.indices]
-            idx = list(seg.indices)
+            # Stacked-batch flattening cannot cross an interior adapt
+            # boundary (the flatten/cycle glue would mix requests' rows)
+            # or a dynamic<->static transition, so fused segments that
+            # span them re-split here into batchable sub-runs -- the
+            # pre-streaming segment granularity.
+            run: list[int] = []
+            for i in seg.indices:
+                s = self.steps[i]
+                if run and (s.input_mode == "adapt"
+                            or s.op.dynamic != self.steps[run[-1]].op.dynamic):
+                    runs.append(run)
+                    run = []
+                run.append(i)
+            if run:
+                runs.append(run)
+        for idx in runs:
+            steps = [self.steps[i] for i in idx]
             m_rows = steps[0].op.gemm.m
             if any(s.op.dynamic for s in steps):
                 if (len(steps) == 2 and all(s.op.dynamic for s in steps)
@@ -778,7 +834,14 @@ class ModelExecutable:
                 if seg.fused is not None:
                     fused_costs = seg.fused.layer_tile_costs(pos)
                     fres = perf.simulate(fused_costs, self.cfg)
-                    fused_launch = elem * (g.k * g.n)   # weights always
+                    if isinstance(seg.fused, programlib.FusedSegment):
+                        # weights ship K-padded, once per M step of the
+                        # streamed launch (kernel_hbm_bytes semantics)
+                        fused_launch = elem * (seg.fused.m_steps
+                                               * seg.fused.padded_ks[pos]
+                                               * g.n)
+                    else:
+                        fused_launch = elem * (g.k * g.n)
                     if pos == 0:
                         fused_launch += elem * g.m * g.k    # segment input
                     if pos == len(steps) - 1:

@@ -97,6 +97,55 @@ def test_flash_decode_ragged_kv_padding():
                                rtol=1e-5, atol=1e-5)
 
 
+def test_flash_decode_proj_matches_adapt_oracle():
+    """Block-fused decode attention: the output projection folded into
+    the kernel's last KV step equals flash_decode + host adapt + GEMM,
+    across shrink/identity/growth adapt geometries and ragged lengths."""
+    from repro.runtime.executable import adapt
+    rng = np.random.default_rng(2)
+    B, sq, skv, d = 3, 1, 16, 12
+    q = rng.standard_normal((B, sq, d)).astype(np.float32)
+    k = rng.standard_normal((B, skv, d)).astype(np.float32)
+    v = rng.standard_normal((B, skv, d)).astype(np.float32)
+    lengths = np.array([16, 7, 11], dtype=np.int32)
+    ctx = np.asarray(ops.flash_decode(q, k, v, lengths))
+    for m_out, k_out in [(1, 12), (2, 8), (3, 5)]:
+        wo = rng.standard_normal((k_out, 6)).astype(np.float32)
+        want = np.stack([adapt(ctx[r], m_out, k_out) @ wo
+                         for r in range(B)])
+        got = np.asarray(ops.flash_decode_proj(q, k, v, wo, lengths,
+                                               m_out=m_out, k_out=k_out))
+        assert got.shape == (B, m_out, 6)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_backend_batched_attention_proj_one_launch(cell):
+    """attention + Wo for the whole batch is ONE pallas launch, and it
+    matches the base backend's replay + host-adapt oracle."""
+    _, decode = cell
+    plan = decode.batch_plan(3)
+    bseg = next(s for s in plan.segments if s.kind == "attention")
+    nxt = decode.steps[bseg.indices[-1] + 1]
+    assert nxt.input_mode == "adapt"
+    g = nxt.op.gemm                      # the wo step's adapt geometry
+    qk, pv = bseg.programs
+    rng = np.random.default_rng(7)
+    B = 3
+    q = rng.standard_normal((B, qk.gemm.m, qk.gemm.k)).astype(np.float32)
+    kT = rng.standard_normal((B, qk.gemm.k, qk.gemm.n)).astype(np.float32)
+    v = rng.standard_normal((B, pv.gemm.k, pv.gemm.n)).astype(np.float32)
+    wo = rng.standard_normal((g.k, g.n)).astype(np.float32)
+    interp = decode.make_backend("interpreter")
+    want = interp.run_batched_attention_proj(
+        (qk, pv), q, kT, v, wo, m_out=g.m, k_out=g.k)
+    pallas = decode.make_backend("pallas")
+    l0 = pallas.n_launches
+    got = pallas.run_batched_attention_proj(
+        (qk, pv), q, kT, v, wo, m_out=g.m, k_out=g.k)
+    assert pallas.n_launches - l0 == 1
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
 # ---------------------------------------------------------------------------
 # Batch plan: one launch per segment, no new mapper searches
 # ---------------------------------------------------------------------------

@@ -180,37 +180,83 @@ def test_row_wise_activation_needs_wos():
     assert reason is not None and "row-wise" in reason
 
 
-def test_adapt_boundary_breaks_fusion():
+def test_adapt_boundary_fuses_in_kernel():
     """The head-split reshape between projections and attention is an
-    ``adapt`` step: it starts a new segment, so no fused segment ever
-    spans it."""
+    ``adapt`` step: the streamed megakernel lowers it to an in-kernel
+    slab permutation, so fused segments SPAN it (one launch per block)
+    instead of breaking on it."""
     ex = ModelExecutable.for_cell("gemma-7b", "decode_tiny", CFG,
                                   cache=ProgramCache())
     covered = [i for seg in ex.segments for i in seg.indices]
     assert covered == list(range(len(ex.steps)))   # exact partition
     for seg in ex.segments:
         steps = [ex.steps[i] for i in seg.indices]
-        assert all(s.input_mode == "wired" for s in steps[1:])
+        assert all(s.input_mode in ("wired", "adapt") for s in steps[1:])
         assert steps[0].input_mode in ("fresh", "adapt")
         if seg.fused is not None:
             assert seg.n_steps >= 2
+            assert seg.fused.adapts == tuple(
+                i > 0 and s.input_mode == "adapt"
+                for i, s in enumerate(steps))
+            if any(seg.fused.adapts):
+                # the in-kernel permutation needs the whole activation
+                # resident in one M block
+                assert seg.fused.m_steps == 1
     adapt_steps = [s.index for s in ex.steps if s.input_mode == "adapt"]
     assert adapt_steps, "cell should contain adapt boundaries"
-    seg_starts = {seg.indices[0] for seg in ex.segments}
-    assert set(adapt_steps) <= seg_starts
+    spanning = [seg for seg in ex.segments if seg.fused is not None
+                and any(seg.fused.adapts)]
+    assert spanning, "a fused segment should span an adapt boundary"
+    # the attention block (qk/pv between projections) rides in one of them
+    assert any(ex.steps[i].op.dynamic for seg in spanning
+               for i in seg.indices)
+
+
+def test_adapt_spanning_segment_is_one_launch():
+    """A segment spanning former adapt breaks runs as ONE pallas_call,
+    bit-comparable to the per-layer replay, with the streamed VMEM
+    high-water below the resident-weights footprint."""
+    ex = ModelExecutable.for_cell("gemma-7b", "decode_tiny", CFG,
+                                  cache=ProgramCache())
+    seg = next(seg for seg in ex.segments if seg.fused is not None
+               and any(seg.fused.adapts))
+    steps = [ex.steps[i] for i in seg.indices]
+    env = ex.make_tensors(seed=3)
+    t = {"I": np.asarray(env[steps[0].input_name]
+                         if steps[0].input_mode == "fresh"
+                         else np.zeros((steps[0].op.gemm.m,
+                                        steps[0].op.gemm.k), np.float32))}
+    rng = np.random.default_rng(7)
+    t["I"] = rng.standard_normal(t["I"].shape).astype(np.float32)
+    for j, s in enumerate(steps):
+        t[f"W{j}"] = env[s.weight_name]
+    be = backends.get_backend("pallas", CFG)
+    before = be.n_launches
+    out = np.asarray(be.run_segment(seg.fused, t)[seg.fused.out_name])
+    assert be.n_launches - before == 1       # the whole block, one launch
+    ref_be = backends.get_backend("interpreter", CFG)
+    ref = np.asarray(ref_be.run_segment(seg.fused, t)[seg.fused.out_name])
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+    # streamed footprint beats keeping every layer's weight resident
+    assert (seg.fused.vmem_highwater_bytes()
+            < seg.fused.resident_vmem_bytes())
 
 
 def test_sharded_stream_falls_back():
-    """Mesh-sharded executables never fuse (on-chip residency is
-    per-array state) but still run end-to-end."""
+    """Mesh-sharded executables only fuse WITHIN arrays (per-array
+    residency stops at the mesh boundary); streams the axis policy
+    shards along N/K keep the per-Program path and still run
+    end-to-end."""
     pytest.importorskip("jax")
     from repro.dist import ArrayMesh
     ex = ModelExecutable.for_cell("gemma-7b", "decode_tiny", CFG,
                                   cache=ProgramCache(), mesh=ArrayMesh(2))
-    assert all(seg.fused is None for seg in ex.segments)
-    res = ex.run("interpreter", fused=True)
-    assert res.fused_segments == 0
-    assert all(o is not None for o in res.outputs)
+    for seg in ex.segments:
+        assert seg.fused is None or isinstance(
+            seg.fused, program.ShardedFusedSegment)
+    res = ex.run("interpreter", fused=True, check=True)
+    assert all(res.outputs[seg.indices[-1]] is not None
+               for seg in ex.segments)
 
 
 def test_sharded_program_not_fusable():
@@ -394,3 +440,199 @@ def test_interpreter_chain_stays_on_device():
     np.testing.assert_allclose(np.asarray(out),
                                _oracle(x, ws, ["relu", "none"]),
                                rtol=2e-4, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Streamed fusion: adapt boundaries, dtype-aware budget, cache keys, mesh
+# ---------------------------------------------------------------------------
+
+def _build_adapt_chain(layer_dims, acts, cache=None):
+    """Lower an adapt-broken stack: layer_dims = [(m, k, n), ...] where
+    consecutive shapes need NOT chain -- every junction is an adapt.
+    Row-wise acts ride in-program only where the winning mapping keeps
+    full rows per tile (the runtime's gate); otherwise the layer drops
+    to 'none' and the caller's act list is updated in place."""
+    cache = cache or ProgramCache()
+    progs = []
+    for i, (m, k, n) in enumerate(layer_dims):
+        g = mapper.Gemm(m=m, k=k, n=n, name=f"adapt-l{i}")
+        plan = cache.plan(g, CFG)
+        legal = acts[i] not in program.ROW_WISE_ACTIVATIONS or (
+            plan.choice.df == isa.Dataflow.WOS and plan.program.n_n == 1)
+        if not legal:
+            acts[i] = "none"
+        progs.append(cache.lower(
+            plan.gemm, plan.choice, CFG,
+            activation=ACTIVATIONS.get(acts[i]), act_name=acts[i],
+            out_name=f"O{i}"))
+    return progs
+
+
+def _adapt_oracle(x, ws, layer_dims, acts, adapts):
+    from repro.runtime.executable import adapt
+    out = np.asarray(x, np.float32)
+    for (m, k, n), w, act, ad in zip(layer_dims, ws, acts, adapts):
+        if ad:
+            out = adapt(out, m, k)
+        out = out @ w
+        fn = ACTIVATIONS.get(act)
+        if fn is not None:
+            out = np.asarray(fn(out))
+    return out
+
+
+@settings(max_examples=6, deadline=None)
+@given(m0=st.integers(2, 24), k0=st.integers(3, 24),
+       n0=st.integers(2, 24), m1=st.integers(2, 24),
+       k1=st.integers(2, 24), n1=st.integers(2, 16),
+       act=st.sampled_from(["none", "relu", "softmax", "rmsnorm"]),
+       seed=st.integers(0, 2 ** 16))
+def test_adapt_chain_property(m0, k0, n0, m1, k1, n1, act, seed):
+    """Property: any random chain broken by an adapt reshape agrees
+    across fused pallas (in-kernel permutation), the base per-layer
+    replay (host-side adapt) and the numpy oracle."""
+    layer_dims = [(m0, k0, n0), (m1, k1, n1)]
+    acts = [act, "none"]
+    adapts = (False, True)
+    progs = _build_adapt_chain(layer_dims, acts)
+    seg = program.fuse_segment(progs, adapts=adapts)
+    assert seg is not None, program.fusion_illegal_reason(
+        progs, adapts=adapts)
+    assert seg.m_steps == 1
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m0, k0)).astype(np.float32)
+    ws = [rng.standard_normal((k, n)).astype(np.float32) / np.sqrt(k)
+          for (_, k, n) in layer_dims]
+    ref = _adapt_oracle(x, ws, layer_dims, acts, adapts)
+    for name in ("pallas", "interpreter"):
+        out = _run_fused(name, seg, x, ws)
+        np.testing.assert_allclose(
+            out, ref, rtol=2e-4, atol=2e-4 + 2e-4 * max(k0, k1),
+            err_msg=f"{name} adapt chain diverged")
+
+
+def test_adapt_chain_with_row_wise_acts_three_layers():
+    """Two adapt boundaries + softmax/rmsnorm drains, fused vs oracle."""
+    layer_dims = [(6, 9, 7), (8, 5, 11), (3, 10, 5)]
+    acts = ["softmax", "rmsnorm", "none"]
+    adapts = (False, True, True)
+    progs = _build_adapt_chain(layer_dims, acts)
+    seg = program.fuse_segment(progs, adapts=adapts)
+    assert seg is not None, program.fusion_illegal_reason(
+        progs, adapts=adapts)
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((6, 9)).astype(np.float32)
+    ws = [rng.standard_normal((k, n)).astype(np.float32) / np.sqrt(k)
+          for (_, k, n) in layer_dims]
+    ref = _adapt_oracle(x, ws, layer_dims, acts, adapts)
+    for name in ("pallas", "interpreter"):
+        np.testing.assert_allclose(
+            _run_fused(name, seg, x, ws), ref,
+            rtol=2e-4, atol=2e-3, err_msg=name)
+
+
+def test_streamed_budget_is_dtype_aware():
+    """The VMEM budget counts BYTES: the same geometry that busts the
+    budget at fp32 fits at bf16/int8 (satellite: dtype-aware budget)."""
+    chained = _build_chain((8, [12, 8, 6]), ["relu", "none"])
+    f32 = program._streamed_footprint_bytes(
+        8, 3, [(12, 8), (8, 6)], [3, 4], operand_dtype="float32")
+    bf16 = program._streamed_footprint_bytes(
+        8, 3, [(12, 8), (8, 6)], [3, 4], operand_dtype="bfloat16")
+    int8 = program._streamed_footprint_bytes(
+        8, 3, [(12, 8), (8, 6)], [3, 4], operand_dtype="int8")
+    assert f32 > bf16 > int8          # window bytes scale with the dtype
+    # pick a budget that fits the streamed bf16 geometry but not fp32
+    lo = program.fusion_illegal_reason(chained, vmem_budget=0)
+    assert "budget" in lo
+    for budget in range(1, 1 << 20):
+        seg16 = program.fuse_segment(chained, vmem_budget=budget,
+                                     operand_dtype="bfloat16")
+        seg32 = program.fuse_segment(chained, vmem_budget=budget)
+        if seg16 is not None and seg32 is None:
+            break
+    else:
+        pytest.fail("no budget separates fp32 from bf16 legality")
+    assert seg16.operand_dtype == "bfloat16"
+    assert seg16.vmem_budget == budget
+    assert "dtype" in program.fusion_illegal_reason(
+        chained, operand_dtype="fp4")
+    assert program.fuse_segment(chained, operand_dtype="fp4") is None
+
+
+def test_fused_key_includes_streaming_geometry():
+    """Cache-key regression (satellite): a changed buffer depth, VMEM
+    budget, adapt layout or operand dtype must MISS the fused tier --
+    serving a stale kernel compiled for different streaming geometry
+    would be silently wrong."""
+    import dataclasses as dc
+    from repro.runtime.cache import fused_key
+    chained = _build_chain((8, [12, 8, 6]), ["relu", "none"])
+    seg = program.fuse_segment(chained)
+    base = fused_key(seg, 2048)
+    assert fused_key(program.fuse_segment(chained), 2048) == base
+    variants = [
+        dc.replace(seg, buffer_depth=seg.buffer_depth + 1),
+        dc.replace(seg, vmem_budget=seg.vmem_budget // 2),
+        dc.replace(seg, adapts=(False, True)),
+        dc.replace(seg, operand_dtype="bfloat16"),
+        dc.replace(seg, layer_bks=tuple(b + 1 for b in seg.layer_bks)),
+        dc.replace(seg, bm=seg.bm + 1),
+    ]
+    keys = [fused_key(v, 2048) for v in variants]
+    assert len(set(keys + [base])) == len(keys) + 1, keys
+
+
+@pytest.mark.parametrize("n_arrays", [2, 4])
+def test_mesh_subchain_fused_within_arrays(n_arrays):
+    """An M-sharded chained run fuses WITHIN each array: one streamed
+    launch per array (n_launches == n_arrays), matching the oracle on
+    both backends (satellite: 2/4-array mesh sub-chain)."""
+    pytest.importorskip("jax")
+    from repro.dist import ArrayMesh
+    mesh = ArrayMesh(n_arrays)
+    m, widths = 16, [12, 8, 6]
+    acts = ["relu", "none"]
+    progs = _build_adapt_chain([(m, widths[0], widths[1]),
+                                (m, widths[1], widths[2])], acts)
+    shardeds = [program.shard_program(p, mesh, axis="m") for p in progs]
+    sfseg = program.fuse_sharded_segment(shardeds)
+    assert sfseg is not None and sfseg.n_arrays == n_arrays
+    assert sfseg.out_name == progs[-1].out_name
+    x, ws = _chain_tensors(m, widths, seed=9)
+    ref = _oracle(x, ws, acts)
+    t = {"I": x, **{f"W{i}": w for i, w in enumerate(ws)}}
+    be = backends.get_backend("pallas", CFG)
+    before = be.n_launches
+    out = np.asarray(be.run_segment(sfseg, t)[sfseg.out_name])
+    assert be.n_launches - before == n_arrays   # one fused launch/array
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-3)
+    bi = backends.get_backend("interpreter", CFG)
+    out_i = np.asarray(bi.run_segment(sfseg, t)[sfseg.out_name])
+    np.testing.assert_allclose(out_i, ref, rtol=2e-4, atol=2e-3)
+    # the mesh still forbids fusing ACROSS arrays: a K-sharded step
+    # breaks per-array row ownership, so the run is not fusable
+    mixed = [program.shard_program(progs[0], mesh, axis="m"),
+             program.shard_program(progs[1], mesh, axis="k")]
+    assert program.fuse_sharded_segment(mixed) is None
+
+
+def test_batch_plan_splits_fused_segments_at_adapt():
+    """Batched decode cannot flatten across an adapt boundary (it would
+    mix requests' rows): the plan re-splits the block-fused segments
+    into batchable sub-runs and stays fully batched (no perreq)."""
+    ex = ModelExecutable.for_cell("gemma-7b", "decode_tiny", CFG,
+                                  cache=ProgramCache())
+    assert any(seg.fused is not None and any(seg.fused.adapts)
+               for seg in ex.segments)
+    plan = ex.batch_plan(4)
+    covered = [i for bseg in plan.segments for i in bseg.indices]
+    assert covered == list(range(len(ex.steps)))   # exact re-partition
+    assert plan.launches_per_tick is not None      # nothing fell back
+    for bseg in plan.segments:
+        steps = [ex.steps[i] for i in bseg.indices]
+        # no interior adapt, no dynamic/static mix inside one sub-run
+        assert all(s.input_mode != "adapt" for s in steps[1:])
+        assert len({s.op.dynamic for s in steps}) == 1
+        if bseg.kind == "static" and len(bseg.programs) > 1:
+            assert bseg.fused is not None
