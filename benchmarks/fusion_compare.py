@@ -220,6 +220,19 @@ def bench_decode_serving(quick: bool = False,
     rep_layer = serve(False)
     rep_fused = serve(True)
     fusion = decode.fusion_stats()
+    # traced re-run (untimed): checksum-gated span breakdown of where a
+    # decode tick goes -- kernel launches vs host scheduling
+    from repro.obs import export as obs_export
+    from repro.obs.trace import trace
+    trace.clear().enable()
+    try:
+        rep_traced = serve(True)
+    finally:
+        trace.disable()
+    assert ([r.state_checksum for r in rep_traced.requests]
+            == [r.state_checksum for r in rep_fused.requests]), \
+        "tracing perturbed serving state"
+    breakdown = obs_export.span_breakdown("decode_tick", {"launch"})
     return {
         "arch": arch,
         "tok_s_per_layer": rep_layer.tokens_per_sec,
@@ -230,6 +243,8 @@ def bench_decode_serving(quick: bool = False,
         "segments": rep_fused.decode_segments,
         "fused_steps": fusion["n_fused_steps"],
         "decode_hbm_elided_bytes": rep_fused.decode_hbm_elided_bytes,
+        "decode_tick_kernel_frac": breakdown["child_frac"],
+        "decode_tick_host_frac": breakdown["host_frac"],
         "state_checksums_equal": (
             [r.state_checksum for r in rep_layer.requests]
             == [r.state_checksum for r in rep_fused.requests]),
@@ -277,7 +292,9 @@ def flat_metrics(result: dict) -> dict:
                          "max_layer_working_set_bytes"),
         "decode_serving": ("tok_s_per_layer", "tok_s_fused",
                            "decode_speedup", "fused_segments",
-                           "decode_hbm_elided_bytes"),
+                           "decode_hbm_elided_bytes",
+                           "decode_tick_kernel_frac",
+                           "decode_tick_host_frac"),
     }
     return {f"{section}.{key}": result[section][key]
             for section, keys in keep.items() for key in keys}

@@ -28,6 +28,15 @@ batched path regresses below the per-request fused path.  ``--merge``
 folds ``decode_serving`` into an existing ``BENCH_results.json`` (the CI
 serving perf-smoke step); ``benchmarks/run.py`` also embeds the per-mode
 summaries directly.
+
+After the timed modes, the batched mode re-runs once under the ``obs``
+tracer (untimed): its per-request ``state_checksum``s are asserted
+bit-equal to the untraced run -- tracing must never perturb serving
+numerics -- and the span buffer yields ``decode_tick_kernel_frac`` (the
+measured fraction of a decode tick spent inside kernel launches vs host
+scheduling) for the BENCH entry.  ``--trace PATH`` writes the
+Chrome/Perfetto ``trace.json`` (per-request swimlanes) and
+``--metrics PATH`` the Prometheus-style snapshot from that traced run.
 """
 
 from __future__ import annotations
@@ -107,6 +116,26 @@ def run(quick: bool = False, arch: str = "gemma-7b",
         assert sums == ref, (
             f"state_checksum divergence: {mode} vs interpreter")
 
+    # Traced re-run of the batched mode (untimed): the tracing-on
+    # checksums must equal the tracing-off ones, and the span buffer
+    # yields the decode-tick kernel/host breakdown for the BENCH entry.
+    from repro.obs import export as obs_export
+    from repro.obs import metrics as obs_metrics
+    from repro.obs.trace import trace
+    obs_metrics.reset()
+    trace.clear().enable()
+    try:
+        traced = _serve(prefill, decode, n_requests=n_requests,
+                        decode_steps=decode_steps,
+                        max_concurrent=max_concurrent, **dict(MODES[2][1]))
+    finally:
+        trace.disable()
+    traced_sums = {r.rid: r.state_checksum for r in traced.requests}
+    assert traced_sums == ref, (
+        "tracing perturbed serving state: traced pallas checksums "
+        "diverged from the untraced run")
+    breakdown = obs_export.span_breakdown("decode_tick", {"launch"})
+
     per, bat = out["pallas_per_request"], out["pallas"]
     speedup = (bat["decode_tokens_per_sec"]
                / max(per["decode_tokens_per_sec"], 1e-9))
@@ -130,11 +159,19 @@ def run(quick: bool = False, arch: str = "gemma-7b",
         "latency_p99_s": bat["latency_p99_s"],
         "kv_high_water_pages": bat["kv"].get("high_water_pages", 0),
         "checksums_match": True,
+        "traced_checksums_match": True,
+        "decode_tick_kernel_frac": breakdown["child_frac"],
+        "decode_tick_host_frac": breakdown["host_frac"],
+        "decode_ticks_traced": breakdown["n_parents"],
     }
     print(f"batched decode speedup over per-request fused: "
           f"{speedup:.2f}x at {max_concurrent} concurrent "
           f"({bat['launches_per_decode_tick']} launches/tick vs "
           f"{per['launches_per_decode_tick']})")
+    print(f"decode tick breakdown (traced): "
+          f"{breakdown['child_frac'] * 100:.1f}% in kernel launches, "
+          f"{breakdown['host_frac'] * 100:.1f}% host scheduling "
+          f"over {breakdown['n_parents']} ticks")
     return out
 
 
@@ -152,12 +189,24 @@ def main() -> None:
     ap.add_argument("--gate", action="store_true",
                     help="exit non-zero if batched decode tok/s falls "
                          "below the per-request fused path")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="write the traced run's Chrome/Perfetto "
+                         "trace.json (open in ui.perfetto.dev)")
+    ap.add_argument("--metrics", default="", metavar="PATH",
+                    help="write the traced run's Prometheus-style "
+                         "metrics snapshot")
     args = ap.parse_args()
     result = run(quick=args.quick, arch=args.arch,
                  n_requests=args.requests,
                  decode_steps=args.decode_steps,
                  max_concurrent=args.concurrent)
     serving = result["decode_serving"]
+    if args.trace:
+        from repro.obs.export import write_chrome_trace
+        print(f"wrote {write_chrome_trace(args.trace)}")
+    if args.metrics:
+        from repro.obs.export import write_metrics_snapshot
+        print(f"wrote {write_metrics_snapshot(args.metrics)}")
     if args.json:
         payload = {}
         if args.merge and os.path.exists(args.json):

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.backends.base import Backend
 from repro.core.machine import FeatherMachine
+from repro.obs.trace import trace
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.configs.feather import FeatherConfig
@@ -46,9 +47,10 @@ class InterpreterBackend(Backend):
                   ) -> dict[str, np.ndarray]:
         """Drive the machine over a flat TraceOp stream."""
         m = self.machine
-        for op in ops:
-            m.step(op, tensors)
-        m.flush()
+        with trace.span("interpret.trace"):
+            for op in ops:
+                m.step(op, tensors)
+            m.flush()
         self.outputs = m.outputs
         return m.outputs
 

@@ -62,6 +62,14 @@ from repro.core import isa
 from repro.core import program as programlib
 from repro.kernels import nest_gemm as nglib
 from repro.kernels import ops as kernel_ops
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import trace
+
+#: every pallas_call site increments this (labelled by kernel), so the
+#: scheduler's per-instance ``n_launches`` diffs and the process-wide
+#: scrape agree on what actually launched
+_LAUNCHES = obs_metrics.counter(
+    "backend_launches_total", "pallas_call launches by kernel")
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.configs.feather import FeatherConfig
@@ -263,7 +271,8 @@ class PallasBackend(Backend):
             comp = self.compile_cache.lookup_compiled(program,
                                                       self.max_block)
         if comp is None:
-            comp = compile_program(program, max_block=self.max_block)
+            with trace.span("backend.compile", out=program.out_name):
+                comp = compile_program(program, max_block=self.max_block)
             self.n_compiles += 1
             if self.compile_cache is not None:
                 self.compile_cache.store_compiled(program, self.max_block,
@@ -286,7 +295,9 @@ class PallasBackend(Backend):
         if self.compile_cache is not None:
             comp = self.compile_cache.lookup_fused(segment, self.max_block)
         if comp is None:
-            comp = compile_segment(segment, max_block=self.max_block)
+            with trace.span("backend.compile_fused",
+                            n_layers=len(segment.programs)):
+                comp = compile_segment(segment, max_block=self.max_block)
             self.n_compiles += 1
             if self.compile_cache is not None:
                 self.compile_cache.store_fused(segment, self.max_block,
@@ -310,18 +321,27 @@ class PallasBackend(Backend):
             return self._run_sharded_segment(segment, tensors)
         comp = self.compile_fused(segment)
         self.n_launches += 1
+        _LAUNCHES.inc(1, kernel="fused_chain")
         tensors = tensors or {}
         x = self._resolve("I", tensors, False)
         ws = [jax.numpy.asarray(
                   self._resolve(f"W{layer}", tensors, False),
                   jax.numpy.float32)
               for layer in range(comp.n_layers)]
-        out = kernel_ops.fused_chain(
-            jax.numpy.asarray(x, jax.numpy.float32), ws,
-            bm=comp.bm, bks=comp.layer_bks, acts=comp.acts,
-            adapts=comp.adapts, dims=comp.dims,
-            interpret=self.interpret, out_dtype=jax.numpy.float32)
-        out = np.asarray(out)
+        with trace.span("launch", kernel="fused_chain",
+                        n_layers=comp.n_layers, bm=comp.bm,
+                        out=comp.out_name) as sp:
+            out = np.asarray(kernel_ops.fused_chain(
+                jax.numpy.asarray(x, jax.numpy.float32), ws,
+                bm=comp.bm, bks=comp.layer_bks, acts=comp.acts,
+                adapts=comp.adapts, dims=comp.dims,
+                interpret=self.interpret,
+                out_dtype=jax.numpy.float32))
+            if sp:          # np.asarray already forced device sync
+                sp.set(n_launches=self.n_launches,
+                       vmem_highwater_bytes=getattr(
+                           segment, "vmem_highwater_bytes",
+                           lambda: None)())
         self.outputs[comp.out_name] = out
         return self.outputs
 
@@ -332,11 +352,17 @@ class PallasBackend(Backend):
         per-request launches with one."""
         import jax.numpy as jnp
         self.n_launches += 1
+        _LAUNCHES.inc(1, kernel="flash_decode")
         k = jnp.asarray(kT, jnp.float32).transpose(0, 2, 1)
-        out = kernel_ops.flash_decode(
-            jnp.asarray(q, jnp.float32), k, jnp.asarray(v, jnp.float32),
-            lengths, interpret=self.interpret)
-        return np.asarray(out)
+        with trace.span("launch", kernel="flash_decode",
+                        batch=int(q.shape[0])) as sp:
+            out = np.asarray(kernel_ops.flash_decode(
+                jnp.asarray(q, jnp.float32), k,
+                jnp.asarray(v, jnp.float32),
+                lengths, interpret=self.interpret))
+            if sp:
+                sp.set(n_launches=self.n_launches)
+        return out
 
     def run_batched_attention_proj(self, programs, q, kT, v, wo, *,
                                    m_out, k_out, lengths=None):
@@ -346,12 +372,18 @@ class PallasBackend(Backend):
         the attention launch plus B per-request Wo launches."""
         import jax.numpy as jnp
         self.n_launches += 1
+        _LAUNCHES.inc(1, kernel="flash_decode_proj")
         k = jnp.asarray(kT, jnp.float32).transpose(0, 2, 1)
-        out = kernel_ops.flash_decode_proj(
-            jnp.asarray(q, jnp.float32), k, jnp.asarray(v, jnp.float32),
-            jnp.asarray(wo, jnp.float32), lengths, m_out=m_out,
-            k_out=k_out, interpret=self.interpret)
-        return np.asarray(out)
+        with trace.span("launch", kernel="flash_decode_proj",
+                        batch=int(q.shape[0])) as sp:
+            out = np.asarray(kernel_ops.flash_decode_proj(
+                jnp.asarray(q, jnp.float32), k,
+                jnp.asarray(v, jnp.float32),
+                jnp.asarray(wo, jnp.float32), lengths, m_out=m_out,
+                k_out=k_out, interpret=self.interpret))
+            if sp:
+                sp.set(n_launches=self.n_launches)
+        return out
 
     def _resolve(self, name: str | None, tensors, elided: bool):
         if name is None:
@@ -432,9 +464,14 @@ class PallasBackend(Backend):
 
         # check_rep=False: jax has no replication rule for pallas_call
         self.n_launches += 1
-        out = shard_map(body, mesh=jmesh, in_specs=in_specs,
-                        out_specs=out_spec, check_rep=False)(x, w)
-        out = np.ascontiguousarray(np.asarray(out)[:g.m, :g.n])
+        _LAUNCHES.inc(1, kernel="nest_gemm_shard_map")
+        with trace.span("launch", kernel="nest_gemm_shard_map",
+                        n_arrays=n, axis=axis, out=sharded.out_name) as sp:
+            out = shard_map(body, mesh=jmesh, in_specs=in_specs,
+                            out_specs=out_spec, check_rep=False)(x, w)
+            out = np.ascontiguousarray(np.asarray(out)[:g.m, :g.n])
+            if sp:
+                sp.set(n_launches=self.n_launches)
         if comp.host_act is not None:
             # per-shard Programs only keep shard-local activations (see
             # shard_program), so host application on the assembled output
@@ -452,15 +489,19 @@ class PallasBackend(Backend):
             return self.run_sharded(program, tensors)
         comp = self.compile(program)
         self.n_launches += 1
+        _LAUNCHES.inc(1, kernel="nest_gemm")
         x = self._resolve(comp.input_name, tensors, program.input_elided)
         w = self._resolve(comp.weight_name, tensors, False)
-        out = kernel_ops.nest_gemm(
-            jax.numpy.asarray(x, jax.numpy.float32),
-            jax.numpy.asarray(w, jax.numpy.float32),
-            bm=comp.bm, bn=comp.bn, bk=comp.bk,
-            interpret=self.interpret, out_dtype=jax.numpy.float32,
-            out_block_t=comp.out_block_t, act=comp.fused_act)
-        out = np.asarray(out)
+        with trace.span("launch", kernel="nest_gemm", grid=comp.grid,
+                        out=comp.out_name) as sp:
+            out = np.asarray(kernel_ops.nest_gemm(
+                jax.numpy.asarray(x, jax.numpy.float32),
+                jax.numpy.asarray(w, jax.numpy.float32),
+                bm=comp.bm, bn=comp.bn, bk=comp.bk,
+                interpret=self.interpret, out_dtype=jax.numpy.float32,
+                out_block_t=comp.out_block_t, act=comp.fused_act))
+            if sp:
+                sp.set(n_launches=self.n_launches)
         if comp.out_block_t:
             # the kernel stored the IO-S (search-oriented) accumulator; the
             # final Write's host-facing view is its transpose

@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+from repro.obs.trace import trace
+
 
 @dataclasses.dataclass(frozen=True)
 class TileCost:
@@ -54,6 +56,26 @@ class PerfResult:
         out["total"] = self.cycles
         out["ifetch_stall"] = self.stall_ifetch_frac * self.cycles
         return out
+
+    def publish_metrics(self, registry=None, **labels) -> None:
+        """Publish the modelled cycle/stall figures into a metrics
+        registry (default: the shared ``obs.metrics`` one) -- the
+        paper's Tab. I fetch-stall fraction becomes the
+        ``perf_stall_ifetch_frac`` gauge, labelled by the caller (e.g.
+        ``control="minisa"``)."""
+        from repro.obs import metrics as obs_metrics
+        reg = registry if registry is not None else obs_metrics.REGISTRY
+        reg.gauge("perf_cycles",
+                  "modelled makespan cycles (5-engine model)").set(
+                      self.cycles, **labels)
+        reg.gauge("perf_stall_ifetch_frac",
+                  "fraction of cycles stalled on instruction fetch "
+                  "(Tab. I)").set(self.stall_ifetch_frac, **labels)
+        reg.gauge("perf_utilization").set(self.utilization, **labels)
+        for engine, cycles in self.busy.items():
+            reg.gauge("perf_engine_busy_cycles",
+                      "per-engine busy cycles").set(
+                          cycles, engine=engine, **labels)
 
 
 def _simulate(tiles: Sequence[TileCost], instr_bw: float, in_bw: float,
@@ -102,6 +124,11 @@ def hbm_traffic(tiles: Sequence[TileCost]) -> dict[str, float]:
 
 def simulate(tiles: Sequence[TileCost], cfg) -> PerfResult:
     """cfg: FeatherConfig."""
+    with trace.span("perf.simulate", n_tiles=len(tiles)):
+        return _simulate_result(tiles, cfg)
+
+
+def _simulate_result(tiles: Sequence[TileCost], cfg) -> PerfResult:
     total, busy = _simulate(tiles, cfg.instr_bw, cfg.in_bw, cfg.out_bw)
     # Counterfactual run with free instruction delivery isolates the
     # fetch-stall share (the paper's "explicit stall of fetching

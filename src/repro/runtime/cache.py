@@ -45,6 +45,8 @@ from typing import TYPE_CHECKING, Any, Callable
 
 from repro.core import mapper as mapperlib
 from repro.core import program as programlib
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import trace
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.backends.pallas_backend import CompiledProgram
@@ -214,7 +216,8 @@ class ProgramCache:
             self._plans[key] = self._plans.pop(key)
             return hit
         self.stats.plan_misses += 1
-        plan = mapperlib.search(gemm, cfg, **search_kwargs)
+        with trace.span("cache.search", m=gemm.m, k=gemm.k, n=gemm.n):
+            plan = mapperlib.search(gemm, cfg, **search_kwargs)
         self._evict_over(self._plans, self.max_plans)
         self._plans[key] = plan
         return plan
@@ -237,11 +240,14 @@ class ProgramCache:
             self._lowered[key] = self._lowered.pop(key)   # LRU touch
             return hit
         self.stats.lowered_misses += 1
-        prog = programlib.lower(gemm, choice, cfg, activation=activation,
-                                act_name=act_name, out_name=out_name,
-                                commit_to=commit_to,
-                                commit_layout=commit_layout,
-                                elide_input=elide_input)
+        with trace.span("cache.lower", m=gemm.m, k=gemm.k, n=gemm.n,
+                        out=out_name):
+            prog = programlib.lower(gemm, choice, cfg,
+                                    activation=activation,
+                                    act_name=act_name, out_name=out_name,
+                                    commit_to=commit_to,
+                                    commit_layout=commit_layout,
+                                    elide_input=elide_input)
         self._evict_over(self._lowered, self.max_lowered)
         self._lowered[key] = prog
         return prog
@@ -264,8 +270,9 @@ class ProgramCache:
             self._sharded[key] = self._sharded.pop(key)   # LRU touch
             return hit
         self.stats.sharded_misses += 1
-        sharded = programlib.shard_program(program, mesh, axis=axis,
-                                           lower_fn=self.lower)
+        with trace.span("cache.shard", mesh=mesh.shape, axis=axis):
+            sharded = programlib.shard_program(program, mesh, axis=axis,
+                                               lower_fn=self.lower)
         self._evict_over(self._sharded, self.max_sharded)
         self._sharded[key] = sharded
         return sharded
@@ -317,6 +324,41 @@ class ProgramCache:
             except Exception:  # pragma: no cover - unpicklable plan
                 total += int(plan.program.minisa_bytes())
         return total
+
+    def publish_metrics(self, registry=None) -> None:
+        """Sync the per-tier hit/miss/eviction stats and the disk-tier
+        figures (``disk_bytes``, ``disk_evictions``) into the metrics
+        registry (default: the shared ``obs.metrics`` one) as labelled
+        gauges -- the unified scrape surface over every ad-hoc stats
+        dict."""
+        reg = registry if registry is not None else obs_metrics.REGISTRY
+        s = self.stats
+        tiers = {"plan": (s.plan_hits, s.plan_misses, self._plans),
+                 "lowered": (s.lowered_hits, s.lowered_misses,
+                             self._lowered),
+                 "compile": (s.compile_hits, s.compile_misses,
+                             self._compiled),
+                 "sharded": (s.sharded_hits, s.sharded_misses,
+                             self._sharded),
+                 "fused": (s.fused_hits, s.fused_misses, self._fused)}
+        for tier, (hits, misses, table) in tiers.items():
+            reg.gauge("cache_hits",
+                      "ProgramCache hits per tier").set(hits, tier=tier)
+            reg.gauge("cache_misses",
+                      "ProgramCache misses (real pipeline work) per "
+                      "tier").set(misses, tier=tier)
+            reg.gauge("cache_entries",
+                      "live ProgramCache entries per tier").set(
+                          len(table), tier=tier)
+        reg.gauge("cache_hit_rate").set(s.hit_rate)
+        reg.gauge("cache_evictions").set(s.evictions)
+        reg.gauge("cache_disk_evictions",
+                  "plans trimmed from the persisted tier").set(
+                      s.disk_evictions)
+        reg.gauge("cache_disk_bytes",
+                  "size of the persisted plan file, last save").set(
+                      s.disk_bytes)
+        reg.gauge("cache_loaded_from_disk").set(s.loaded_from_disk)
 
     def summary(self) -> dict:
         return {

@@ -67,6 +67,7 @@ from repro.configs.base import SHAPES, ShapeConfig
 from repro.core import isa, perf
 from repro.core import program as programlib
 from repro.core.planner import GemmOp, as_gemm
+from repro.obs.trace import trace
 from repro.runtime.cache import ProgramCache, default_cache
 
 
@@ -262,7 +263,9 @@ class ModelExecutable:
         # the arrays (None / 1 array == the single-array pipeline)
         self.mesh = mesh if mesh is not None and mesh.n_arrays > 1 else None
         self.segments: list[Segment] = []
-        self.steps = self._build()
+        with trace.span("executable.build", model=name,
+                        n_ops=len(self.ops)):
+            self.steps = self._build()
         self._perf_cache: dict[int, tuple] = {}
         self._fusion_stats: dict | None = None
         self._batch_plans: dict[int, BatchPlan] = {}
@@ -487,8 +490,11 @@ class ModelExecutable:
                                      np.float32)}
                 for j, s in enumerate(steps):
                     t[f"W{j}"] = env[s.weight_name]
-                out = np.asarray(
-                    be.run_segment(seg.fused, t)[seg.fused.out_name])
+                with trace.span("segment", kind="fused",
+                                n_steps=len(steps),
+                                first=steps[0].index):
+                    out = np.asarray(
+                        be.run_segment(seg.fused, t)[seg.fused.out_name])
                 if last.host_act is not None:
                     out = np.asarray(last.host_act(out))
                 if check:
@@ -524,9 +530,11 @@ class ModelExecutable:
                     # sharded streams do not chain on-chip: the producer's
                     # output crosses the host boundary explicitly
                     t["I"] = prev
-                out = np.asarray(
-                    be.run_program(s.sharded if s.sharded is not None
-                                   else s.program, t)[s.program.out_name])
+                with trace.span("segment", kind="per_step", step=s.index):
+                    out = np.asarray(
+                        be.run_program(s.sharded if s.sharded is not None
+                                       else s.program, t)
+                        [s.program.out_name])
                 if s.host_act is not None:
                     out = np.asarray(s.host_act(out))
                 if check:
@@ -566,7 +574,9 @@ class ModelExecutable:
         bucket = programlib.m_bucket(n_requests)
         plan = self._batch_plans.get(bucket)
         if plan is None:
-            plan = self._build_batch_plan(bucket)
+            with trace.span("executable.batch_plan", bucket=bucket,
+                            n_requests=n_requests):
+                plan = self._build_batch_plan(bucket)
             self._batch_plans[bucket] = plan
         return plan
 
@@ -660,9 +670,11 @@ class ModelExecutable:
             first = steps[0]
             g = first.op.gemm
             if bseg.kind == "perreq":
-                for r in range(n):
-                    prevs[r] = self._run_steps_perreq(be, steps, envs[r],
-                                                      prevs[r])
+                with trace.span("batch_segment", kind="perreq",
+                                n_steps=len(steps), batch=n):
+                    for r in range(n):
+                        prevs[r] = self._run_steps_perreq(
+                            be, steps, envs[r], prevs[r])
                 continue
             xs = []
             for r in range(n):
@@ -678,8 +690,10 @@ class ModelExecutable:
                                           np.float32) for r in range(n)])
                 v = np.stack([np.asarray(envs[r][steps[1].weight_name],
                                          np.float32) for r in range(n)])
-                out = be.run_batched_attention(
-                    tuple(bseg.programs), np.stack(xs), kT, v, lengths)
+                with trace.span("batch_segment", kind="attention",
+                                batch=n):
+                    out = be.run_batched_attention(
+                        tuple(bseg.programs), np.stack(xs), kT, v, lengths)
                 outs = [np.asarray(out[r]) for r in range(n)]
                 if bseg.host_act is not None:
                     outs = [np.asarray(bseg.host_act(o)) for o in outs]
@@ -696,16 +710,23 @@ class ModelExecutable:
                 t = {"I": X}
                 for j, s in enumerate(steps):
                     t[f"W{j}"] = envs[0][s.weight_name]
-                out = np.asarray(
-                    be.run_segment(bseg.fused, t)[bseg.fused.out_name])
+                with trace.span("batch_segment", kind="static_fused",
+                                n_steps=len(steps), batch=n,
+                                bucket=plan.bucket):
+                    out = np.asarray(
+                        be.run_segment(bseg.fused, t)[bseg.fused.out_name])
             else:
-                out = X
-                for j, (s, prog) in enumerate(zip(steps, bseg.programs)):
-                    t = {"W": envs[0][s.weight_name]}
-                    if j == 0:
-                        t["I"] = X
-                    out = np.asarray(be.run_program(prog, t)
-                                     [prog.out_name])
+                with trace.span("batch_segment", kind="static",
+                                n_steps=len(steps), batch=n,
+                                bucket=plan.bucket):
+                    out = X
+                    for j, (s, prog) in enumerate(zip(steps,
+                                                      bseg.programs)):
+                        t = {"W": envs[0][s.weight_name]}
+                        if j == 0:
+                            t["I"] = X
+                        out = np.asarray(be.run_program(prog, t)
+                                         [prog.out_name])
             out = out[:n * m_rows]
             if bseg.host_act is not None:
                 out = np.asarray(bseg.host_act(out))

@@ -53,6 +53,8 @@ import time
 import numpy as np
 
 from repro.core import perf
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import trace
 from repro.runtime.executable import ModelExecutable
 
 #: The serving recurrence feeds backend outputs back into request state
@@ -226,6 +228,69 @@ class SchedulerReport:
                 [r.stall_micro for r in self.requests])) if self.requests
             else 0.0,
         }
+
+    def to_dict(self) -> dict:
+        """The full serialisable report: the summary, every per-request
+        report, the complete cache stats (disk tier included) and the
+        KVPool stats -- the shape the benchmark JSON and the CI
+        artifacts carry."""
+        return {
+            **self.summary(),
+            "requests": [r.summary() for r in self.requests],
+            "cache": dict(self.cache),
+            "kv": dict(self.kv),
+        }
+
+    def timeline(self, events=None) -> list[dict]:
+        """Join tracer span events to requests: one entry per request,
+        carrying its ``("request", rid)`` swimlane (submit instant,
+        prefill chunks, per-tick decode spans, first-token / retire
+        markers) in time order.  ``events`` defaults to the shared
+        tracer's buffer; empty swimlanes (tracing off) yield empty
+        span lists."""
+        if events is None:
+            events = trace.events()
+        by_rid: dict[int, list] = {r.rid: [] for r in self.requests}
+        for ev in events:
+            if ev.track[0] == "request" and ev.track[1] in by_rid:
+                by_rid[ev.track[1]].append(ev)
+        out = []
+        for r in self.requests:
+            evs = sorted(by_rid[r.rid], key=lambda e: (e.t0_s, e.seq))
+            out.append({
+                "rid": r.rid,
+                "ttft_s": r.ttft_s,
+                "wall_s": r.wall_s,
+                "state_checksum": r.state_checksum,
+                "spans": [{
+                    "name": ev.name, "t0_s": ev.t0_s, "dur_s": ev.dur_s,
+                    "instant": ev.instant, **ev.attrs} for ev in evs],
+            })
+        return out
+
+    def publish_metrics(self, registry=None) -> None:
+        """Push the serving totals into the metrics registry (default:
+        the shared ``obs.metrics`` one): MINISA vs micro instruction
+        bytes and token counters, the scalar summary as gauges, and the
+        KVPool + cache stats -- one scrape surface over every ad-hoc
+        stats dict."""
+        reg = registry if registry is not None else obs_metrics.REGISTRY
+        reg.counter("minisa_bytes_total",
+                    "MINISA instruction bytes served").inc(
+                        sum(r.minisa_bytes for r in self.requests),
+                        backend=self.backend)
+        reg.counter("micro_bytes_total",
+                    "micro-instruction control bytes (baseline)").inc(
+                        sum(r.micro_bytes for r in self.requests),
+                        backend=self.backend)
+        reg.counter("tokens_total", "tokens served").inc(
+            self.total_tokens, backend=self.backend)
+        reg.counter("requests_total", "requests retired").inc(
+            len(self.requests), backend=self.backend)
+        summary = self.summary()
+        reg.set_many({k: v for k, v in summary.items()
+                      if k not in ("kv",)}, prefix="sched_")
+        reg.set_many(self.kv, prefix="kv_")
 
 
 # ---------------------------------------------------------------------------
@@ -504,6 +569,9 @@ class Scheduler:
                       t_submit=time.perf_counter())
         self._next_rid += 1
         self._pending.append(req)
+        trace.instant("submit", ("request", req.rid),
+                      decode_steps=decode_steps,
+                      prompt_tokens=prompt_tokens)
         return req
 
     # -- one request's phases -------------------------------------------------
@@ -518,6 +586,7 @@ class Scheduler:
         pages = self.kv_pool.allocate()
         if pages is None:
             return None
+        trace.instant("admit", ("request", req.rid), pages=len(pages))
         # request wall time runs from submission (queueing included)
         a = _Active(req=req, kv=PagedKV(self.kv_pool, pages), carry=None,
                     t_start=req.t_submit or time.perf_counter(),
@@ -540,8 +609,10 @@ class Scheduler:
             env.update(self.prefill.make_tensors(
                 a.req.seed + 7_919 * c, kinds=("dynamic",)))
             env.update(self.prefill.inputs_from(_stabilize(a.carry)))
-        res = self.prefill.run(self.backend, tensors=env,
-                               fused=self.use_fused)
+        with trace.span("prefill_chunk", ("request", a.req.rid),
+                        chunk=c, of=a.prefill_chunks):
+            res = self.prefill.run(self.backend, tensors=env,
+                                   fused=self.use_fused)
         if c == 0:
             a.kv.seed(self.decode.make_tensors(a.req.seed,
                                                kinds=("dynamic",)))
@@ -561,21 +632,36 @@ class Scheduler:
         a.carry = final
         if a.t_first == 0.0:
             a.t_first = time.perf_counter()
+            trace.instant("first_token", ("request", a.req.rid),
+                          ttft_s=a.t_first - (a.req.t_submit
+                                              or a.t_start))
         # decode commits continue the prompt chunks' positions
         a.kv.commit(final, a.prefill_chunks - 1 + a.decoded)
 
     def _decode_step(self, a: _Active) -> None:
-        res = self.decode.run(self.backend, tensors=self._decode_env(a),
-                              fused=self.use_fused)
+        with trace.span("decode_step", ("request", a.req.rid),
+                        step=a.decoded):
+            res = self.decode.run(self.backend,
+                                  tensors=self._decode_env(a),
+                                  fused=self.use_fused)
         self._after_decode(a, res.final)
 
     def _decode_batch(self, batch: list[_Active]) -> None:
         """One tick of the whole decode batch: every request's row
         stacked along M, one backend launch per M-polymorphic segment
-        (``ModelExecutable.run_batch``)."""
+        (``ModelExecutable.run_batch``).  Under tracing, the collective
+        launch window is recorded onto every participating request's
+        swimlane (one measurement, several lanes)."""
+        t0 = time.perf_counter() if trace.enabled else 0.0
         finals = self.decode.run_batch(
             self.backend, [self._decode_env(a) for a in batch],
             fused=self.use_fused)
+        if trace.enabled:
+            t1 = time.perf_counter()
+            for a in batch:
+                trace.record("decode_step", ("request", a.req.rid),
+                             t0, t1, step=a.decoded, batched=True,
+                             batch=len(batch))
         for a, final in zip(batch, finals):
             self._after_decode(a, final)
 
@@ -607,6 +693,19 @@ class Scheduler:
 
     # -- the serving loop -----------------------------------------------------
     def run(self) -> SchedulerReport:
+        """Serve every submitted request to completion.  The loop runs
+        under a ``scheduler.run`` span; on return the report's totals
+        (plus the cache's per-tier stats) are published into the shared
+        metrics registry."""
+        with trace.span("scheduler.run", backend=self.backend_name,
+                        batch_decode=self.batch_decode,
+                        max_concurrent=self.max_concurrent):
+            report = self._run_loop()
+        report.publish_metrics()
+        self.prefill.cache.publish_metrics()
+        return report
+
+    def _run_loop(self) -> SchedulerReport:
         t0 = time.perf_counter()
         n_arrays = self.prefill.n_arrays
         per_bytes = [0.0] * n_arrays
@@ -625,11 +724,17 @@ class Scheduler:
             if ready:
                 td = time.perf_counter()
                 l0 = getattr(self.backend, "n_launches", 0)
-                if self.batch_decode:
-                    self._decode_batch(ready)
-                else:
-                    for a in ready:
-                        self._decode_step(a)
+                with trace.span("decode_tick", tick=ticks,
+                                n_ready=len(ready),
+                                batched=self.batch_decode) as sp:
+                    if self.batch_decode:
+                        self._decode_batch(ready)
+                    else:
+                        for a in ready:
+                            self._decode_step(a)
+                    if sp:
+                        sp.set(launches=getattr(self.backend,
+                                                "n_launches", 0) - l0)
                 decode_wall += time.perf_counter() - td
                 decode_launches += (getattr(self.backend, "n_launches", 0)
                                     - l0)
@@ -641,7 +746,17 @@ class Scheduler:
                     active.remove(a)
                     pre = self.prefill.perf_stats()
                     dec = self.decode.perf_stats()
-                    done.append(self._report(a, pre, dec))
+                    rep = self._report(a, pre, dec)
+                    done.append(rep)
+                    trace.instant("retire", ("request", a.req.rid),
+                                  decoded=a.decoded)
+                    if trace.enabled:
+                        # the request's whole lifetime as one backdrop
+                        # span on its swimlane (arrival -> retire)
+                        trace.record("request", ("request", a.req.rid),
+                                     a.t_start, time.perf_counter(),
+                                     rid=a.req.rid, decoded=a.decoded,
+                                     checksum=rep.state_checksum)
                     a.kv.release()   # checksum gathered; evict the pages
                     c, n = a.chunks_done, a.decoded
                     for i in range(n_arrays):
@@ -660,24 +775,26 @@ class Scheduler:
             budget = (self.token_budget if self.token_budget is not None
                       else float("inf"))
             progressed = False
-            for a in active:
-                while (not a.prefill_done
-                       and (budget >= chunk_tokens
-                            or (not ready and not progressed))):
-                    self._prefill_chunk(a)
+            with trace.span("prefill_phase", tick=ticks,
+                            n_pending=len(self._pending)):
+                for a in active:
+                    while (not a.prefill_done
+                           and (budget >= chunk_tokens
+                                or (not ready and not progressed))):
+                        self._prefill_chunk(a)
+                        budget -= chunk_tokens
+                        progressed = True
+                while self._pending and len(active) < self.max_concurrent:
+                    if budget < chunk_tokens and (ready or progressed):
+                        break
+                    a = self._admit(self._pending[0])
+                    if a is None:   # KV pool exhausted: wait for retires
+                        self.kv_pool.admit_stalls += 1
+                        break
+                    self._pending.popleft()
+                    active.append(a)
                     budget -= chunk_tokens
                     progressed = True
-            while self._pending and len(active) < self.max_concurrent:
-                if budget < chunk_tokens and (ready or progressed):
-                    break
-                a = self._admit(self._pending[0])
-                if a is None:       # KV pool exhausted: wait for retires
-                    self.kv_pool.admit_stalls += 1
-                    break
-                self._pending.popleft()
-                active.append(a)
-                budget -= chunk_tokens
-                progressed = True
             prefill_wall += time.perf_counter() - tp
         done.sort(key=lambda r: r.rid)
         fusion = self.decode.fusion_stats()
