@@ -192,8 +192,28 @@ def _divisors_pow2ish(n: int) -> list[int]:
     return [d for d in range(1, n + 1) if n % d == 0]
 
 
+#: Structural memo for candidate enumeration.  The candidate set depends
+#: only on the GEMM extents and the config (never on ``name``/``count``),
+#: and the batched-decode M-bucket ladder re-enumerates the same shapes
+#: once per bucket -- so equal problems share one materialised tuple.
+_ENUM_CACHE: dict[tuple, tuple[MappingChoice, ...]] = {}
+_ENUM_CACHE_MAX = 256
+
+
 def enumerate_choices(gemm: Gemm, cfg: FeatherConfig,
                       max_candidates: int = 512) -> Iterable[MappingChoice]:
+    key = (gemm.m, gemm.k, gemm.n, cfg, max_candidates)
+    hit = _ENUM_CACHE.get(key)
+    if hit is None:
+        hit = tuple(_enumerate_choices(gemm, cfg, max_candidates))
+        if len(_ENUM_CACHE) >= _ENUM_CACHE_MAX:
+            _ENUM_CACHE.pop(next(iter(_ENUM_CACHE)))
+        _ENUM_CACHE[key] = hit
+    return hit
+
+
+def _enumerate_choices(gemm: Gemm, cfg: FeatherConfig,
+                       max_candidates: int = 512) -> Iterable[MappingChoice]:
     ah, aw = cfg.ah, cfg.aw
     for df in (isa.Dataflow.WOS, isa.Dataflow.IOS):
         ms, ks, ns = ((gemm.n, gemm.k, gemm.m) if df == isa.Dataflow.IOS
@@ -546,3 +566,208 @@ def search(gemm: Gemm, cfg: FeatherConfig, top_k: int = 8,
     return Plan(gemm=gemm, cfg=cfg, choice=choice, program=prog,
                 layouts=layouts, perf_minisa=res_minisa,
                 perf_micro=res_micro)
+
+
+# ---------------------------------------------------------------------------
+# Joint segment search: Pareto frontier over the fused-launch geometry
+# ---------------------------------------------------------------------------
+
+# Fixed cost per streamed weight window: the DMA descriptor issue plus
+# the double-buffer swap at every K-step boundary.  Transfer *bytes* are
+# K-tile-invariant (each weight byte streams once per M pass), so
+# without this term the cycle model could not see that 220 one-column
+# windows cost more than 2 full-K windows and the frontier would
+# collapse onto minimum-VMEM unit tiles.
+STREAM_SETUP_CYCLES = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentChoice:
+    """One joint fused-launch geometry for a chained segment: the shared
+    host-M tile (resident activation rows) plus every layer's host-K
+    weight-streaming tile -- exactly the PR 7 streamed search space that
+    per-GEMM search + post-hoc snapping explored only one point of."""
+    bm: int
+    layer_bks: tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentPoint:
+    """A Pareto point of the joint search, priced on three axes: the
+    MINISA HBM traffic the ONE fused launch ships, the analytic
+    discrete-event cycles of the fused tile stream, and the streamed
+    VMEM high-water (``program._streamed_footprint_bytes``)."""
+    choice: SegmentChoice
+    traffic_bytes: float
+    cycles: float
+    vmem_bytes: int
+
+    @property
+    def metrics(self) -> tuple[float, float, int]:
+        return (self.traffic_bytes, self.cycles, self.vmem_bytes)
+
+
+def _dominates(a: tuple, b: tuple) -> bool:
+    """a Pareto-dominates b: no worse on every axis, better on one."""
+    return (all(x <= y for x, y in zip(a, b))
+            and any(x < y for x, y in zip(a, b)))
+
+
+def pareto_frontier(points: list[SegmentPoint]) -> list[SegmentPoint]:
+    """Non-dominated subset (first-seen wins among metric ties),
+    cycles-ascending so ``points[:k]`` is the analytic top-k."""
+    front: list[SegmentPoint] = []
+    seen_metrics: set[tuple] = set()
+    for p in points:
+        if p.metrics in seen_metrics:
+            continue
+        if any(_dominates(q.metrics, p.metrics) for q in points):
+            continue
+        seen_metrics.add(p.metrics)
+        front.append(p)
+    return sorted(front, key=lambda p: (p.cycles, p.traffic_bytes,
+                                        p.vmem_bytes))
+
+
+@dataclasses.dataclass
+class SegmentFrontier:
+    """The joint search result: every surviving geometry, not a single
+    winner -- the measured autotune pass (``runtime.autotune``) picks
+    among these against real launch wall clock."""
+    points: list[SegmentPoint]           # non-dominated, cycles-ascending
+    n_enumerated: int                    # joint candidates generated
+    n_feasible: int                      # ... that fit the VMEM budget
+    vmem_budget: int
+    operand_dtype: str
+
+    def top(self, k: int) -> list[SegmentPoint]:
+        return self.points[:max(1, k)]
+
+    def summary(self) -> dict:
+        return {"n_points": len(self.points),
+                "n_enumerated": self.n_enumerated,
+                "n_feasible": self.n_feasible,
+                "vmem_budget": self.vmem_budget,
+                "operand_dtype": self.operand_dtype,
+                "best_cycles": self.points[0].cycles
+                if self.points else None}
+
+
+def _restated_tiles(segment, base_costs) -> list:
+    """The fused tile stream for one candidate geometry: the
+    geometry-independent per-layer costs (interior loads/stores elided)
+    plus each layer's weight bytes restated to the candidate's streamed
+    K-tile schedule -- ``FusedSegment.layer_tile_costs`` factored so the
+    expensive Program walk happens once per segment, not per point."""
+    cfg = segment.cfg
+    tiles = []
+    for layer, costs in enumerate(base_costs):
+        kp = segment.padded_ks[layer]
+        g = segment.programs[layer].gemm
+        shipped = float(cfg.elem_bytes * segment.m_steps * kp * g.n)
+        per_tile = shipped / max(len(costs), 1)
+        tiles.extend(dataclasses.replace(t, load_bytes=t.load_bytes
+                                         + per_tile)
+                     for t in costs)
+    return tiles
+
+
+def _bk_vectors(programs, adapts, vmem_budget, operand_dtype) -> list:
+    """Candidate per-layer K-tile vectors: halving pressure levels from
+    full-K streaming down to unit tiles, plus each layer's own snapped
+    ``k_t`` and the greedy capped vector (so the post-hoc-snap geometry
+    is always IN the joint space and can never be lost to it)."""
+    ks = [p.gemm.k for p in programs]
+    vecs: list[tuple[int, ...]] = []
+    for j in range(0, 9):
+        vec = tuple(max(1, -(-k // (1 << j))) for k in ks)
+        if vec not in vecs:
+            vecs.append(vec)
+        if all(v == 1 for v in vec):
+            break
+    snapped = []
+    for p in programs:
+        st = programlib.snap_tiling(p.gemm, p.choice, p.cfg)
+        snapped.append(max(1, min(st[1], p.gemm.k)) if st else 1)
+    if tuple(snapped) not in vecs:
+        vecs.append(tuple(snapped))
+    greedy = programlib.fuse_segment(
+        list(programs), vmem_budget=vmem_budget, adapts=adapts,
+        operand_dtype=operand_dtype)
+    if greedy is not None and greedy.layer_bks not in vecs:
+        vecs.append(greedy.layer_bks)
+    return vecs
+
+
+def search_segment(programs, *,
+                   vmem_budget: int = programlib.FUSED_VMEM_BUDGET,
+                   adapts: tuple[bool, ...] | None = None,
+                   operand_dtype: str = "float32",
+                   max_tiles: int = 4096) -> SegmentFrontier | None:
+    """Map a whole chained segment at once (ROADMAP item 3).
+
+    Enumerates joint candidates over (shared ``bm``) x (per-layer
+    ``bk_l``) priced by ``program._streamed_footprint_bytes`` -- the
+    dtype-aware streamed VMEM budget -- and keeps the Pareto frontier
+    over {MINISA traffic bytes, analytic cycles, VMEM high-water}
+    instead of a single winner.  Returns None when the segment is not
+    fusion-legal (the per-layer fallback path applies).
+
+    The per-layer Programs stay the lowering source of truth: a
+    ``SegmentChoice`` only re-geometries the fused launch, so every
+    frontier point shares the Programs' instruction accounting and
+    numerics (same accumulation shapes, different K-tile walk).
+    """
+    programs = list(programs)
+    if adapts is None:
+        adapts = (False,) * len(programs)
+    template = programlib.fuse_segment(
+        programs, vmem_budget=vmem_budget, adapts=adapts,
+        operand_dtype=operand_dtype)
+    if template is None:
+        return None
+    cfg = template.cfg
+    n_layers = template.n_layers
+    base_costs = [
+        programs[layer].tile_costs(
+            "minisa", max_tiles,
+            elide_input_loads=layer > 0,
+            elide_weight_loads=True,
+            on_chip_store=layer < n_layers - 1)
+        for layer in range(n_layers)]
+
+    m = programs[0].gemm.m
+    if any(adapts):
+        # the in-kernel slab permutation needs every row resident
+        bm_opts = [max(p.gemm.m for p in programs)]
+    else:
+        bm_opts = sorted({m, template.bm,
+                          *_pow2_tiles(1, m)}, reverse=True)[:8]
+    bk_vecs = _bk_vectors(programs, adapts, vmem_budget, operand_dtype)
+
+    points: list[SegmentPoint] = []
+    n_enumerated = 0
+    for bm in bm_opts:
+        for bks in bk_vecs:
+            n_enumerated += 1
+            seg = dataclasses.replace(template, bm=bm, layer_bks=bks)
+            vmem = seg.vmem_highwater_bytes()
+            if vmem > vmem_budget:
+                continue
+            k_steps = seg.m_steps * sum(
+                -(-p.gemm.k // max(1, bk))
+                for p, bk in zip(programs, bks))
+            cycles = (perf.simulate(_restated_tiles(seg, base_costs),
+                                    cfg).cycles
+                      + STREAM_SETUP_CYCLES * k_steps)
+            points.append(SegmentPoint(
+                choice=SegmentChoice(bm=bm, layer_bks=bks),
+                traffic_bytes=seg.kernel_hbm_bytes(),
+                cycles=cycles, vmem_bytes=vmem))
+    if not points:
+        return None
+    return SegmentFrontier(points=pareto_frontier(points),
+                           n_enumerated=n_enumerated,
+                           n_feasible=len(points),
+                           vmem_budget=vmem_budget,
+                           operand_dtype=operand_dtype)

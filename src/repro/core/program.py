@@ -1151,20 +1151,31 @@ class FusedSegment:
 def fuse_segment(programs: list["Program"], *,
                  vmem_budget: int = FUSED_VMEM_BUDGET,
                  adapts: tuple[bool, ...] | None = None,
-                 operand_dtype: str = "float32") -> FusedSegment | None:
+                 operand_dtype: str = "float32",
+                 bm: int | None = None,
+                 layer_bks: tuple[int, ...] | None = None
+                 ) -> FusedSegment | None:
     """Build the streamed fused launch geometry for a chained segment,
     or None when the segment must fall back to per-layer execution.
 
-    Each layer's host-K tile (snapped from its own mapping, then capped
-    so the double-buffered K-tile windows of ALL layers together stay
-    under the largest single weight) becomes its HBM->VMEM streaming
-    granularity.  The host-M tile covers the whole activation in one
-    grid step whenever the streamed footprint allows (no weight
-    re-streams) -- and MUST when ``adapts`` marks an in-kernel
-    permutation boundary (the flatten/cycle/reshape glue needs every row
-    resident); otherwise bm falls back to the tightest snapped tile and
-    halves until the footprint fits ``vmem_budget`` (bytes, sized for
-    ``operand_dtype``).
+    With ``bm``/``layer_bks`` given, the geometry comes from a *joint
+    choice* (``mapper.SegmentChoice`` -- the fusion-aware segment
+    search, or a measured autotune winner) instead of the per-layer
+    snapping heuristic below: the requested tiles are clamped to the
+    problem, the adapt residency rule is still enforced, and the
+    candidate is rejected (None) if its streamed footprint exceeds
+    ``vmem_budget``.
+
+    Otherwise (the greedy-then-snap default): each layer's host-K tile
+    (snapped from its own mapping, then capped so the double-buffered
+    K-tile windows of ALL layers together stay under the largest single
+    weight) becomes its HBM->VMEM streaming granularity.  The host-M
+    tile covers the whole activation in one grid step whenever the
+    streamed footprint allows (no weight re-streams) -- and MUST when
+    ``adapts`` marks an in-kernel permutation boundary (the
+    flatten/cycle/reshape glue needs every row resident); otherwise bm
+    falls back to the tightest snapped tile and halves until the
+    footprint fits ``vmem_budget`` (bytes, sized for ``operand_dtype``).
     """
     if fusion_illegal_reason(programs, vmem_budget=vmem_budget,
                              adapts=adapts,
@@ -1175,6 +1186,29 @@ def fuse_segment(programs: list["Program"], *,
         adapts = (False,) * n_layers
     m = programs[0].gemm.m
     m_max = max(p.gemm.m for p in programs)
+
+    if bm is not None or layer_bks is not None:
+        # joint-choice geometry: clamp, enforce residency, fit-or-reject
+        if layer_bks is None or len(layer_bks) != n_layers:
+            return None
+        bks = [max(1, min(int(bk), p.gemm.k))
+               for bk, p in zip(layer_bks, programs)]
+        rows = m_max if any(adapts) else max(1, min(int(bm or m), m))
+        dims = [(p.gemm.k, p.gemm.n) for p in programs]
+        if _streamed_footprint_bytes(
+                rows, bks[0], dims, bks,
+                operand_dtype=operand_dtype) > vmem_budget:
+            return None
+        acts = tuple(
+            None if p.act_name == "none"
+            else FUSED_ACT_ALIASES.get(p.act_name, p.act_name)
+            for p in programs)
+        return FusedSegment(
+            programs=list(programs), bm=rows, layer_bks=tuple(bks),
+            acts=acts, adapts=tuple(adapts),
+            buffer_depth=FUSED_STREAM_DEPTH, vmem_budget=vmem_budget,
+            operand_dtype=operand_dtype)
+
     bm_snap = m_max
     bks = []
     for prog in programs:

@@ -113,6 +113,13 @@ def span_breakdown(parent: str, children: Iterable[str],
     (span nesting guarantees containment for genuinely nested work).
     Returns totals plus ``child_frac`` (kernel share) and ``host_frac``
     (the remainder: host scheduling, assembly, bookkeeping).
+
+    A run with nothing to measure -- no parent spans, zero parent time,
+    or no child (launch) spans inside them, e.g. an interpreter-only
+    trace that never launched a kernel -- returns an *explicit empty
+    breakdown*: ``empty=True`` with both fractions 0.0, never a divide
+    by zero, a NaN, or a phantom ``host_frac == 1.0`` that would read
+    as "the whole window was host time" when nothing was measured.
     """
     if events is None:
         events = trace.events()
@@ -128,8 +135,10 @@ def span_breakdown(parent: str, children: Iterable[str],
                for t0, t1 in parents):
             child_s += ev.dur_s
             n_children += 1
-    frac = child_s / parent_s if parent_s > 0 else 0.0
+    empty = not parents or parent_s <= 0.0 or n_children == 0
+    frac = 0.0 if empty else child_s / parent_s
     return {"parent": parent, "n_parents": len(parents),
             "parent_s": parent_s, "child_s": child_s,
-            "n_children": n_children, "child_frac": frac,
-            "host_frac": max(0.0, 1.0 - frac)}
+            "n_children": n_children, "empty": empty,
+            "child_frac": frac,
+            "host_frac": 0.0 if empty else max(0.0, 1.0 - frac)}

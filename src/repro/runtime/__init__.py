@@ -21,8 +21,11 @@ arrays -- the cache keys carry the mesh shape, and the scheduler report
 adds per-array traffic, cycles and load imbalance.
 """
 
+from repro.runtime.autotune import (AutotuneReport,  # noqa: F401
+                                    TunedGeometry, autotune_segment)
 from repro.runtime.cache import (CacheStats, ProgramCache,  # noqa: F401
-                                 default_cache, reset_default_cache)
+                                 default_cache, reset_default_cache,
+                                 segment_key)
 from repro.runtime.executable import (ACTIVATIONS, BatchPlan,  # noqa: F401
                                       BatchSegment, ModelExecutable,
                                       RunResult, Segment, Step, TINY_SHAPES,
@@ -32,6 +35,7 @@ from repro.runtime.scheduler import (KVPool, PagedKV, Request,  # noqa: F401
                                      SchedulerReport)
 
 __all__ = [
+    "AutotuneReport", "TunedGeometry", "autotune_segment", "segment_key",
     "CacheStats", "ProgramCache", "default_cache", "reset_default_cache",
     "ACTIVATIONS", "BatchPlan", "BatchSegment", "ModelExecutable",
     "RunResult", "Segment", "Step", "TINY_SHAPES", "adapt", "KVPool",

@@ -17,6 +17,8 @@ Before this module every consumer memoised its own slice of that pipeline
   compiled   (structural program key, max_block)          -> CompiledProgram
   sharded    (structural program key, mesh shape, axis)   -> ShardedProgram
   fused      (per-layer compiled keys, segment geometry)  -> CompiledSegment
+  frontier   (structural segment key)                     -> SegmentFrontier
+  tuned      (structural segment key + tuning state)      -> TunedGeometry
 
 ``plan`` also accepts a ``core.conv.Conv2D`` (anything with ``to_gemm``):
 the im2col GEMM shape is the search problem, so convs share the same
@@ -51,10 +53,19 @@ from repro.obs.trace import trace
 if TYPE_CHECKING:  # pragma: no cover
     from repro.backends.pallas_backend import CompiledProgram
     from repro.configs.feather import FeatherConfig
-    from repro.core.mapper import Gemm, Plan
+    from repro.core.mapper import Gemm, Plan, SegmentFrontier
     from repro.core.program import Program
 
-_PERSIST_VERSION = 1
+#: Disk-payload version: bumped whenever the pickled layout changes.
+#: Version 2 added the per-tier ``schema`` dict and the persisted tuned
+#: tier -- pre-frontier (version-1) pickles are rejected at load so a
+#: stale file can never poison a tuned cache.
+_PERSIST_VERSION = 2
+
+#: Per-tier entry schemas inside the payload; a tier whose schema
+#: doesn't match is rejected wholesale (same guard, finer grain: a
+#: future plan-layout change won't discard still-valid tuned winners).
+_TIER_SCHEMAS = {"plans": 1, "tuned": 1}
 
 
 @dataclasses.dataclass
@@ -70,6 +81,11 @@ class CacheStats:
     sharded_misses: int = 0       # == shard_program partitionings
     fused_hits: int = 0
     fused_misses: int = 0         # == fused-segment compiles
+    frontier_hits: int = 0
+    frontier_misses: int = 0      # == joint segment searches performed
+    tuned_hits: int = 0
+    tuned_misses: int = 0         # == tuned-geometry lookups that missed
+    disk_rejected: int = 0        # stale persisted payloads refused
     evictions: int = 0
     disk_evictions: int = 0       # plans trimmed from the persisted tier
     disk_bytes: int = 0           # size of the persisted file, last save
@@ -86,13 +102,14 @@ class CacheStats:
     @property
     def hits(self) -> int:
         return (self.plan_hits + self.lowered_hits + self.compile_hits
-                + self.sharded_hits + self.fused_hits)
+                + self.sharded_hits + self.fused_hits
+                + self.frontier_hits + self.tuned_hits)
 
     @property
     def misses(self) -> int:
         return (self.plan_misses + self.lowered_misses
                 + self.compile_misses + self.sharded_misses
-                + self.fused_misses)
+                + self.fused_misses + self.frontier_misses)
 
     @property
     def hit_rate(self) -> float:
@@ -114,6 +131,11 @@ class CacheStats:
             "compiles": self.compiles, "shardings": self.sharded_misses,
             "fused_compiles": self.fused_misses,
             "fused_hits": self.fused_hits,
+            "frontier_searches": self.frontier_misses,
+            "frontier_hits": self.frontier_hits,
+            "tuned_hits": self.tuned_hits,
+            "tuned_misses": self.tuned_misses,
+            "disk_rejected": self.disk_rejected,
             "evictions": self.evictions,
             "disk_evictions": self.disk_evictions,
             "disk_bytes": self.disk_bytes,
@@ -158,6 +180,34 @@ def fused_key(segment, max_block: int) -> tuple:
             segment.vmem_budget, segment.operand_dtype, max_block)
 
 
+def segment_key(programs, *, adapts=None,
+                vmem_budget: int | None = None,
+                operand_dtype: str = "float32",
+                tuning: tuple = ()) -> tuple:
+    """Structural key of a chained segment *before* any launch geometry
+    exists: per-layer (shape, MappingChoice, activation name), the
+    config, the adapt boundaries and the streamed budget -- what the
+    joint search (frontier tier) and the measured winner (tuned tier)
+    are both functions of.
+
+    ``tuning`` carries the measurement state a tuned winner is only
+    valid for (backend kind, interpret flag, max_block): an autotune
+    result measured under Pallas interpret mode never serves a Mosaic
+    process.  Unlike ``compiled_key`` this key holds no ``id()``-based
+    activation token (activation *names* suffice -- geometry does not
+    depend on the callable), so tuned entries pickle cleanly and stay
+    valid across processes.
+    """
+    if adapts is None:
+        adapts = (False,) * len(programs)
+    if vmem_budget is None:
+        vmem_budget = programlib.FUSED_VMEM_BUDGET
+    layers = tuple((p.gemm.m, p.gemm.k, p.gemm.n, p.choice, p.act_name)
+                   for p in programs)
+    return (layers, programs[0].cfg, tuple(adapts), int(vmem_budget),
+            operand_dtype, programlib.FUSED_STREAM_DEPTH, tuple(tuning))
+
+
 class ProgramCache:
     """Memoises mapper search -> Program lowering -> backend compile.
 
@@ -177,6 +227,12 @@ class ProgramCache:
         self._compiled: dict[tuple, "CompiledProgram"] = {}
         self._sharded: dict[tuple, Any] = {}
         self._fused: dict[tuple, Any] = {}
+        self._frontiers: dict[tuple, Any] = {}
+        self._tuned: dict[tuple, Any] = {}
+        # struct part of a tuned key -> its full key (latest stored
+        # winner wins), so segment builds can consume tuned geometry
+        # without knowing which tuning state produced it
+        self._tuned_by_struct: dict[tuple, tuple] = {}
         self.stats = CacheStats()
         self.max_plans = max_plans
         # variant/artifact tiers are bounded too (several lowering
@@ -185,6 +241,8 @@ class ProgramCache:
         self.max_compiled = 16 * max_plans
         self.max_sharded = 8 * max_plans
         self.max_fused = 8 * max_plans
+        self.max_frontiers = 4 * max_plans
+        self.max_tuned = 4 * max_plans
         self.path = os.fspath(path) if path is not None else None
         if self.path and os.path.exists(self.path):
             self.load(self.path)
@@ -307,11 +365,83 @@ class ProgramCache:
         self._evict_over(self._fused, self.max_fused)
         self._fused[fused_key(segment, max_block)] = comp
 
+    # -- tier 6: joint-search frontiers (one per segment structure) -----------
+    def frontier(self, programs, *, adapts=None,
+                 vmem_budget: int | None = None,
+                 operand_dtype: str = "float32"):
+        """Memoising drop-in for ``mapper.search_segment``: the Pareto
+        frontier of joint (bm, per-layer bk) geometries for a chained
+        segment, keyed structurally so rebuilt executables and repeat
+        autotune calls never re-run the joint search.  Returns None for
+        fusion-illegal segments (not cached -- the legality check is
+        cheap and the result can change with ``adapts``)."""
+        key = segment_key(programs, adapts=adapts,
+                          vmem_budget=vmem_budget,
+                          operand_dtype=operand_dtype)
+        hit = self._frontiers.get(key)
+        if hit is not None:
+            self.stats.frontier_hits += 1
+            self._frontiers[key] = self._frontiers.pop(key)   # LRU touch
+            return hit
+        self.stats.frontier_misses += 1
+        with trace.span("cache.frontier", n_layers=len(programs)):
+            front = mapperlib.search_segment(
+                list(programs), adapts=adapts,
+                vmem_budget=(vmem_budget if vmem_budget is not None
+                             else programlib.FUSED_VMEM_BUDGET),
+                operand_dtype=operand_dtype)
+        if front is not None:
+            self._evict_over(self._frontiers, self.max_frontiers)
+            self._frontiers[key] = front
+        return front
+
+    # -- tier 7: measured autotune winners (persisted across processes) -------
+    def lookup_tuned(self, key: tuple):
+        """Exact-match lookup: ``key`` comes from :func:`segment_key`
+        *with* the tuning state the caller measures under."""
+        tg = self._tuned.get(key)
+        if tg is not None:
+            self.stats.tuned_hits += 1
+            self._tuned[key] = self._tuned.pop(key)   # LRU touch
+        else:
+            self.stats.tuned_misses += 1
+        return tg
+
+    def store_tuned(self, key: tuple, tuned) -> None:
+        self._evict_over(self._tuned, self.max_tuned)
+        self._tuned[key] = tuned
+        self._tuned_by_struct[key[:-1]] = key
+
+    def tuned_geometry(self, programs, *, adapts=None,
+                       vmem_budget: int | None = None,
+                       operand_dtype: str = "float32",
+                       tuning: tuple | None = None):
+        """The measured winner for a segment structure, or None.
+
+        With ``tuning`` given the lookup is exact; without, the most
+        recently stored winner for the structure is returned (segment
+        *builds* consume tuned geometry without knowing which backend
+        state tuned it -- the geometry is valid under any, only the
+        measured wall clock was state-specific)."""
+        if tuning is not None:
+            return self.lookup_tuned(segment_key(
+                programs, adapts=adapts, vmem_budget=vmem_budget,
+                operand_dtype=operand_dtype, tuning=tuning))
+        struct = segment_key(programs, adapts=adapts,
+                             vmem_budget=vmem_budget,
+                             operand_dtype=operand_dtype)[:-1]
+        full = self._tuned_by_struct.get(struct)
+        if full is None:
+            self.stats.tuned_misses += 1
+            return None
+        return self.lookup_tuned(full)
+
     # -- stats / persistence --------------------------------------------------
     def __len__(self) -> int:
         return (len(self._plans) + len(self._lowered)
                 + len(self._compiled) + len(self._sharded)
-                + len(self._fused))
+                + len(self._fused) + len(self._frontiers)
+                + len(self._tuned))
 
     def size_bytes(self) -> int:
         """Pickled payload size of the plan tier (computed on demand --
@@ -340,7 +470,10 @@ class ProgramCache:
                              self._compiled),
                  "sharded": (s.sharded_hits, s.sharded_misses,
                              self._sharded),
-                 "fused": (s.fused_hits, s.fused_misses, self._fused)}
+                 "fused": (s.fused_hits, s.fused_misses, self._fused),
+                 "frontier": (s.frontier_hits, s.frontier_misses,
+                              self._frontiers),
+                 "tuned": (s.tuned_hits, s.tuned_misses, self._tuned)}
         for tier, (hits, misses, table) in tiers.items():
             reg.gauge("cache_hits",
                       "ProgramCache hits per tier").set(hits, tier=tier)
@@ -366,14 +499,17 @@ class ProgramCache:
                         "lowered": len(self._lowered),
                         "compiled": len(self._compiled),
                         "sharded": len(self._sharded),
-                        "fused": len(self._fused)},
+                        "fused": len(self._fused),
+                        "frontiers": len(self._frontiers),
+                        "tuned": len(self._tuned)},
             "bytes": self.size_bytes(),
             **self.stats.summary(),
         }
 
     def save(self, path: str | os.PathLike | None = None) -> str:
-        """Persist the plan tier (search results never hold callables, so
-        they pickle cleanly; variant/compiled tiers are re-derived).
+        """Persist the plan tier and the measured tuned winners (both
+        hold only value objects, so they pickle cleanly; variant/compiled
+        tiers hold callables/jitted artifacts and are re-derived).
 
         The documented ``max_plans`` LRU bound holds on disk too: only
         the most-recently-used ``max_plans`` entries persist (dict order
@@ -386,8 +522,11 @@ class ProgramCache:
         items = list(self._plans.items())
         trimmed = max(0, len(items) - self.max_plans)
         self.stats.disk_evictions += trimmed
+        tuned = list(self._tuned.items())[-self.max_tuned:]
         payload = {"version": _PERSIST_VERSION,
-                   "plans": dict(items[trimmed:])}
+                   "schema": dict(_TIER_SCHEMAS),
+                   "plans": dict(items[trimmed:]),
+                   "tuned": dict(tuned)}
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:
             pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
@@ -396,12 +535,24 @@ class ProgramCache:
         return path
 
     def load(self, path: str | os.PathLike) -> int:
+        """Merge a persisted payload; raises ``ValueError`` (and counts
+        ``disk_rejected``) on any version or per-tier schema mismatch --
+        a stale pre-frontier pickle is refused wholesale rather than
+        silently poisoning a tuned cache."""
         with open(os.fspath(path), "rb") as f:
             payload = pickle.load(f)
         if payload.get("version") != _PERSIST_VERSION:
+            self.stats.disk_rejected += 1
             raise ValueError(
                 f"cache file version {payload.get('version')!r} != "
                 f"{_PERSIST_VERSION}")
+        schema = payload.get("schema", {})
+        for tier, want in _TIER_SCHEMAS.items():
+            if tier in payload and schema.get(tier) != want:
+                self.stats.disk_rejected += 1
+                raise ValueError(
+                    f"cache tier {tier!r} schema {schema.get(tier)!r} "
+                    f"!= {want}")
         plans = payload["plans"]
         loaded = 0
         for key, plan in plans.items():
@@ -409,6 +560,10 @@ class ProgramCache:
                 self._evict_over(self._plans, self.max_plans)
                 loaded += 1
             self._plans[key] = plan
+        for key, tg in payload.get("tuned", {}).items():
+            if key not in self._tuned:
+                loaded += 1
+            self.store_tuned(key, tg)
         self.stats.loaded_from_disk += loaded
         return loaded
 

@@ -1,0 +1,340 @@
+"""Fusion-aware joint mapper + measured autotune (ROADMAP item 3).
+
+The joint-search invariants: frontier points dominate nothing on the
+frontier, the measured winner's Program stream passes pallas ==
+interpreter == oracle at CI extents, and serving with a tuned cache is
+checksum-identical to untuned serving (the geometry changes the K-tile
+walk, never the arithmetic the quantised recurrence sees).  Plus the
+satellite regressions: memoised ``enumerate_choices``, the versioned
+ProgramCache disk schema, and the tuned tier surviving a save/load
+round trip into a fresh process's cache.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import backends
+from repro.configs.feather import feather_config
+from repro.core import mapper, program, workloads
+from repro.obs import export
+from repro.obs.trace import trace
+from repro.runtime import (ModelExecutable, ProgramCache, Scheduler,
+                           autotune_segment, segment_key)
+from repro.runtime.autotune import tuning_state
+from repro.runtime.executable import ACTIVATIONS
+
+CFG = feather_config(4, 16)
+
+
+def _build_chain(m, widths, acts, cache=None, cfg=CFG):
+    cache = cache or ProgramCache()
+    progs = []
+    for i in range(len(widths) - 1):
+        g = mapper.Gemm(m=m, k=widths[i], n=widths[i + 1],
+                        name=f"at-l{i}")
+        plan = cache.plan(g, cfg)
+        progs.append(cache.lower(
+            plan.gemm, plan.choice, cfg,
+            activation=ACTIVATIONS.get(acts[i]), act_name=acts[i],
+            out_name=f"O{i}"))
+    return program.chain(progs, lower_fn=cache.lower), cache
+
+
+def _chain_tensors(m, widths, seed=3):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, widths[0])).astype(np.float32)
+    ws = [(rng.standard_normal((widths[i], widths[i + 1]))
+           / np.sqrt(widths[i])).astype(np.float32)
+          for i in range(len(widths) - 1)]
+    return x, ws
+
+
+def _ci_chain_dims():
+    """(m, widths) anchored on the fhe-ntt CI family extents."""
+    g = next(g for g in workloads.ci_suite() if "fhe-ntt" in g.name)
+    return g.m, [g.k, g.n, g.k]
+
+
+# ---------------------------------------------------------------------------
+# Joint search: frontier invariants
+# ---------------------------------------------------------------------------
+
+def test_frontier_is_non_dominated():
+    """No frontier point Pareto-dominates another frontier point, every
+    point fits the budget, and the greedy-snap geometry's metrics are
+    matched-or-beaten on every axis by some frontier point."""
+    m, widths = _ci_chain_dims()
+    chained, _ = _build_chain(m, widths, ["relu", "none"])
+    front = mapper.search_segment(chained)
+    assert front is not None and front.points
+    assert front.n_feasible <= front.n_enumerated
+    for p in front.points:
+        assert p.vmem_bytes <= front.vmem_budget
+        assert p.choice.bm >= 1
+        assert all(bk >= 1 for bk in p.choice.layer_bks)
+    metrics = [p.metrics for p in front.points]
+    for i, a in enumerate(metrics):
+        for j, b in enumerate(metrics):
+            if i != j:
+                assert not mapper._dominates(a, b), (a, b)
+    # cycles-ascending ordering is what .top(k) relies on
+    cyc = [p.cycles for p in front.points]
+    assert cyc == sorted(cyc)
+    # the greedy-snap geometry is always IN the joint candidate space,
+    # so the frontier can only match-or-beat it under the same pricing
+    greedy = program.fuse_segment(chained)
+    vecs = mapper._bk_vectors(chained, (False, False),
+                              front.vmem_budget, "float32")
+    assert greedy.layer_bks in vecs
+
+
+def test_frontier_candidates_are_runnable_geometries():
+    """Every frontier point round-trips through fuse_segment into a
+    working launch geometry."""
+    m, widths = _ci_chain_dims()
+    chained, _ = _build_chain(m, widths, ["relu", "none"])
+    front = mapper.search_segment(chained)
+    for p in front.top(4):
+        seg = program.fuse_segment(chained, bm=p.choice.bm,
+                                   layer_bks=p.choice.layer_bks)
+        assert seg is not None
+        assert seg.vmem_highwater_bytes() <= front.vmem_budget
+
+
+def test_pareto_frontier_drops_dominated():
+    mk = lambda t, c, v: mapper.SegmentPoint(  # noqa: E731
+        choice=mapper.SegmentChoice(bm=1, layer_bks=(1,)),
+        traffic_bytes=t, cycles=c, vmem_bytes=v)
+    a, b = mk(10, 10, 10), mk(20, 20, 20)       # a dominates b
+    c = mk(5, 30, 30)                           # trades traffic for cycles
+    front = mapper.pareto_frontier([b, a, c])
+    assert [p.metrics for p in front] == [a.metrics, c.metrics]
+
+
+# ---------------------------------------------------------------------------
+# Measured winner: correctness across the execution spine (satellite 4)
+# ---------------------------------------------------------------------------
+
+def test_tuned_winner_matches_interpreter_and_oracle_ci():
+    """The measured winner's geometry runs the SAME Programs: fused
+    pallas at the tuned geometry == fused interpreter == per-layer
+    interpreter == einsum oracle at CI extents."""
+    m, widths = _ci_chain_dims()
+    acts = ["relu", "none"]
+    chained, cache = _build_chain(m, widths, acts)
+    be = backends.PallasBackend(CFG, compile_cache=cache)
+    rep = autotune_segment(chained, be, cache=cache, top_k=2, iters=1)
+    assert rep is not None and not rep.cached
+    w = rep.winner
+    assert w.n_points_measured >= 1
+    assert 0.0 <= w.kernel_frac <= 1.0
+    tuned = program.fuse_segment(chained, bm=w.bm, layer_bks=w.layer_bks)
+    assert tuned is not None
+
+    x, ws = _chain_tensors(m, widths)
+    t = {"I": x, **{f"W{i}": w_ for i, w_ in enumerate(ws)}}
+    ref = x.copy()
+    for i, w_ in enumerate(ws):
+        ref = ref @ w_
+        if acts[i] != "none":
+            ref = np.asarray(ACTIVATIONS[acts[i]](ref))
+    tol = dict(rtol=2e-4, atol=2e-4 + 2e-4 * max(widths))
+    out_pallas = np.asarray(be.run_segment(tuned, t)[tuned.out_name])
+    interp = backends.get_backend("interpreter", CFG)
+    out_interp = np.asarray(interp.run_segment(tuned, t)[tuned.out_name])
+    per_layer = backends.get_backend("interpreter", CFG)
+    for i, prog in enumerate(chained):
+        lt = {"W": ws[i]}
+        if i == 0:
+            lt["I"] = x
+        per_layer.run_program(prog, lt)
+    out_layers = np.asarray(per_layer.outputs[chained[-1].out_name])
+    np.testing.assert_allclose(out_pallas, ref, err_msg="pallas", **tol)
+    np.testing.assert_allclose(out_interp, ref, err_msg="interp", **tol)
+    np.testing.assert_allclose(out_layers, ref, err_msg="layers", **tol)
+
+
+def test_warm_cache_serves_tuned_without_work():
+    """Second autotune of a structurally identical segment: zero joint
+    searches, zero compiles, zero launches -- one tuned-tier lookup."""
+    m, widths = _ci_chain_dims()
+    chained, cache = _build_chain(m, widths, ["relu", "none"])
+    be = backends.PallasBackend(CFG, compile_cache=cache)
+    first = autotune_segment(chained, be, cache=cache, top_k=2, iters=1)
+    assert not first.cached
+    before = cache.stats.snapshot()
+    launches = be.n_launches
+    again = autotune_segment(chained, be, cache=cache, top_k=2, iters=1)
+    assert again.cached
+    assert again.winner == first.winner
+    delta = cache.stats.delta(before)
+    assert delta["frontier_misses"] == 0
+    assert delta["fused_misses"] == 0 and delta["compile_misses"] == 0
+    assert delta["tuned_hits"] == 1
+    assert be.n_launches == launches
+
+
+def test_executable_consumes_tuned_geometry():
+    """A rebuilt ModelExecutable picks the persisted winner's geometry
+    up through ``_fuse_with_tuned`` -- no explicit tuning plumbing."""
+    cache = ProgramCache()
+    exe = ModelExecutable.for_cell("gemma-7b", "decode_tiny", CFG,
+                                   cache=cache)
+    segs = [s for s in exe.segments if s.fused is not None]
+    assert segs, "decode_tiny must have at least one fused segment"
+    be = exe.make_backend("pallas")
+    tuned = {}
+    for s in segs:
+        rep = autotune_segment(list(s.fused.programs), be, cache=cache,
+                               adapts=s.fused.adapts, top_k=1, iters=1)
+        assert rep is not None
+        tuned[tuple(s.indices)] = rep.winner
+    rebuilt = ModelExecutable.for_cell("gemma-7b", "decode_tiny", CFG,
+                                       cache=cache)
+    for s in rebuilt.segments:
+        if s.fused is None:
+            continue
+        w = tuned[tuple(s.indices)]
+        assert (s.fused.bm, s.fused.layer_bks) == (w.bm, w.layer_bks)
+
+
+def test_tuned_serving_checksums_identical():
+    """Serving from a tuned cache is bit-identical to untuned serving:
+    the tuned geometry changes the K-tile walk of the fused launch, and
+    the quantised recurrence absorbs the accumulation-order rounding."""
+    def serve(cache):
+        prefill = ModelExecutable.for_cell("gemma-7b", "prefill_tiny",
+                                           CFG, cache=cache)
+        decode = ModelExecutable.for_cell("gemma-7b", "decode_tiny",
+                                          CFG, cache=cache)
+        sched = Scheduler(prefill, decode, backend="pallas",
+                          max_concurrent=2, seed=0)
+        for steps, prompt in [(2, None), (1, 64)]:
+            sched.submit(decode_steps=steps, prompt_tokens=prompt)
+        rep = sched.run()
+        return [r.state_checksum for r in rep.requests]
+
+    untuned = serve(ProgramCache())
+
+    cache = ProgramCache()
+    for cell in ("prefill_tiny", "decode_tiny"):
+        exe = ModelExecutable.for_cell("gemma-7b", cell, CFG,
+                                       cache=cache)
+        be = exe.make_backend("pallas")
+        for s in exe.segments:
+            if s.fused is not None:
+                autotune_segment(list(s.fused.programs), be,
+                                 cache=cache, adapts=s.fused.adapts,
+                                 top_k=1, iters=1)
+    assert serve(cache) == untuned
+    assert all(untuned)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: memoised enumerate_choices
+# ---------------------------------------------------------------------------
+
+def test_enumerate_choices_memoised():
+    g1 = mapper.Gemm(m=24, k=36, n=40, name="a")
+    g2 = mapper.Gemm(m=24, k=36, n=40, name="b")     # same structure
+    g3 = mapper.Gemm(m=24, k=36, n=48, name="c")     # different shape
+    c1 = mapper.enumerate_choices(g1, CFG)
+    c2 = mapper.enumerate_choices(g2, CFG)
+    assert c1 is c2                    # structural key ignores the name
+    assert mapper.enumerate_choices(g3, CFG) is not c1
+    assert list(c1) == list(mapper._enumerate_choices(g1, CFG))
+
+
+def test_enumerate_choices_cache_bounded():
+    mapper._ENUM_CACHE.clear()
+    for i in range(mapper._ENUM_CACHE_MAX + 8):
+        mapper.enumerate_choices(
+            mapper.Gemm(m=4, k=4 + i, n=4, name="x"), CFG)
+    assert len(mapper._ENUM_CACHE) <= mapper._ENUM_CACHE_MAX
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: versioned disk entries + tuned-tier round trip
+# ---------------------------------------------------------------------------
+
+def test_cache_roundtrip_carries_tuned_tier(tmp_path):
+    path = str(tmp_path / "cache.pkl")
+    m, widths = _ci_chain_dims()
+    chained, cache = _build_chain(m, widths, ["relu", "none"])
+    cache.path = path
+    be = backends.PallasBackend(CFG, compile_cache=cache)
+    rep = autotune_segment(chained, be, cache=cache, top_k=1, iters=1)
+    assert not rep.cached                  # autotune saved to disk
+
+    fresh = ProgramCache(path=path)
+    assert fresh.stats.loaded_from_disk >= 1
+    # the same structural segment in a new process: tuned-tier hit,
+    # winner equal, and the executables' struct index is rebuilt
+    chained2, _ = _build_chain(m, widths, ["relu", "none"], cache=fresh)
+    be2 = backends.PallasBackend(CFG, compile_cache=fresh)
+    rep2 = autotune_segment(chained2, be2, cache=fresh,
+                            top_k=1, iters=1)
+    assert rep2.cached
+    assert rep2.winner == rep.winner
+    assert fresh.tuned_geometry(chained2) == rep.winner
+
+
+def test_cache_rejects_version_mismatch(tmp_path):
+    import pickle
+    path = str(tmp_path / "stale.pkl")
+    with open(path, "wb") as f:
+        pickle.dump({"version": 1, "plans": {}}, f)
+    with pytest.raises(ValueError, match="version"):
+        ProgramCache(path=path)
+
+
+def test_cache_rejects_tier_schema_mismatch(tmp_path):
+    import pickle
+    from repro.runtime import cache as cachelib
+    path = str(tmp_path / "schema.pkl")
+    with open(path, "wb") as f:
+        pickle.dump({"version": cachelib._PERSIST_VERSION,
+                     "schema": {"plans": 99, "tuned": 99},
+                     "plans": {}, "tuned": {}}, f)
+    with pytest.raises(ValueError, match="schema"):
+        ProgramCache(path=path)
+
+
+def test_segment_key_distinguishes_tuning_state():
+    m, widths = _ci_chain_dims()
+    chained, _ = _build_chain(m, widths, ["relu", "none"])
+    be = backends.PallasBackend(CFG)
+    k1 = segment_key(chained, tuning=tuning_state(be))
+    k2 = segment_key(chained, tuning=("pallas", True, 512))
+    assert k1 != k2 and k1[:-1] == k2[:-1]
+    assert k1 == segment_key(chained, tuning=tuning_state(be))
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: span_breakdown on zero-launch-span runs
+# ---------------------------------------------------------------------------
+
+def test_span_breakdown_empty_on_no_events():
+    out = export.span_breakdown("tick", {"launch"}, events=[])
+    assert out["empty"] is True
+    assert out["n_parents"] == 0 and out["n_children"] == 0
+    assert out["child_frac"] == 0.0 and out["host_frac"] == 0.0
+
+
+def test_span_breakdown_empty_on_parent_without_launches():
+    """A parent span that contains no child launches (interpreter-only
+    run): explicit empty, not host_frac == 1.0."""
+    trace.clear()
+    trace.enable()
+    try:
+        with trace.span("tick"):
+            pass
+    finally:
+        trace.disable()
+    out = export.span_breakdown("tick", {"launch"}, trace.events())
+    assert out["n_parents"] == 1
+    assert out["empty"] is True
+    assert out["child_frac"] == 0.0 and out["host_frac"] == 0.0
+    trace.clear()
