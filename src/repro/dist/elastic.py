@@ -1,12 +1,23 @@
 """Elastic resume: restore the latest checkpoint onto explicit (possibly
-different-topology) shardings.
+different-topology) shardings, plus serving-state snapshots.
 
 The checkpoint stores plain host arrays (ckpt.manager); re-sharding is a
 ``jax.device_put`` against the *new* mesh's NamedShardings, so a job can
 resume on a different chip count without a conversion step.
+
+The serving half (``save_serving_snapshot``/``load_serving_snapshot``)
+persists a :class:`~repro.runtime.scheduler.Scheduler`'s request state --
+pending + retired, the deterministic subset (in-flight requests replay
+from their seeds) -- so a chaos-killed serve resumes and finishes with
+checksums identical to the uninterrupted run (``tests/test_faults.py``
+regresses exactly that).
 """
 
 from __future__ import annotations
+
+import os
+import pickle
+import tempfile
 
 import jax
 
@@ -26,3 +37,43 @@ def resume(manager, abstract_tree, shardings):
     if shardings is not None:
         restored = jax.tree.map(jax.device_put, restored, shardings)
     return restored, step
+
+
+def save_serving_snapshot(path: str | os.PathLike, snapshot: dict) -> str:
+    """Atomically persist a ``Scheduler.snapshot()`` dict (unique temp
+    file in the destination directory, fsync, ``os.replace``) -- a kill
+    mid-save leaves the previous snapshot intact, never a torn file."""
+    path = os.fspath(path)
+    dirname = os.path.dirname(path) or "."
+    fd, tmp = tempfile.mkstemp(dir=dirname,
+                               prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            pickle.dump(snapshot, f, protocol=pickle.HIGHEST_PROTOCOL)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return path
+
+
+def load_serving_snapshot(path: str | os.PathLike) -> dict | None:
+    """The persisted snapshot dict, or None when the file is missing or
+    unreadable (a torn/corrupt snapshot means a cold start, not a
+    crash)."""
+    path = os.fspath(path)
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path, "rb") as f:
+            snap = pickle.load(f)
+        return snap if isinstance(snap, dict) else None
+    except (pickle.PickleError, EOFError, AttributeError, ImportError,
+            IndexError, OSError):
+        return None

@@ -58,6 +58,13 @@ class ArrayMesh:
             return None
         return jax.make_mesh((self.n_arrays,), (self.axis_name,))
 
+    def degraded(self, n_down: int = 1) -> "ArrayMesh":
+        """The mesh that survives ``n_down`` arrays going unhealthy --
+        the failover target the scheduler re-lowers onto (never below
+        one array: a fully-degraded mesh serves unsharded)."""
+        return ArrayMesh(n_arrays=max(1, self.n_arrays - max(0, n_down)),
+                         axis_name=self.axis_name)
+
     @classmethod
     def host(cls) -> "ArrayMesh":
         """One logical array per visible JAX device."""

@@ -105,6 +105,29 @@ def write_metrics_snapshot(path: str, registry=None) -> str:
     return path
 
 
+def fault_events(events: Sequence[SpanEvent] | None = None) -> list[dict]:
+    """Every event on the ``("fault", kind)`` swimlanes -- injections,
+    recoveries, breaker transitions -- as serialisable dicts in time
+    order: the chaos-run artifact CI uploads next to the full trace."""
+    if events is None:
+        events = trace.events()
+    out = []
+    for ev in sorted(events, key=lambda e: (e.t0_s, e.seq)):
+        if ev.track and str(ev.track[0]) == "fault":
+            out.append({"name": ev.name,
+                        "kind": str(ev.track[1]) if len(ev.track) > 1
+                        else "", "t_s": ev.t0_s,
+                        **_json_safe(ev.attrs)})
+    return out
+
+
+def write_fault_events(path: str,
+                       events: Sequence[SpanEvent] | None = None) -> str:
+    with open(path, "w") as f:
+        json.dump({"fault_events": fault_events(events)}, f, indent=1)
+    return path
+
+
 def span_breakdown(parent: str, children: Iterable[str],
                    events: Sequence[SpanEvent] | None = None) -> dict:
     """Time inside ``children`` spans as a fraction of ``parent`` spans.

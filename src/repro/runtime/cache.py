@@ -41,8 +41,10 @@ default returned by :func:`default_cache`.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import os
 import pickle
+import tempfile
 from typing import TYPE_CHECKING, Any, Callable
 
 from repro.core import mapper as mapperlib
@@ -58,14 +60,21 @@ if TYPE_CHECKING:  # pragma: no cover
 
 #: Disk-payload version: bumped whenever the pickled layout changes.
 #: Version 2 added the per-tier ``schema`` dict and the persisted tuned
-#: tier -- pre-frontier (version-1) pickles are rejected at load so a
-#: stale file can never poison a tuned cache.
-_PERSIST_VERSION = 2
+#: tier; version 3 moved every entry under ``tiers`` as an individually
+#: pickled ``(blob, sha256)`` pair, so load verifies each entry's
+#: content checksum and a corrupt entry quarantines (counting a miss)
+#: instead of poisoning -- or crashing -- the next process.
+_PERSIST_VERSION = 3
 
 #: Per-tier entry schemas inside the payload; a tier whose schema
 #: doesn't match is rejected wholesale (same guard, finer grain: a
 #: future plan-layout change won't discard still-valid tuned winners).
-_TIER_SCHEMAS = {"plans": 1, "tuned": 1}
+_TIER_SCHEMAS = {"plans": 2, "tuned": 2}
+
+
+def _entry_digest(blob: bytes) -> str:
+    """Content checksum persisted next to each pickled entry."""
+    return hashlib.sha256(blob).hexdigest()
 
 
 @dataclasses.dataclass
@@ -86,6 +95,7 @@ class CacheStats:
     tuned_hits: int = 0
     tuned_misses: int = 0         # == tuned-geometry lookups that missed
     disk_rejected: int = 0        # stale persisted payloads refused
+    disk_corrupt: int = 0         # checksum-failed entries quarantined
     evictions: int = 0
     disk_evictions: int = 0       # plans trimmed from the persisted tier
     disk_bytes: int = 0           # size of the persisted file, last save
@@ -136,6 +146,7 @@ class CacheStats:
             "tuned_hits": self.tuned_hits,
             "tuned_misses": self.tuned_misses,
             "disk_rejected": self.disk_rejected,
+            "disk_corrupt": self.disk_corrupt,
             "evictions": self.evictions,
             "disk_evictions": self.disk_evictions,
             "disk_bytes": self.disk_bytes,
@@ -491,6 +502,9 @@ class ProgramCache:
         reg.gauge("cache_disk_bytes",
                   "size of the persisted plan file, last save").set(
                       s.disk_bytes)
+        reg.gauge("cache_disk_corrupt",
+                  "checksum-failed disk entries quarantined").set(
+                      s.disk_corrupt)
         reg.gauge("cache_loaded_from_disk").set(s.loaded_from_disk)
 
     def summary(self) -> dict:
@@ -511,6 +525,15 @@ class ProgramCache:
         hold only value objects, so they pickle cleanly; variant/compiled
         tiers hold callables/jitted artifacts and are re-derived).
 
+        Each entry is pickled on its own and stored as a
+        ``(blob, sha256)`` pair under ``tiers`` so :meth:`load` can
+        verify entries independently -- one flipped byte quarantines one
+        entry, not the whole cache.  The write is atomic and durable:
+        a unique temp file in the destination directory (concurrent
+        saves never collide), fsync'ed, then ``os.replace``'d into
+        place, so a crash mid-save can never leave a torn file at
+        ``path``.
+
         The documented ``max_plans`` LRU bound holds on disk too: only
         the most-recently-used ``max_plans`` entries persist (dict order
         IS recency order -- hits re-insert), trimmed entries count as
@@ -523,24 +546,80 @@ class ProgramCache:
         trimmed = max(0, len(items) - self.max_plans)
         self.stats.disk_evictions += trimmed
         tuned = list(self._tuned.items())[-self.max_tuned:]
+        tiers = {}
+        for tier, entries in (("plans", items[trimmed:]),
+                              ("tuned", tuned)):
+            packed = []
+            for key, value in entries:
+                blob = pickle.dumps((key, value),
+                                    protocol=pickle.HIGHEST_PROTOCOL)
+                packed.append((blob, _entry_digest(blob)))
+            tiers[tier] = packed
         payload = {"version": _PERSIST_VERSION,
                    "schema": dict(_TIER_SCHEMAS),
-                   "plans": dict(items[trimmed:]),
-                   "tuned": dict(tuned)}
-        tmp = path + ".tmp"
-        with open(tmp, "wb") as f:
-            pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
-        os.replace(tmp, path)
+                   "tiers": tiers}
+        dirname = os.path.dirname(path) or "."
+        fd, tmp = tempfile.mkstemp(dir=dirname,
+                                   prefix=os.path.basename(path) + ".",
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
         self.stats.disk_bytes = os.path.getsize(path)
         return path
 
+    # -- corruption quarantine ------------------------------------------------
+    def quarantine_dir(self, path: str) -> str:
+        return path + ".quarantine"
+
+    def _quarantine(self, path: str, name: str, data: bytes) -> None:
+        """Move corrupt bytes aside (never raising -- quarantine is a
+        best-effort forensic aid on the serving path)."""
+        self.stats.disk_corrupt += 1
+        try:
+            qdir = self.quarantine_dir(path)
+            os.makedirs(qdir, exist_ok=True)
+            with open(os.path.join(qdir, name), "wb") as f:
+                f.write(data)
+        except OSError:  # pragma: no cover - quarantine dir unwritable
+            pass
+
     def load(self, path: str | os.PathLike) -> int:
-        """Merge a persisted payload; raises ``ValueError`` (and counts
-        ``disk_rejected``) on any version or per-tier schema mismatch --
-        a stale pre-frontier pickle is refused wholesale rather than
-        silently poisoning a tuned cache."""
-        with open(os.fspath(path), "rb") as f:
-            payload = pickle.load(f)
+        """Merge a persisted payload.
+
+        Two distinct failure modes, deliberately handled differently:
+
+        * **stale layout** -- a well-formed payload whose version or
+          per-tier schema doesn't match raises ``ValueError`` (and
+          counts ``disk_rejected``): the caller configured an
+          incompatible file and should know.
+        * **corruption** -- an unreadable/truncated file, or an entry
+          whose sha256 doesn't match its blob, never raises: the file
+          or entry moves to the ``<path>.quarantine`` sidecar, counts
+          ``disk_corrupt``, and the entry is simply a miss (re-derived
+          by the next search) -- torn disks must not crash a serve.
+        """
+        path = os.fspath(path)
+        with open(path, "rb") as f:
+            raw = f.read()
+        try:
+            payload = pickle.loads(raw)
+            if not isinstance(payload, dict) or "version" not in payload:
+                raise pickle.UnpicklingError("malformed cache payload")
+        except (EOFError, KeyError, IndexError, ImportError,
+                AttributeError, TypeError, pickle.PickleError):
+            # truncated/garbled file: quarantine, never crash a serve
+            self._quarantine(path, "payload.bin", raw)
+            return 0
         if payload.get("version") != _PERSIST_VERSION:
             self.stats.disk_rejected += 1
             raise ValueError(
@@ -548,22 +627,34 @@ class ProgramCache:
                 f"{_PERSIST_VERSION}")
         schema = payload.get("schema", {})
         for tier, want in _TIER_SCHEMAS.items():
-            if tier in payload and schema.get(tier) != want:
+            if schema.get(tier, want) != want:
                 self.stats.disk_rejected += 1
                 raise ValueError(
                     f"cache tier {tier!r} schema {schema.get(tier)!r} "
                     f"!= {want}")
-        plans = payload["plans"]
         loaded = 0
-        for key, plan in plans.items():
-            if key not in self._plans:
-                self._evict_over(self._plans, self.max_plans)
-                loaded += 1
-            self._plans[key] = plan
-        for key, tg in payload.get("tuned", {}).items():
-            if key not in self._tuned:
-                loaded += 1
-            self.store_tuned(key, tg)
+        tiers = payload.get("tiers", {})
+        for tier in ("plans", "tuned"):
+            for i, entry in enumerate(tiers.get(tier, [])):
+                try:
+                    blob, digest = entry
+                    if _entry_digest(blob) != digest:
+                        raise ValueError("checksum mismatch")
+                    key, value = pickle.loads(blob)
+                except Exception:
+                    blob = entry[0] if (isinstance(entry, (tuple, list))
+                                        and entry) else b""
+                    self._quarantine(path, f"{tier}-{i}.bin", bytes(blob))
+                    continue
+                if tier == "plans":
+                    if key not in self._plans:
+                        self._evict_over(self._plans, self.max_plans)
+                        loaded += 1
+                    self._plans[key] = value
+                else:
+                    if key not in self._tuned:
+                        loaded += 1
+                    self.store_tuned(key, value)
         self.stats.loaded_from_disk += loaded
         return loaded
 

@@ -270,6 +270,23 @@ class ModelExecutable:
         self._fusion_stats: dict | None = None
         self._batch_plans: dict[int, BatchPlan] = {}
 
+    def remesh(self, mesh) -> None:
+        """Rebuild the stream onto a different ArrayMesh in place --
+        the degraded-mesh failover path.  Cache keys carry the mesh
+        shape, so this is a cache-miss re-lower through ``shard_program``
+        (plans and lowered Programs all hit), not new machinery; perf
+        and batch-plan caches reset because per-array accounting
+        changed.  ``mesh=None`` (or one array) falls back to the
+        unsharded single-array pipeline."""
+        self.mesh = mesh if mesh is not None and mesh.n_arrays > 1 else None
+        self.segments = []
+        with trace.span("executable.remesh", model=self.name,
+                        n_arrays=self.n_arrays):
+            self.steps = self._build()
+        self._perf_cache = {}
+        self._fusion_stats = None
+        self._batch_plans = {}
+
     # -- construction --------------------------------------------------------
     @classmethod
     def for_cell(cls, arch: str, shape: str | ShapeConfig, cfg, *,

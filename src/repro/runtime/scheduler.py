@@ -53,6 +53,9 @@ import time
 import numpy as np
 
 from repro.core import perf
+from repro.faults.inject import (CircuitBreaker, FaultError, FaultInjector,
+                                 PoisonedOutputError, check_finite)
+from repro.faults.plan import FaultPlan
 from repro.obs import metrics as obs_metrics
 from repro.obs.trace import trace
 from repro.runtime.executable import ModelExecutable
@@ -85,6 +88,9 @@ class Request:
     #: chunked (None == exactly one pass, the pre-chunking behaviour)
     prompt_tokens: int | None = None
     t_submit: float = 0.0
+    #: wall-clock budget from submission; an overdue request retires as
+    #: ``timed_out`` instead of wedging the tick loop (None == no limit)
+    deadline_s: float | None = None
 
 
 @dataclasses.dataclass
@@ -105,6 +111,11 @@ class RequestReport:
     state_checksum: str = ""
     #: submit -> first decode token out (prefill queueing + chunking)
     ttft_s: float = 0.0
+    #: terminal state: "ok" | "timed_out" (deadline hit) | "failed"
+    #: (retry budget exhausted under persistent faults)
+    status: str = "ok"
+    #: fault-retried steps this request absorbed (0 on a clean run)
+    retries: int = 0
 
     @property
     def tokens(self) -> int:
@@ -127,6 +138,8 @@ class RequestReport:
             "stall_minisa": self.stall_minisa,
             "stall_micro": self.stall_micro,
             "state_checksum": self.state_checksum,
+            "status": self.status,
+            "retries": self.retries,
         }
 
 
@@ -155,6 +168,10 @@ class SchedulerReport:
     decode_ticks: int = 0             # ticks that ran a decode phase
     decode_launches: int = 0          # backend kernel launches in decode
     kv: dict = dataclasses.field(default_factory=dict)   # KVPool stats
+    #: fault/recovery accounting ({} on a run with resilience off):
+    #: injected/recovered/skipped per kind, unrecovered, retries,
+    #: timed_out/failed request counts, breaker state, mesh degradations
+    resilience: dict = dataclasses.field(default_factory=dict)
 
     @property
     def total_tokens(self) -> int:
@@ -212,6 +229,14 @@ class SchedulerReport:
             "decode_segments": self.decode_segments,
             "decode_hbm_elided_bytes": self.decode_hbm_elided_bytes,
             "kv": dict(self.kv),
+            "resilience": dict(self.resilience),
+            "requests_ok": sum(1 for r in self.requests
+                               if r.status == "ok"),
+            "requests_timed_out": sum(1 for r in self.requests
+                                      if r.status == "timed_out"),
+            "requests_failed": sum(1 for r in self.requests
+                                   if r.status == "failed"),
+            "retries_total": sum(r.retries for r in self.requests),
             "cache_hit_rate": self.cache.get("hit_rate", 0.0),
             "cache_searches": self.cache.get("searches", 0),
             "cache_compiles": self.cache.get("compiles", 0),
@@ -287,9 +312,20 @@ class SchedulerReport:
             self.total_tokens, backend=self.backend)
         reg.counter("requests_total", "requests retired").inc(
             len(self.requests), backend=self.backend)
+        timed_out = sum(1 for r in self.requests
+                        if r.status == "timed_out")
+        if timed_out:
+            reg.counter("requests_timed_out_total",
+                        "requests retired past their deadline").inc(
+                            timed_out, backend=self.backend)
+        retries = sum(r.retries for r in self.requests)
+        if retries:
+            reg.counter("retries_total",
+                        "fault-retried request steps").inc(
+                            retries, backend=self.backend)
         summary = self.summary()
         reg.set_many({k: v for k, v in summary.items()
-                      if k not in ("kv",)}, prefix="sched_")
+                      if k not in ("kv", "resilience")}, prefix="sched_")
         reg.set_many(self.kv, prefix="kv_")
 
 
@@ -333,10 +369,13 @@ class KVPool:
                            np.float32)
             for name, (_, _, _, width) in specs.items()}
         self._free = list(range(self.n_pages - 1, -1, -1))
+        self._allocated: set[int] = set()
         self.allocated_pages = 0
         self.high_water_pages = 0
         self.evicted_pages = 0
         self.admit_stalls = 0
+        self.double_releases = 0
+        self.reserved_pages = 0       # held out by a fault spike, now
 
     @property
     def time_extent(self) -> int:
@@ -352,15 +391,38 @@ class KVPool:
         if len(self._free) < need:
             return None
         pages = [self._free.pop() for _ in range(need)]
+        self._allocated.update(pages)
         self.allocated_pages += need
         self.high_water_pages = max(self.high_water_pages,
                                     self.allocated_pages)
         return pages
 
     def release(self, pages: list[int]) -> None:
-        self._free.extend(pages)
-        self.allocated_pages -= len(pages)
-        self.evicted_pages += len(pages)
+        """Idempotent: only pages this pool currently has allocated go
+        back to the free list.  A double release (or a stale page id)
+        counts ``double_releases`` and is otherwise a no-op -- a page
+        can never re-enter ``_free`` twice and be handed to two live
+        requests."""
+        live = [p for p in pages if p in self._allocated]
+        self.double_releases += len(pages) - len(live)
+        self._allocated.difference_update(live)
+        self._free.extend(live)
+        self.allocated_pages -= len(live)
+        self.evicted_pages += len(live)
+
+    def reserve(self, n: int = 0) -> list[int]:
+        """Hold pages out of the free list (a fault-injected pressure
+        spike): ``n <= 0`` grabs every free page.  Reserved pages are
+        neither free nor allocated until :meth:`unreserve` returns
+        them."""
+        take = len(self._free) if n <= 0 else min(n, len(self._free))
+        held = [self._free.pop() for _ in range(take)]
+        self.reserved_pages += len(held)
+        return held
+
+    def unreserve(self, held: list[int]) -> None:
+        self._free.extend(held)
+        self.reserved_pages -= len(held)
 
     def stats(self) -> dict:
         return {
@@ -371,6 +433,8 @@ class KVPool:
             "high_water_pages": self.high_water_pages,
             "evicted_pages": self.evicted_pages,
             "admit_stalls": self.admit_stalls,
+            "double_releases": self.double_releases,
+            "reserved_pages": self.reserved_pages,
         }
 
 
@@ -434,6 +498,12 @@ class _Active:
     chunks_done: int = 0
     decoded: int = 0
     t_first: float = 0.0                # first decode token wall time
+    # fault-tolerance state (all inert on a clean run)
+    retries: int = 0                    # fault-retried steps, total
+    consec_faults: int = 0              # consecutive, reset on success
+    backoff_until: int = 0              # first tick allowed to run again
+    pending_faults: list = dataclasses.field(default_factory=list)
+    status: str = "ok"
 
     @property
     def prefill_done(self) -> bool:
@@ -499,7 +569,12 @@ class Scheduler:
                  use_fused: bool | None = None,
                  batch_decode: bool | None = None,
                  token_budget: int | None = None,
-                 kv_page_size: int = 4, kv_pages: int | None = None):
+                 kv_page_size: int = 4, kv_pages: int | None = None,
+                 faults: "FaultPlan | FaultInjector | None" = None,
+                 finite_check: bool | None = None,
+                 max_retries: int = 4,
+                 backoff_base: int = 1, backoff_cap: int = 8,
+                 breaker_threshold: int = 4, breaker_cooldown: int = 4):
         if prefill.cfg != decode.cfg:
             raise ValueError("prefill/decode executables must share one "
                              "FeatherConfig")
@@ -515,6 +590,24 @@ class Scheduler:
         self.backend = prefill.make_backend(backend)
         self.max_concurrent = max_concurrent
         self.seed = seed
+        # -- fault tolerance: entirely inert (no wrapper, no checks, no
+        # extra branches on the hot path) unless a fault plan / injector
+        # or an explicit finite_check opts in
+        if isinstance(faults, FaultPlan):
+            faults = FaultInjector(faults)
+        self.injector: FaultInjector | None = faults
+        self.finite_check = (finite_check if finite_check is not None
+                             else faults is not None)
+        self.resilient = self.injector is not None or self.finite_check
+        self.max_retries = max(1, max_retries)
+        self.backoff_base = max(1, backoff_base)
+        self.backoff_cap = max(self.backoff_base, backoff_cap)
+        self.breaker = (CircuitBreaker(breaker_threshold, breaker_cooldown)
+                        if self.resilient else None)
+        if self.injector is not None:
+            self.backend = self.injector.wrap(self.backend)
+        self._kv_spikes: list[tuple[int, list[int]]] = []
+        self._mesh_degraded = 0
         # Fused-segment fast path: chained segments execute as ONE kernel
         # launch (prefill and decode).  Defaults on for the compiled
         # backend (where per-launch overhead dominates); the interpreter
@@ -554,19 +647,28 @@ class Scheduler:
                                                   kinds=("weight",))
         self._pending: collections.deque[Request] = collections.deque()
         self._next_rid = 0
+        # serving state shared between the loop, snapshot() and resumed
+        # run() calls: in-flight work, retired reports (this process +
+        # restored from a snapshot), and the monotone tick clock
+        self._active: list[_Active] = []
+        self._done: list[RequestReport] = []
+        self._restored: list[RequestReport] = []
+        self._ticks = 0
 
     def submit(self, decode_steps: int, seed: int | None = None,
-               prompt_tokens: int | None = None) -> Request:
+               prompt_tokens: int | None = None,
+               deadline_s: float | None = None) -> Request:
         """Queue a request.  The default per-request seed derives from
         the scheduler seed and the rid alone, so a submission sequence
         reproduces exactly regardless of wall-clock or interleaving.
         ``prompt_tokens`` longer than one prefill pass are chunked
-        across ticks under the token budget."""
+        across ticks under the token budget; ``deadline_s`` bounds the
+        request's wall clock from submission (overdue -> ``timed_out``)."""
         if seed is None:
             seed = self.seed * 1_000_003 + self._next_rid
         req = Request(rid=self._next_rid, decode_steps=decode_steps,
                       seed=seed, prompt_tokens=prompt_tokens,
-                      t_submit=time.perf_counter())
+                      t_submit=time.perf_counter(), deadline_s=deadline_s)
         self._next_rid += 1
         self._pending.append(req)
         trace.instant("submit", ("request", req.rid),
@@ -582,7 +684,10 @@ class Scheduler:
 
     def _admit(self, req: Request) -> _Active | None:
         """Allocate KV pages and run the first prompt chunk; None when
-        the pool cannot hold another request (admission stall)."""
+        the pool cannot hold another request (admission stall).  A fault
+        on the first chunk (resilient runs only) backs the request off
+        in place -- it is admitted, pages held, chunk 0 retried on a
+        later tick."""
         pages = self.kv_pool.allocate()
         if pages is None:
             return None
@@ -591,7 +696,10 @@ class Scheduler:
         a = _Active(req=req, kv=PagedKV(self.kv_pool, pages), carry=None,
                     t_start=req.t_submit or time.perf_counter(),
                     prefill_chunks=self._chunks_for(req))
-        self._prefill_chunk(a)
+        try:
+            self._prefill_chunk(a)
+        except FaultError as e:
+            self._on_fault(a, e)
         return a
 
     def _prefill_chunk(self, a: _Active) -> None:
@@ -613,6 +721,10 @@ class Scheduler:
                         chunk=c, of=a.prefill_chunks):
             res = self.prefill.run(self.backend, tensors=env,
                                    fused=self.use_fused)
+        if self.finite_check and not check_finite(res.final):
+            # nothing committed yet: the chunk replays identically
+            raise PoisonedOutputError(
+                f"non-finite prefill output (rid {a.req.rid} chunk {c})")
         if c == 0:
             a.kv.seed(self.decode.make_tensors(a.req.seed,
                                                kinds=("dynamic",)))
@@ -628,6 +740,8 @@ class Scheduler:
         return env
 
     def _after_decode(self, a: _Active, final: np.ndarray) -> None:
+        if self.resilient:
+            self._note_success(a)
         a.decoded += 1
         a.carry = final
         if a.t_first == 0.0:
@@ -644,6 +758,11 @@ class Scheduler:
             res = self.decode.run(self.backend,
                                   tensors=self._decode_env(a),
                                   fused=self.use_fused)
+        if self.finite_check and not check_finite(res.final):
+            # carry/KV untouched: the retry replays from identical state
+            raise PoisonedOutputError(
+                f"non-finite decode output (rid {a.req.rid} "
+                f"step {a.decoded})")
         self._after_decode(a, res.final)
 
     def _decode_batch(self, batch: list[_Active]) -> None:
@@ -651,7 +770,10 @@ class Scheduler:
         stacked along M, one backend launch per M-polymorphic segment
         (``ModelExecutable.run_batch``).  Under tracing, the collective
         launch window is recorded onto every participating request's
-        swimlane (one measurement, several lanes)."""
+        swimlane (one measurement, several lanes).  With the finite
+        guard on, each request's row is checked before its commit:
+        poisoned rows fault (and retry), clean rows commit -- one bad
+        launch cannot wedge the whole batch."""
         t0 = time.perf_counter() if trace.enabled else 0.0
         finals = self.decode.run_batch(
             self.backend, [self._decode_env(a) for a in batch],
@@ -663,7 +785,12 @@ class Scheduler:
                              t0, t1, step=a.decoded, batched=True,
                              batch=len(batch))
         for a, final in zip(batch, finals):
-            self._after_decode(a, final)
+            if self.finite_check and not check_finite(final):
+                self._on_fault(a, PoisonedOutputError(
+                    f"non-finite batched decode output "
+                    f"(rid {a.req.rid} step {a.decoded})"))
+            else:
+                self._after_decode(a, final)
 
     def _report(self, a: _Active, pre: dict, dec: dict) -> RequestReport:
         n = a.decoded
@@ -689,49 +816,264 @@ class Scheduler:
             state_checksum=_state_checksum(a.kv.gather(), a.carry),
             ttft_s=(a.t_first - a.req.t_submit
                     if a.t_first and a.req.t_submit else 0.0),
+            status=a.status,
+            retries=a.retries,
         )
 
+    # -- fault tolerance ------------------------------------------------------
+    def _on_fault(self, a: _Active, err: FaultError) -> None:
+        """One failed step: nothing was committed (carry and KV are
+        untouched), so the retry replays from bit-identical state.
+        Capped exponential backoff in ticks; the breaker counts the
+        failure; past ``max_retries`` consecutive faults the request
+        retires as ``failed`` instead of wedging the loop."""
+        tick = self._ticks
+        kind = ("launch_nan" if isinstance(err, PoisonedOutputError)
+                else "launch_transient")
+        a.retries += 1
+        a.consec_faults += 1
+        a.pending_faults.append(kind)
+        delay = min(self.backoff_cap,
+                    self.backoff_base * (1 << (a.consec_faults - 1)))
+        a.backoff_until = tick + delay
+        if self.breaker is not None:
+            self.breaker.record_failure(tick)
+        trace.instant("fault_retry", ("request", a.req.rid), kind=kind,
+                      retry=a.retries, backoff_ticks=delay, tick=tick)
+        if a.consec_faults > self.max_retries:
+            a.status = "failed"
+
+    def _note_success(self, a: _Active) -> None:
+        """A step committed: the request's pending faults are recovered
+        (counted against the injector's ledger), its backoff resets, and
+        the breaker sees the success."""
+        if a.pending_faults:
+            if self.injector is not None:
+                for kind in a.pending_faults:
+                    self.injector.mark_recovered(kind, rid=a.req.rid)
+            a.pending_faults.clear()
+        a.consec_faults = 0
+        a.backoff_until = 0
+        if self.breaker is not None and (
+                self.breaker.failures or self.breaker.state != "closed"):
+            self.breaker.record_success()
+
+    def _degrade_mesh(self, site: int) -> None:
+        """Array ``site`` went unhealthy: both executables re-lower onto
+        the surviving mesh in place (a cache-miss re-lower through
+        ``shard_program`` -- plan/lowered tiers all hit).  In-flight
+        requests keep their KV state; only the *lowering* changed, and
+        quantised recurrence feedback keeps the state trajectory
+        bit-identical to the undegraded run."""
+        mesh = self.prefill.mesh.degraded(1)
+        self.injector.mark_injected("array_down", site=site,
+                                    n_arrays=mesh.n_arrays)
+        with trace.span("mesh_failover", ("fault", "array_down"),
+                        site=site, n_arrays=mesh.n_arrays):
+            self.prefill.remesh(mesh)
+            self.decode.remesh(mesh)
+        self._mesh_degraded += 1
+        self.injector.mark_recovered("array_down", n_arrays=mesh.n_arrays)
+
+    def _apply_fault_event(self, ev) -> None:
+        """Dispatch one due scheduler-level fault event."""
+        tick = self._ticks
+        if ev.kind == "array_down":
+            if self.prefill.mesh is None:
+                self.injector.mark_skipped("array_down")
+            else:
+                self._degrade_mesh(ev.site)
+        elif ev.kind == "kv_exhaust":
+            held = self.kv_pool.reserve(ev.pages)
+            self._kv_spikes.append((tick + ev.duration, held))
+            self.injector.mark_injected("kv_exhaust", pages=len(held),
+                                        until=tick + ev.duration)
+        elif ev.kind == "cache_corrupt":
+            cache = self.prefill.cache
+            if not cache.path:
+                self.injector.mark_skipped("cache_corrupt")
+                return
+            cache.save()
+            if not self.injector.corrupt_cache_file(cache.path):
+                self.injector.mark_skipped("cache_corrupt")
+                return
+            self.injector.mark_injected("cache_corrupt")
+            before = cache.stats.disk_corrupt
+            cache.load(cache.path)   # quarantines, never raises
+            if cache.stats.disk_corrupt > before:
+                self.injector.mark_recovered(
+                    "cache_corrupt",
+                    quarantined=cache.stats.disk_corrupt - before)
+
+    def _release_due_spikes(self, drain: bool = False) -> None:
+        """Expired pressure spikes hand their pages back (``drain``
+        releases everything -- the loop finished under pressure, so the
+        pool is whole again by construction)."""
+        tick = self._ticks
+        for until, held in [s for s in self._kv_spikes
+                            if drain or s[0] <= tick]:
+            self.kv_pool.unreserve(held)
+            self._kv_spikes.remove((until, held))
+            self.injector.mark_recovered("kv_exhaust", pages=len(held))
+
+    def _overdue(self, a: _Active) -> bool:
+        d = a.req.deadline_s
+        return (d is not None
+                and time.perf_counter() - a.t_start > d)
+
+    # -- snapshot / resume ----------------------------------------------------
+    def snapshot(self) -> dict:
+        """The deterministic request state a resumed process needs:
+        every not-yet-finished request (pending queue + in-flight, which
+        replay from their seeds) and every retired report.  Pair with
+        ``dist.elastic.save_serving_snapshot`` for the atomic file."""
+        pending = [dataclasses.asdict(a.req) for a in self._active]
+        pending += [dataclasses.asdict(r) for r in self._pending]
+        pending.sort(key=lambda r: r["rid"])
+        return {"version": 1, "seed": self.seed,
+                "next_rid": self._next_rid,
+                "pending": pending,
+                "done": [dataclasses.asdict(r)
+                         for r in self._restored + self._done]}
+
+    def restore(self, snap: dict) -> int:
+        """Adopt a snapshot into a fresh scheduler: retired reports are
+        kept verbatim, unfinished requests re-queue (same rid, same
+        seed -- the replayed trajectory is bit-identical, so the resumed
+        run's checksums match an uninterrupted one).  Returns the number
+        of requests re-queued."""
+        if snap.get("version") != 1:
+            raise ValueError(f"unknown snapshot version "
+                             f"{snap.get('version')!r}")
+        if snap.get("seed") != self.seed:
+            raise ValueError("snapshot seed mismatch: replayed requests "
+                             "would not reproduce")
+        self._next_rid = max(self._next_rid, int(snap["next_rid"]))
+        now = time.perf_counter()
+        for r in snap["pending"]:
+            self._pending.append(dataclasses.replace(
+                Request(**r), t_submit=now))
+        self._restored = [RequestReport(**d) for d in snap["done"]]
+        return len(snap["pending"])
+
     # -- the serving loop -----------------------------------------------------
-    def run(self) -> SchedulerReport:
+    def run(self, max_ticks: int | None = None) -> SchedulerReport:
         """Serve every submitted request to completion.  The loop runs
         under a ``scheduler.run`` span; on return the report's totals
         (plus the cache's per-tier stats) are published into the shared
-        metrics registry."""
+        metrics registry.
+
+        ``max_ticks`` stops the loop early (chaos-kill simulation / an
+        external drain signal): unfinished requests stay in the
+        scheduler's state for :meth:`snapshot`, and the partial report
+        covers only the retired ones."""
         with trace.span("scheduler.run", backend=self.backend_name,
                         batch_decode=self.batch_decode,
                         max_concurrent=self.max_concurrent):
-            report = self._run_loop()
+            report = self._run_loop(max_ticks)
         report.publish_metrics()
         self.prefill.cache.publish_metrics()
         return report
 
-    def _run_loop(self) -> SchedulerReport:
+    def _retire(self, a: _Active, per_bytes: list, per_cycles: list,
+                done: list) -> None:
+        """Retire one request (complete, timed out or failed): report,
+        trace, evict its KV pages, fold its per-array accounting."""
+        self._active.remove(a)
+        pre = self.prefill.perf_stats()
+        dec = self.decode.perf_stats()
+        rep = self._report(a, pre, dec)
+        done.append(rep)
+        trace.instant("retire", ("request", a.req.rid),
+                      decoded=a.decoded, status=a.status)
+        if trace.enabled:
+            # the request's whole lifetime as one backdrop
+            # span on its swimlane (arrival -> retire)
+            trace.record("request", ("request", a.req.rid),
+                         a.t_start, time.perf_counter(),
+                         rid=a.req.rid, decoded=a.decoded,
+                         checksum=rep.state_checksum)
+        a.kv.release()   # checksum gathered; evict the pages
+        c, n = a.chunks_done, a.decoded
+        # a degraded mesh shrinks the executables' per-array lists
+        # mid-run; fold what both sides still account for
+        n_fold = min(len(per_bytes), len(pre["per_array_minisa_bytes"]),
+                     len(dec["per_array_minisa_bytes"]))
+        for i in range(n_fold):
+            per_bytes[i] += (
+                c * pre["per_array_minisa_bytes"][i]
+                + n * dec["per_array_minisa_bytes"][i])
+            per_cycles[i] += (
+                c * pre["per_array_cycles_minisa"][i]
+                + n * dec["per_array_cycles_minisa"][i])
+
+    def _resilience_summary(self, done: list) -> dict:
+        if not self.resilient:
+            return {}
+        res = {
+            "finite_check": self.finite_check,
+            "max_retries": self.max_retries,
+            "retries_total": sum(r.retries for r in done),
+            "timed_out": sum(1 for r in done if r.status == "timed_out"),
+            "failed": sum(1 for r in done if r.status == "failed"),
+            "breaker": self.breaker.stats(),
+            "mesh_degraded": self._mesh_degraded,
+            "kv_spikes_live": len(self._kv_spikes),
+        }
+        if self.injector is not None:
+            res.update(self.injector.summary())
+        return res
+
+    def _run_loop(self, max_ticks: int | None = None) -> SchedulerReport:
         t0 = time.perf_counter()
         n_arrays = self.prefill.n_arrays
         per_bytes = [0.0] * n_arrays
         per_cycles = [0.0] * n_arrays
-        active: list[_Active] = []
-        done: list[RequestReport] = []
-        ticks = 0
+        active = self._active
+        done = self._done
+        ran = 0
         decode_wall = prefill_wall = 0.0
         decode_ticks = decode_steps_total = decode_launches = 0
         chunk_tokens = max(1, self.prefill.tokens or 1)
-        while self._pending or active:
-            ticks += 1
+        while (self._pending or active) and (max_ticks is None
+                                             or ran < max_ticks):
+            ran += 1
+            self._ticks += 1
+            ticks = self._ticks
+            # 0) fault plan: due scheduler-level events apply first, and
+            #    expired KV spikes hand their pages back
+            if self.injector is not None:
+                self._release_due_spikes()
+                for ev in self.injector.begin_tick(ticks):
+                    self._apply_fault_event(ev)
             # 1) decode phase: the whole ready batch advances one step
             ready = [a for a in active
                      if a.prefill_done and a.decoded < a.req.decode_steps]
+            if self.resilient:
+                gate = self.breaker.allow(ticks)
+                ready = [a for a in ready
+                         if gate and a.status == "ok"
+                         and ticks >= a.backoff_until]
             if ready:
                 td = time.perf_counter()
                 l0 = getattr(self.backend, "n_launches", 0)
                 with trace.span("decode_tick", tick=ticks,
                                 n_ready=len(ready),
                                 batched=self.batch_decode) as sp:
-                    if self.batch_decode:
-                        self._decode_batch(ready)
-                    else:
+                    try:
+                        if self.batch_decode:
+                            self._decode_batch(ready)
+                        else:
+                            for a in ready:
+                                try:
+                                    self._decode_step(a)
+                                except FaultError as e:
+                                    self._on_fault(a, e)
+                    except FaultError as e:
+                        # batched transient: the whole batch missed its
+                        # step (no state was committed anywhere)
                         for a in ready:
-                            self._decode_step(a)
+                            self._on_fault(a, e)
                     if sp:
                         sp.set(launches=getattr(self.backend,
                                                 "n_launches", 0) - l0)
@@ -740,32 +1082,20 @@ class Scheduler:
                                     - l0)
                 decode_ticks += 1
                 decode_steps_total += len(ready)
-            # 2) retire finished requests mid-batch, evicting their KV
+            # 2) retire finished requests mid-batch, evicting their KV;
+            #    overdue requests retire as timed_out, and requests past
+            #    their retry budget as failed -- neither wedges the loop
             for a in list(active):
-                if a.prefill_done and a.decoded >= a.req.decode_steps:
-                    active.remove(a)
-                    pre = self.prefill.perf_stats()
-                    dec = self.decode.perf_stats()
-                    rep = self._report(a, pre, dec)
-                    done.append(rep)
-                    trace.instant("retire", ("request", a.req.rid),
-                                  decoded=a.decoded)
-                    if trace.enabled:
-                        # the request's whole lifetime as one backdrop
-                        # span on its swimlane (arrival -> retire)
-                        trace.record("request", ("request", a.req.rid),
-                                     a.t_start, time.perf_counter(),
-                                     rid=a.req.rid, decoded=a.decoded,
-                                     checksum=rep.state_checksum)
-                    a.kv.release()   # checksum gathered; evict the pages
-                    c, n = a.chunks_done, a.decoded
-                    for i in range(n_arrays):
-                        per_bytes[i] += (
-                            c * pre["per_array_minisa_bytes"][i]
-                            + n * dec["per_array_minisa_bytes"][i])
-                        per_cycles[i] += (
-                            c * pre["per_array_cycles_minisa"][i]
-                            + n * dec["per_array_cycles_minisa"][i])
+                finished = (a.prefill_done
+                            and a.decoded >= a.req.decode_steps)
+                if not finished:
+                    if a.status == "ok" and self._overdue(a):
+                        a.status = "timed_out"
+                        trace.instant("timeout", ("request", a.req.rid),
+                                      decoded=a.decoded)
+                    if a.status == "ok":
+                        continue
+                self._retire(a, per_bytes, per_cycles, done)
             # 3) prefill phase under the per-tick token budget: continue
             #    admitted prompts first (oldest-first), then admit new
             #    requests into free slots.  When nothing decoded and
@@ -775,16 +1105,25 @@ class Scheduler:
             budget = (self.token_budget if self.token_budget is not None
                       else float("inf"))
             progressed = False
+            gate = (not self.resilient) or self.breaker.allow(ticks)
             with trace.span("prefill_phase", tick=ticks,
                             n_pending=len(self._pending)):
                 for a in active:
-                    while (not a.prefill_done
+                    if self.resilient and (a.status != "ok"
+                                           or ticks < a.backoff_until):
+                        continue
+                    while (gate and not a.prefill_done
                            and (budget >= chunk_tokens
                                 or (not ready and not progressed))):
-                        self._prefill_chunk(a)
+                        try:
+                            self._prefill_chunk(a)
+                        except FaultError as e:
+                            self._on_fault(a, e)
+                            break
                         budget -= chunk_tokens
                         progressed = True
-                while self._pending and len(active) < self.max_concurrent:
+                while (gate and self._pending
+                       and len(active) < self.max_concurrent):
                     if budget < chunk_tokens and (ready or progressed):
                         break
                     a = self._admit(self._pending[0])
@@ -796,14 +1135,16 @@ class Scheduler:
                     budget -= chunk_tokens
                     progressed = True
             prefill_wall += time.perf_counter() - tp
-        done.sort(key=lambda r: r.rid)
+        if self.injector is not None and not (self._pending or active):
+            self._release_due_spikes(drain=True)
+        done = sorted(self._restored + done, key=lambda r: r.rid)
         fusion = self.decode.fusion_stats()
         return SchedulerReport(
             backend=self.backend_name, requests=done,
-            wall_s=time.perf_counter() - t0, ticks=ticks,
+            wall_s=time.perf_counter() - t0, ticks=self._ticks,
             max_concurrent=self.max_concurrent,
             cache=self.prefill.cache.stats.summary(),
-            n_arrays=n_arrays,
+            n_arrays=self.prefill.n_arrays,
             per_array_minisa_bytes=per_bytes,
             per_array_cycles=per_cycles,
             decode_fused=self.use_fused,
@@ -817,4 +1158,5 @@ class Scheduler:
             decode_steps_total=decode_steps_total,
             decode_ticks=decode_ticks,
             decode_launches=decode_launches,
-            kv=self.kv_pool.stats())
+            kv=self.kv_pool.stats(),
+            resilience=self._resilience_summary(done))

@@ -1,0 +1,422 @@
+"""Fault injection + tolerance: seeded chaos runs recover every injected
+fault and finish with state checksums bit-identical to the fault-free
+run (both backends, flat and meshed); the checksummed disk cache
+quarantines corrupt entries instead of raising; KV double-release is
+idempotent; degraded-mesh re-lowering conserves traffic and matches the
+einsum oracle; a chaos-killed serve resumes from an elastic snapshot
+with unchanged checksums; and with faults off the resilience layer is
+entirely inert."""
+
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro import backends
+from repro.configs.feather import feather_config
+from repro.core import mapper
+from repro.dist import ArrayMesh
+from repro.dist.elastic import (load_serving_snapshot,
+                                save_serving_snapshot)
+from repro.faults import (FAULT_KINDS, CircuitBreaker, FaultEvent,
+                          FaultInjector, FaultPlan, FaultyBackend,
+                          TransientLaunchError, check_finite)
+from repro.obs.export import fault_events, write_fault_events
+from repro.obs.trace import trace
+from repro.runtime import ModelExecutable, ProgramCache, Scheduler
+from repro.runtime.scheduler import KVPool, PagedKV
+
+CFG = feather_config(4, 16)
+
+
+def _scheduler(cache, backend, *, mesh=None, seed=7, faults=None, **kw):
+    prefill = ModelExecutable.for_cell("gemma-7b", "prefill_tiny", CFG,
+                                       cache=cache, mesh=mesh)
+    decode = ModelExecutable.for_cell("gemma-7b", "decode_tiny", CFG,
+                                      cache=cache, mesh=mesh)
+    return Scheduler(prefill, decode, backend=backend, max_concurrent=2,
+                     seed=seed, faults=faults, **kw)
+
+
+def _serve(cache, backend, *, mesh=None, seed=7, faults=None,
+           n_requests=3, decode_steps=4, **kw):
+    sched = _scheduler(cache, backend, mesh=mesh, seed=seed,
+                       faults=faults, **kw)
+    for _ in range(n_requests):
+        sched.submit(decode_steps=decode_steps)
+    return sched.run()
+
+
+def _checksums(report):
+    return [r.state_checksum for r in report.requests]
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: seeded determinism + validation
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_from_seed_deterministic():
+    a = FaultPlan.from_seed(3)
+    b = FaultPlan.from_seed(3)
+    assert a.events == b.events and a.summary() == b.summary()
+    assert a.events != FaultPlan.from_seed(4).events
+    assert all(e.kind in FAULT_KINDS for e in a.events)
+    # events are replayed in tick order and due() slices one tick
+    ticks = [e.at_tick for e in a.events]
+    assert ticks == sorted(ticks)
+    for t in set(ticks):
+        assert all(e.at_tick == t for e in a.due(t))
+
+
+def test_fault_plan_standard_covers_every_kind():
+    plan = FaultPlan.standard(0, n_arrays=2)
+    assert all(plan.counts()[k] >= 1 for k in FAULT_KINDS)
+    flat = FaultPlan.standard(0, n_arrays=1)
+    assert flat.counts()["array_down"] == 0
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(kind="meteor_strike", at_tick=1)
+    with pytest.raises(ValueError):
+        FaultEvent(kind="launch_nan", at_tick=0)
+    with pytest.raises(ValueError):
+        FaultEvent(kind="launch_nan", at_tick=1, duration=0)
+
+
+# ---------------------------------------------------------------------------
+# Chaos acceptance: every fault kind injected, every one recovered, and
+# the surviving state checksums are bit-identical to the fault-free run
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def chaos_cache():
+    return ProgramCache()
+
+
+@pytest.mark.parametrize("backend", ["interpreter", "pallas"])
+def test_chaos_run_matches_fault_free(chaos_cache, backend, tmp_path):
+    cache = ProgramCache(path=tmp_path / "cache.bin")
+    # share the warm in-memory tiers so the test only pays one search
+    cache._plans.update(chaos_cache._plans)
+    baseline = _serve(cache, backend)
+    injector = FaultInjector(FaultPlan.standard(0, n_arrays=1))
+    chaotic = _serve(cache, backend, faults=injector)
+    assert set(injector.injected) == {"launch_transient", "launch_nan",
+                                      "kv_exhaust", "cache_corrupt"}
+    assert injector.unrecovered() == 0
+    assert all(r.status == "ok" for r in chaotic.requests)
+    assert any(r.retries > 0 for r in chaotic.requests)
+    # no-commit-on-fault: replayed steps reproduce the exact state
+    assert _checksums(chaotic) == _checksums(baseline)
+    res = chaotic.summary()["resilience"]
+    assert res["unrecovered"] == 0 and res["retries_total"] > 0
+    assert baseline.summary()["resilience"] == {}
+    chaos_cache._plans.update(cache._plans)
+
+
+@pytest.mark.parametrize("backend", ["interpreter", "pallas"])
+def test_chaos_mesh_failover_matches_fault_free(chaos_cache, backend):
+    """array_down degrades the mesh mid-run; the re-lowered stream keeps
+    serving and the request state trajectory is unchanged."""
+    baseline = _serve(chaos_cache, backend, mesh=ArrayMesh(2))
+    injector = FaultInjector(FaultPlan.standard(0, n_arrays=2))
+    chaotic = _serve(chaos_cache, backend, mesh=ArrayMesh(2),
+                     faults=injector)
+    assert injector.injected.get("array_down") == 1
+    assert injector.unrecovered() == 0
+    assert chaotic.n_arrays == 1          # degraded 2 -> 1
+    assert baseline.n_arrays == 2
+    assert chaotic.summary()["resilience"]["mesh_degraded"] == 1
+    assert all(r.status == "ok" for r in chaotic.requests)
+    assert _checksums(chaotic) == _checksums(baseline)
+
+
+def test_chaos_emits_fault_swimlane_and_artifact(chaos_cache, tmp_path):
+    trace.clear().enable()
+    try:
+        _serve(chaos_cache, "interpreter",
+               faults=FaultPlan.standard(0, n_arrays=1), n_requests=2)
+        events = fault_events()
+    finally:
+        trace.disable()
+    names = {e["name"] for e in events}
+    assert {"fault", "recovery"} <= names
+    kinds = {e["kind"] for e in events}
+    assert {"launch_transient", "launch_nan", "kv_exhaust"} <= kinds
+    path = write_fault_events(tmp_path / "faults.json")
+    import json
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["fault_events"] == events and len(events) > 0
+
+
+# ---------------------------------------------------------------------------
+# Retry / deadline / breaker state machine
+# ---------------------------------------------------------------------------
+
+def test_request_fails_after_max_retries(chaos_cache):
+    """A launch window outlasting the retry budget turns the request
+    ``failed`` (never an unhandled exception, never an infinite loop)."""
+    plan = FaultPlan(events=(
+        FaultEvent(kind="launch_transient", at_tick=1, duration=400),))
+    rep = _serve(chaos_cache, "interpreter", faults=plan, n_requests=2,
+                 max_retries=2, backoff_cap=1, breaker_cooldown=1)
+    assert all(r.status == "failed" for r in rep.requests)
+    assert all(r.retries >= 3 for r in rep.requests)
+    res = rep.summary()["resilience"]
+    assert res["failed"] == 2
+    assert res["breaker"]["opens"] >= 1
+
+
+def test_deadline_times_out(chaos_cache):
+    sched = _scheduler(chaos_cache, "interpreter", finite_check=True)
+    sched.submit(decode_steps=64, deadline_s=0.0)
+    sched.submit(decode_steps=2)
+    rep = sched.run()
+    by_rid = {r.rid: r for r in rep.requests}
+    assert by_rid[0].status == "timed_out"
+    assert by_rid[1].status == "ok" and by_rid[1].state_checksum
+    assert rep.summary()["resilience"]["timed_out"] == 1
+
+
+def test_circuit_breaker_state_machine():
+    br = CircuitBreaker(threshold=2, cooldown=3)
+    assert br.allow(0) and br.state == "closed"
+    br.record_failure(0)
+    assert br.allow(1)                     # one strike: still closed
+    br.record_failure(1)
+    assert br.state == "open" and br.opens == 1
+    assert not br.allow(2)                 # cooling
+    assert br.allow(4) and br.state == "half_open"
+    br.record_failure(4)                   # probe fails -> re-open
+    assert br.state == "open" and not br.allow(5)
+    assert br.allow(7)
+    br.record_success()
+    assert br.state == "closed" and br.failures == 0
+
+
+def test_faulty_backend_guard_and_passthrough():
+    class Dummy:
+        n_launches = 5
+
+        def run_program(self, program, tensors=None):
+            return {"O": np.ones((2, 2), np.float32)}
+
+    inj = FaultInjector(FaultPlan(events=(
+        FaultEvent(kind="launch_transient", at_tick=1),
+        FaultEvent(kind="launch_nan", at_tick=2))))
+    fb = inj.wrap(Dummy())
+    assert isinstance(fb, FaultyBackend) and fb.n_launches == 5
+
+    class P:
+        out_name = "O"
+    inj.begin_tick(1)
+    with pytest.raises(TransientLaunchError):
+        fb.run_program(P())
+    inj.begin_tick(2)
+    out = fb.run_program(P())["O"]
+    assert not check_finite(out)           # NaN-poisoned copy
+    inj.begin_tick(3)
+    assert check_finite(fb.run_program(P())["O"])
+    assert inj.injected == {"launch_transient": 1, "launch_nan": 1}
+
+
+def test_check_finite():
+    assert check_finite(np.zeros(3))
+    assert not check_finite(np.array([1.0, np.nan]))
+    assert not check_finite(np.array([np.inf]))
+
+
+# ---------------------------------------------------------------------------
+# Checksummed disk cache: corruption quarantines, never raises mid-serve
+# ---------------------------------------------------------------------------
+
+def _saved_cache(tmp_path):
+    path = str(tmp_path / "cache.bin")
+    cache = ProgramCache(path=path)
+    for m in (8, 12):
+        cache.plan(mapper.Gemm(m=m, k=8, n=8), CFG)
+    cache.save()
+    return path, len(cache._plans)
+
+
+def test_corrupt_entry_quarantined_not_raised(tmp_path):
+    path, n_entries = _saved_cache(tmp_path)
+    inj = FaultInjector(FaultPlan(events=(
+        FaultEvent(kind="cache_corrupt", at_tick=1),), seed=5))
+    assert inj.corrupt_cache_file(path)
+    fresh = ProgramCache(path=path)        # auto-loads; must not raise
+    assert fresh.stats.disk_corrupt == 1
+    assert fresh.stats.loaded_from_disk == n_entries - 1
+    qdir = fresh.quarantine_dir(path)
+    assert os.path.isdir(qdir) and len(os.listdir(qdir)) == 1
+    # the surviving entries still serve
+    assert len(fresh._plans) == n_entries - 1
+
+
+def test_torn_payload_quarantined_not_raised(tmp_path):
+    path, _ = _saved_cache(tmp_path)
+    with open(path, "rb") as f:
+        data = f.read()
+    with open(path, "wb") as f:
+        f.write(data[:len(data) // 2])     # torn write shape
+    fresh = ProgramCache(path=path)        # cold start, no raise
+    assert fresh.stats.loaded_from_disk == 0
+    assert fresh.stats.disk_corrupt == 1
+    assert len(fresh._plans) == 0
+    assert os.path.isdir(fresh.quarantine_dir(path))
+
+
+def test_stale_layout_still_raises(tmp_path):
+    """Version/schema mismatches are *format* errors (a deliberate
+    rejection), not corruption -- they keep raising ValueError."""
+    path, _ = _saved_cache(tmp_path)
+    with open(path, "rb") as f:
+        payload = pickle.load(f)
+    for mutate in (lambda p: p.__setitem__("version", 1),
+                   lambda p: p["schema"].__setitem__("plans", 99)):
+        bad = pickle.loads(pickle.dumps(payload))
+        mutate(bad)
+        with open(path, "wb") as f:
+            pickle.dump(bad, f)
+        with pytest.raises(ValueError):
+            ProgramCache(path=path)        # auto-load rejects the file
+
+
+def test_save_is_atomic_no_temp_litter(tmp_path):
+    path, _ = _saved_cache(tmp_path)
+    assert [p for p in os.listdir(tmp_path) if p.endswith(".tmp")] == []
+    # a second save atomically replaces, never appends
+    cache = ProgramCache(path=path)
+    cache.save()
+    assert ProgramCache(path=path).stats.loaded_from_disk > 0
+
+
+# ---------------------------------------------------------------------------
+# KV pool: double release + exhaustion reserve/unreserve
+# ---------------------------------------------------------------------------
+
+def _pool(pages=8):
+    # one dynamic tensor: shape (8, 4), time axis 0, 8 slots, width 4
+    return KVPool({"K": ((8, 4), 0, 8, 4)}, 4, pages)
+
+
+def test_kv_double_release_is_idempotent():
+    pool = _pool()
+    pages = pool.allocate()
+    n_free = len(pool._free)
+    pool.release(pages)
+    assert len(pool._free) == n_free + len(pages)
+    pool.release(pages)                    # regression: double release
+    assert len(pool._free) == n_free + len(pages)
+    assert pool.stats()["double_releases"] == len(pages)
+    # freed pages can be re-allocated exactly once
+    again = pool.allocate()
+    assert sorted(again) == sorted(pages)
+
+
+def test_paged_kv_release_idempotent():
+    pool = _pool()
+    kv = PagedKV(pool, pool.allocate())
+    free0 = len(pool._free)
+    kv.release()
+    kv.release()
+    assert len(pool._free) == free0 + 2
+    assert pool.stats()["double_releases"] == 0
+
+
+def test_kv_reserve_and_unreserve():
+    pool = _pool()
+    held = pool.reserve()                  # n<=0: grab everything free
+    assert pool.allocate() is None         # exhausted
+    assert pool.stats()["reserved_pages"] == len(held)
+    pool.unreserve(held)
+    assert pool.allocate() is not None
+    assert pool.stats()["reserved_pages"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Degraded-mesh property: re-lowering onto fewer arrays conserves MINISA
+# traffic and matches the einsum oracle on both backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_from,n_down", [(4, 1), (4, 2), (2, 1)])
+@pytest.mark.parametrize("seed", range(3))
+def test_degraded_mesh_conserves_traffic_and_matches_oracle(
+        seed, n_from, n_down):
+    from repro.core import program as programlib
+    rng = np.random.default_rng(100 * n_from + 10 * n_down + seed)
+    g = mapper.Gemm(m=int(rng.integers(5, 40)),
+                    k=int(rng.integers(5, 40)),
+                    n=int(rng.integers(5, 40)))
+    prog = mapper.search(g, CFG).program
+    t = {"I": rng.standard_normal((g.m, g.k)).astype(np.float32),
+         "W": rng.standard_normal((g.k, g.n)).astype(np.float32)}
+    degraded = ArrayMesh(n_from).degraded(n_down)
+    assert degraded.n_arrays == n_from - n_down
+    for mesh in (ArrayMesh(n_from), degraded):
+        sh = programlib.shard_program(prog, mesh)
+        per = sh.per_array_minisa_bytes()
+        assert len(per) == mesh.n_arrays
+        assert sum(per) == sh.minisa_bytes()
+        backends.cross_check(prog, t, mesh=mesh)
+
+
+def test_mesh_degraded_floors_at_one():
+    assert ArrayMesh(2).degraded(1).n_arrays == 1
+    assert ArrayMesh(2).degraded(5).n_arrays == 1
+    assert ArrayMesh(4).degraded(0).n_arrays == 4
+
+
+# ---------------------------------------------------------------------------
+# Elastic snapshot / resume: a chaos-killed serve finishes identically
+# ---------------------------------------------------------------------------
+
+def test_snapshot_resume_matches_uninterrupted(chaos_cache, tmp_path):
+    full = _serve(chaos_cache, "interpreter", n_requests=4)
+    # "crash" after two ticks, persist, resume in a fresh scheduler
+    first = _scheduler(chaos_cache, "interpreter")
+    for _ in range(4):
+        first.submit(decode_steps=4)
+    first.run(max_ticks=2)
+    snap_path = tmp_path / "serve.snap"
+    save_serving_snapshot(snap_path, first.snapshot())
+    assert [p for p in os.listdir(tmp_path) if p.endswith(".tmp")] == []
+    snap = load_serving_snapshot(snap_path)
+    assert snap is not None
+    resumed = _scheduler(chaos_cache, "interpreter")
+    assert resumed.restore(snap) > 0
+    rep = resumed.run()
+    assert len(rep.requests) == 4
+    assert _checksums(rep) == _checksums(full)
+
+
+def test_snapshot_restore_validates(chaos_cache, tmp_path):
+    sched = _scheduler(chaos_cache, "interpreter")
+    sched.submit(decode_steps=2)
+    snap = sched.snapshot()
+    other = _scheduler(chaos_cache, "interpreter", seed=99)
+    with pytest.raises(ValueError, match="seed"):
+        other.restore(snap)
+    with pytest.raises(ValueError, match="version"):
+        _scheduler(chaos_cache, "interpreter").restore(
+            {**snap, "version": 42})
+    assert load_serving_snapshot(tmp_path / "missing.snap") is None
+
+
+# ---------------------------------------------------------------------------
+# Faults off: the tolerance layer is inert
+# ---------------------------------------------------------------------------
+
+def test_no_faults_means_no_wrapper_no_resilience(chaos_cache):
+    sched = _scheduler(chaos_cache, "interpreter")
+    assert sched.injector is None and not sched.resilient
+    assert sched.breaker is None
+    assert not isinstance(sched.backend, FaultyBackend)
+    sched.submit(decode_steps=2)
+    rep = sched.run()
+    assert rep.resilience == {}
+    assert rep.summary()["resilience"] == {}
+    assert all(r.status == "ok" and r.retries == 0 for r in rep.requests)
